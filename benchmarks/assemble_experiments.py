@@ -1,0 +1,45 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from
+experiments/dryrun/*.json (idempotent: replaces the marker block)."""
+
+import json
+import pathlib
+import re
+
+from benchmarks.roofline import markdown_table
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def multi_pod_summary() -> str:
+    recs = []
+    for p in sorted((ROOT / "experiments/dryrun").glob("*__multi.json")):
+        recs.append(json.loads(p.read_text()))
+    ok = sum(r.get("status") == "ok" for r in recs)
+    sk = sum(r.get("status") == "skipped" for r in recs)
+    er = [r for r in recs if r.get("status") == "error"]
+    lines = [f"Multi-pod (2x16x16 = 512 chips) pass: "
+             f"**{ok} compiled ok, {sk} skipped by design, "
+             f"{len(er)} errors** out of {len(recs)} cells."]
+    for r in er:
+        lines.append(f"  * ERROR {r['arch']} x {r['shape']}: "
+                     f"{r.get('error', '')[:200]}")
+    return "\n".join(lines)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    table = markdown_table("single")
+    block = ("<!-- ROOFLINE_TABLE -->\n\n" + table + "\n\n"
+             + multi_pod_summary() + "\n<!-- /ROOFLINE_TABLE -->")
+    if "<!-- /ROOFLINE_TABLE -->" in md:
+        md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?<!-- /ROOFLINE_TABLE -->",
+                    block, md, flags=re.S)
+    else:
+        md = md.replace("<!-- ROOFLINE_TABLE -->", block)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md §Roofline updated "
+          f"({table.count(chr(10)) - 1} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Paper Fig. 1: insertion sparsity of 2D vs 3D deconvolution layers."""
+
+from repro.core import networks, sparsity
+
+
+def run() -> list[str]:
+    rows = []
+    for net in ("dcgan", "gp_gan", "3d_gan", "v_net"):
+        for layer in networks.benchmark_layers(net):
+            s = sparsity.layer_sparsity(layer)
+            rows.append(f"fig1_sparsity/{layer.name},0,{s:.4f}")
+    t = sparsity.fig1_table()
+    mean2 = sum(s for _, s in t["dcgan"]) / len(t["dcgan"])
+    mean3 = sum(s for _, s in t["3d_gan"]) / len(t["3d_gan"])
+    rows.append(f"fig1_claim_3d_gt_2d,0,{int(mean3 > mean2)}")
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 7: CPU/GPU/FPGA relative performance + energy efficiency.
+
+(a) spec-based platform model vs the paper's claimed ranges;
+(b) measured on THIS host: wall-time of the OOM lowering vs the IOM
+    lowering (jit, CPU backend) for a representative layer of each rank —
+    the algorithmic share of the paper's speedup.
+"""
+
+import dataclasses as dc
+import time
+
+from repro.core import comparison, networks
+
+
+def run() -> list[str]:
+    rows = []
+    for net in ("dcgan", "3d_gan"):
+        m = comparison.modeled_comparison(net)
+        rows.append(f"fig7_thr_vs_cpu/{net},0,{m['throughput_vs_cpu']:.1f}")
+        rows.append(f"fig7_energy_vs_cpu/{net},0,{m['energy_vs_cpu']:.1f}")
+        rows.append(f"fig7_energy_vs_gpu/{net},0,{m['energy_vs_gpu']:.2f}")
+    # measured CPU OOM vs IOM (downscaled channels to keep the bench fast)
+    lay2 = dc.replace(networks.benchmark_layers("dcgan")[1], cin=64, cout=32)
+    lay3 = dc.replace(networks.benchmark_layers("3d_gan")[1], cin=32,
+                      cout=16)
+    for name, lay in (("2d", lay2), ("3d", lay3)):
+        t0 = time.perf_counter()
+        m = comparison.measured_cpu_speedup(lay, batch=2, repeats=3)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(f"fig7_measured_cpu_speedup/{name},{us:.0f},"
+                    f"{m['measured_speedup']:.2f}")
+        rows.append(f"fig7_mac_ratio/{name},0,{m['mac_ratio']:.2f}")
+    return rows

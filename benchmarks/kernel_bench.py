@@ -1,0 +1,53 @@
+"""Pallas-kernel microbenchmark (interpret mode on CPU): per-method
+wall-time on downsized paper layers + VMEM working-set report for the real
+layer geometry (the TPU-relevant structural number)."""
+
+import dataclasses as dc
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks
+from repro.core.functional import deconv_nd
+from repro.kernels.deconv import choose_blocks
+from repro.kernels.deconv.kernel import vmem_bytes
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.RandomState(0)
+    lay2 = dc.replace(networks.benchmark_layers("dcgan")[1], cin=32, cout=16)
+    lay3 = dc.replace(networks.benchmark_layers("3d_gan")[1], cin=16, cout=8)
+    for name, lay in (("2d", lay2), ("3d", lay3)):
+        x = jnp.asarray(rng.randn(1, *lay.in_spatial, lay.cin), jnp.float32)
+        w = jnp.asarray(rng.randn(*lay.kernel, lay.cin, lay.cout),
+                        jnp.float32)
+        for method in ("oom", "xla", "iom_phase", "pallas"):
+            f = jax.jit(lambda x, w, m=method: deconv_nd(x, w, lay.stride,
+                                                         0, method=m))
+            us = _time(f, x, w)
+            rows.append(f"kernel_{name}_{method},{us:.0f},")
+    # VMEM working set for the REAL layer geometry at the chosen blocking
+    for name, lay in (("2d", networks.benchmark_layers("dcgan")[1]),
+                      ("3d", networks.benchmark_layers("3d_gan")[1])):
+        sp3 = (1,) * (3 - lay.rank) + lay.in_spatial
+        k3 = (1,) * (3 - lay.rank) + lay.kernel
+        s3 = (1,) * (3 - lay.rank) + lay.stride
+        bci, bco = choose_blocks(sp3, k3, s3, lay.cin, lay.cout)
+        vb = vmem_bytes(sp3, k3, s3, bci, bco)
+        rows.append(f"kernel_vmem_bytes/{name},0,{vb}")
+        rows.append(f"kernel_blocks/{name},0,{bci}x{bco}")
+    return rows

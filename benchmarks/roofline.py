@@ -1,0 +1,101 @@
+"""Roofline table assembly: reads experiments/dryrun/*.json (written by
+``repro.launch.dryrun``) and emits the §Roofline rows."""
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _next_lever(r) -> str:
+    """One sentence: what would move the dominant term down (per brief)."""
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    shape = r["shape"]
+    arch = r["arch"]
+    moe = arch.startswith(("arctic", "dbrx"))
+    if shape == "dcnn":
+        if dom == "collective":
+            return ("gradient all-reduce / comm floor at batch 32 on 256 "
+                    "chips — int8 grad compression (runtime/dp_trainer) or "
+                    "bigger global batch; spatial sharding refuted at this "
+                    "scale (§Perf D)")
+        return ("per-chip compute — the IOM kernel already removes the "
+                "S^d invalid MACs (§Perf D it1: OOM costs 5.6x)")
+    if dom == "collective":
+        if moe:
+            return ("EP dispatch collectives — fixed by shard_map MoE "
+                    "(§Perf A: 39.5x; fleet table)")
+        if shape == "decode_32k":
+            return ("FSDP weight all-gathers — fixed by decode sharding "
+                    "policy (§Perf B: 99-454x)")
+        if rl["useful_flops_ratio"] < 0.45:
+            return ("remat re-psums + CE resharding — vocab-parallel CE "
+                    "lands -26% (§Perf C); rest needs save_outs remat "
+                    "(memory budget permitting) + async-collective overlap")
+        return ("TP psums (fwd+bwd+remat) — async-collective overlap "
+                "(launcher XLA flags) and save_outs remat where memory "
+                "allows")
+    if dom == "memory":
+        if shape.startswith(("decode", "long")):
+            return ("weights+cache streaming (natural decode wall) — int8 "
+                    "KV cache or weight quantization next")
+        return "activation traffic — larger fused blocks / lower remat"
+    # compute
+    if rl["useful_flops_ratio"] < 0.5:
+        return ("recompute waste — relax remat policy / causal-aware "
+                "attention chunks (skip fully-masked KV)")
+    return ("near useful-compute bound — only larger per-chip batch or "
+            "sparsity moves this")
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " step_s | roofline_frac | useful_flops | fits_16GB |"
+        " what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — | — | see DESIGN.md "
+                         f"§Arch-applicability |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — | — | — |")
+            continue
+        rl = r["roofline"]
+        fits = r["memory"]["total_per_device"] <= 16e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['dominant']} | {rl['step_s']:.3f} | "
+            f"{rl['roofline_fraction'] * 100:.1f}% | "
+            f"{rl['useful_flops_ratio'] * 100:.1f}% | "
+            f"{'yes' if fits else 'NO'} | {_next_lever(r)} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    rows = []
+    for r in load_records("single"):
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        tag = f"{r['arch']}_{r['shape']}"
+        rows.append(f"roofline_step_s/{tag},0,{rl['step_s']:.4f}")
+        rows.append(f"roofline_dominant/{tag},0,{rl['dominant']}")
+        rows.append(f"roofline_fraction/{tag},0,"
+                    f"{rl['roofline_fraction']:.4f}")
+    if not rows:
+        rows.append("roofline,0,no-dryrun-records-found")
+    return rows

@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        compress_bench,
+        fig1_sparsity,
+        fig6_utilization,
+        fig7_comparison,
+        kernel_bench,
+        roofline,
+        table2_configs,
+    )
+    suites = [
+        ("fig1_sparsity", fig1_sparsity),
+        ("table2_configs", table2_configs),
+        ("fig6_utilization", fig6_utilization),
+        ("fig7_comparison", fig7_comparison),
+        ("kernel_bench", kernel_bench),
+        ("compress_bench", compress_bench),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — report, keep the run alive
+            rows = [f"{name}__ERROR,0,{type(e).__name__}:{e}"]
+        for r in rows:
+            print(r)
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"{name}__suite,{dt:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

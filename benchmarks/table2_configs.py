@@ -1,0 +1,19 @@
+"""Paper Table II: computation-engine configurations, and their mapping to
+our TPU kernel blocking."""
+
+from repro.core import networks, tiling
+
+
+def run() -> list[str]:
+    rows = []
+    for name, eng in (("2d", tiling.ENGINE_2D), ("3d", tiling.ENGINE_3D)):
+        rows.append(f"table2_pes/{name},0,{eng.total_pes}")
+        rows.append(f"table2_adders/{name},0,{eng.adder_tree_adders}")
+    # the Tm/Tn/Tz/Tr/Tc roles resolved to TPU blocks for each benchmark
+    for net in ("dcgan", "3d_gan"):
+        l = networks.benchmark_layers(net)[1]
+        blk = tiling.tpu_blocking(l.cin, l.cout, l.in_spatial, l.kernel,
+                                  l.stride)
+        rows.append(f"table2_tpu_block_ci/{net},0,{blk.block_ci}")
+        rows.append(f"table2_tpu_block_co/{net},0,{blk.block_co}")
+    return rows

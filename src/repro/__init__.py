@@ -1,0 +1,5 @@
+"""repro: uniform 2D/3D IOM deconvolution (Wang et al. 2019) as a
+production-grade JAX/Pallas framework, plus the assigned LM architecture
+pool riding the same distributed substrate."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,36 @@
+"""Architecture registry: 10 assigned archs + the paper's 4 DCNNs."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+
+ASSIGNED = [
+    "whisper_tiny", "stablelm_1_6b", "llama3_2_1b", "minitron_8b",
+    "granite_20b", "arctic_480b", "dbrx_132b", "xlstm_350m",
+    "zamba2_2_7b", "qwen2_vl_2b",
+]
+PAPER_DCNNS = ["dcgan", "gp_gan", "gan3d", "vnet"]
+ALL = ASSIGNED + PAPER_DCNNS
+
+_ALIASES = {
+    "whisper-tiny": "whisper_tiny", "stablelm-1.6b": "stablelm_1_6b",
+    "llama3.2-1b": "llama3_2_1b", "minitron-8b": "minitron_8b",
+    "granite-20b": "granite_20b", "arctic-480b": "arctic_480b",
+    "dbrx-132b": "dbrx_132b", "xlstm-350m": "xlstm_350m",
+    "zamba2-2.7b": "zamba2_2_7b", "qwen2-vl-2b": "qwen2_vl_2b",
+    "3d-gan": "gan3d", "3d_gan": "gan3d", "gp-gan": "gp_gan",
+    "v-net": "vnet", "v_net": "vnet",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG

@@ -1,0 +1,17 @@
+# The paper's primary contribution: uniform 2D/3D deconvolution with
+# input-oriented mapping (IOM), adapted TPU-natively (polyphase + Pallas).
+from repro.core.functional import (  # noqa: F401
+    METHODS,
+    deconv_macs,
+    deconv_nd,
+    deconv_iom,
+    deconv_iom_phase,
+    deconv_oom,
+    deconv_output_shape,
+    deconv_xla,
+    insertion_sparsity,
+    phase_kernels,
+    valid_mac_fraction,
+    zero_insert,
+)
+from repro.core import networks, sparsity, tiling, comparison  # noqa: F401

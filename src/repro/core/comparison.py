@@ -1,0 +1,88 @@
+"""Fig. 7 reproduction: CPU / GPU / FPGA relative performance & energy.
+
+The paper reports FPGA (VC709, IOM) vs a 10-core E5 CPU and a GTX 1080 GPU:
+throughput 22.7x–63.3x over CPU, energy 104.7x–291.4x over CPU and
+3.3x–8.3x over GPU.  We cannot re-measure their hosts; we (a) *measure* the
+OOM-vs-IOM algorithmic speedup on this container's CPU (the part of the gap
+the paper's contribution is responsible for), and (b) *model* the platform
+gap from public specs, reporting both against the paper's claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import networks, tiling
+from repro.core.functional import deconv_nd
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    peak_tops: float        # usable peak, 16-bit ops
+    watts: float
+    achievable: float       # sustained fraction on deconv workloads
+
+# Public-spec platform models (16-bit ops).
+CPU_E5 = Platform("intel-e5-10c-2.8GHz", peak_tops=0.448 * 2, watts=105,
+                  achievable=0.10)   # AVX2 FMA, deconv is gather-bound
+GTX1080 = Platform("gtx-1080", peak_tops=8.9 * 2, watts=180, achievable=0.25)
+VC709 = Platform("vc709-iom", peak_tops=2 * 2048 * 200e6 / 1e12, watts=25,
+                 achievable=0.90)    # paper Fig. 6: >90% PE utilisation
+
+
+def modeled_comparison(network: str = "dcgan") -> dict:
+    layers = networks.benchmark_layers(network)
+    valid = sum(l.valid_macs for l in layers)
+    oom = sum(l.oom_macs for l in layers)
+    eff = oom / valid   # zeros the FPGA (IOM) never executes
+
+    def t(p: Platform, macs):
+        return 2 * macs / (p.peak_tops * 1e12 * p.achievable)
+
+    # CPU/GPU libraries execute the dense (zero-inserted) convolution.
+    t_cpu, t_gpu = t(CPU_E5, oom), t(GTX1080, oom)
+    t_fpga = t(VC709, valid)
+    res = {
+        "network": network,
+        "oom_over_iom_macs": eff,
+        "throughput_vs_cpu": t_cpu / t_fpga,
+        "throughput_vs_gpu": t_gpu / t_fpga,
+        "energy_vs_cpu": (t_cpu * CPU_E5.watts) / (t_fpga * VC709.watts),
+        "energy_vs_gpu": (t_gpu * GTX1080.watts) / (t_fpga * VC709.watts),
+        "paper_claims": {"throughput_vs_cpu": (22.7, 63.3),
+                         "energy_vs_cpu": (104.7, 291.4),
+                         "energy_vs_gpu": (3.3, 8.3)},
+    }
+    return res
+
+
+def measured_cpu_speedup(layer: networks.DeconvLayer | None = None,
+                         batch: int = 1, repeats: int = 3) -> dict:
+    """Measured on *this* container: OOM (explicit zero-insert + dense conv)
+    vs IOM-phase, both jit-compiled on the CPU backend."""
+    if layer is None:
+        layer = networks.benchmark_layers("dcgan")[1]
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(batch, *layer.in_spatial, layer.cin), jnp.float32)
+    w = jnp.asarray(rng.randn(*layer.kernel, layer.cin, layer.cout), jnp.float32)
+
+    def bench(method):
+        fn = jax.jit(lambda x, w: deconv_nd(x, w, layer.stride, 0, method=method))
+        fn(x, w).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn(x, w).block_until_ready()
+        return (time.perf_counter() - t0) / repeats
+
+    t_oom = bench("oom")
+    t_iom = bench("iom_phase")
+    return {"layer": layer.name, "t_oom_s": t_oom, "t_iom_s": t_iom,
+            "measured_speedup": t_oom / t_iom,
+            "mac_ratio": layer.oom_macs / layer.valid_macs}

@@ -1,0 +1,122 @@
+"""The paper's four benchmark DCNNs (Section V), as layer lists.
+
+All deconvolution layers use uniform 3x3 / 3x3x3 filters with stride 2, as
+stated in the paper ("All the deconvolutional layers of the selected DCNNs
+have uniform 3x3 and 3x3x3 filters").  Output-size bookkeeping follows
+Eq. (1) with border cropping so each deconv exactly doubles the spatial size
+(the paper: "the padded data is removed from the final output feature map").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvLayer:
+    name: str
+    in_spatial: tuple[int, ...]      # input spatial extent (rank 2 or 3)
+    cin: int
+    cout: int
+    kernel: tuple[int, ...]
+    stride: tuple[int, ...]
+    # crop (lo, hi) per spatial dim applied after Eq.(1); (0,1) turns
+    # (I-1)*2+3 = 2I+1 into exactly 2I.
+    crop: tuple[tuple[int, int], ...]
+
+    @property
+    def rank(self) -> int:
+        return len(self.in_spatial)
+
+    @property
+    def out_spatial(self) -> tuple[int, ...]:
+        return tuple((i - 1) * s + k - lo - hi
+                     for i, s, k, (lo, hi) in
+                     zip(self.in_spatial, self.stride, self.kernel, self.crop))
+
+    @property
+    def valid_macs(self) -> int:
+        """IOM MACs (every input activation x full kernel) — all valid."""
+        return (math.prod(self.in_spatial) * math.prod(self.kernel)
+                * self.cin * self.cout)
+
+    @property
+    def oom_macs(self) -> int:
+        """MACs a dense conv executes over the zero-inserted input."""
+        full = tuple((i - 1) * s + k
+                     for i, s, k in zip(self.in_spatial, self.stride, self.kernel))
+        return math.prod(full) * math.prod(self.kernel) * self.cin * self.cout
+
+    @property
+    def ops(self) -> int:
+        """Algorithmic op count (2 ops per valid MAC)."""
+        return 2 * self.valid_macs
+
+    def bytes_moved(self, data_width_bits: int = 16) -> int:
+        """Off-chip traffic: read input + weights, write output (once each)."""
+        b = data_width_bits // 8
+        inp = math.prod(self.in_spatial) * self.cin
+        wgt = math.prod(self.kernel) * self.cin * self.cout
+        out = math.prod(self.out_spatial) * self.cout
+        return b * (inp + wgt + out)
+
+
+def _stack(name: str, rank: int, start: int, chans: Sequence[int]) -> list[DeconvLayer]:
+    layers = []
+    sp = (start,) * rank
+    k = (3,) * rank
+    s = (2,) * rank
+    crop = ((0, 1),) * rank
+    for li in range(len(chans) - 1):
+        layers.append(DeconvLayer(
+            name=f"{name}.deconv{li + 1}", in_spatial=sp, cin=chans[li],
+            cout=chans[li + 1], kernel=k, stride=s, crop=crop))
+        sp = tuple(2 * v for v in sp)
+    return layers
+
+
+# -- the paper's four benchmarks -------------------------------------------
+
+def dcgan() -> list[DeconvLayer]:
+    """DCGAN generator (Radford et al.): 4x4x1024 -> 64x64x3, 4 deconvs."""
+    return _stack("dcgan", 2, 4, [1024, 512, 256, 128, 3])
+
+
+def gp_gan() -> list[DeconvLayer]:
+    """GP-GAN blending generator decoder: 4x4x512 -> 64x64x3."""
+    return _stack("gp_gan", 2, 4, [512, 256, 128, 64, 3])
+
+
+def gan3d() -> list[DeconvLayer]:
+    """3D-GAN generator (Wu et al.): 4^3 x 512 -> 64^3 x 1."""
+    return _stack("3d_gan", 3, 4, [512, 256, 128, 64, 1])
+
+
+def vnet_decoder() -> list[DeconvLayer]:
+    """V-Net decoder deconvs (Milletari et al.), 128x128x64 volume.
+
+    Decoder stages upsample 8^3-equivalent features back up; spatial sizes
+    follow the (H, W, D) = (128, 128, 64) input halved 4x by the encoder.
+    """
+    layers = []
+    sp = (8, 8, 4)
+    for li, (ci, co) in enumerate([(256, 256), (256, 128), (128, 64), (64, 32)]):
+        layers.append(DeconvLayer(
+            name=f"vnet.deconv{li + 1}", in_spatial=sp, cin=ci, cout=co,
+            kernel=(3, 3, 3), stride=(2, 2, 2), crop=((0, 1),) * 3))
+        sp = tuple(2 * v for v in sp)
+    return layers
+
+
+BENCHMARKS = {
+    "dcgan": dcgan,
+    "gp_gan": gp_gan,
+    "3d_gan": gan3d,
+    "v_net": vnet_decoder,
+}
+
+
+def benchmark_layers(name: str) -> list[DeconvLayer]:
+    return BENCHMARKS[name]()

@@ -1,0 +1,150 @@
+"""Deterministic, host-sharded synthetic data pipelines.
+
+Every batch is a pure function of (seed, step, process_index) — restartable
+from any step with no data-state checkpoint beyond the step counter, and
+each host generates only its own shard (multi-host ready; this container is
+one host).  A background prefetch thread keeps one batch ahead of the step
+function (overlapping host data work with device compute).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class _Prefetcher:
+    """One-batch-deep background prefetch."""
+
+    def __init__(self, make_batch, start_step: int):
+        self._make = make_batch
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self._make(self._step)
+            self._step += 1
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+
+    def next(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+class TokenBatches:
+    """Synthetic LM token stream: {tokens, labels} with next-token labels."""
+
+    def __init__(self, vocab: int, global_batch: int, seq_len: int,
+                 seed: int = 0, start_step: int = 0, prefetch: bool = True,
+                 extra_fn=None):
+        self.vocab = vocab
+        n_proc = jax.process_count()
+        assert global_batch % n_proc == 0
+        self.local_batch = global_batch // n_proc
+        self.seq_len = seq_len
+        self.seed = seed
+        self.extra_fn = extra_fn
+        self._pf = _Prefetcher(self.make_batch, start_step) if prefetch \
+            else None
+
+    def make_batch(self, step: int) -> dict:
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 7919 + jax.process_index())
+            % (2 ** 31))
+        # a learnable toy language: token t+1 = (a*t + b) mod vocab per row
+        a = rng.randint(1, 8, size=(self.local_batch, 1))
+        b = rng.randint(0, self.vocab, size=(self.local_batch, 1))
+        pos = np.arange(self.seq_len + 1)[None, :]
+        seq = (a * pos + b) % self.vocab
+        batch = {"tokens": jnp.asarray(seq[:, :-1], jnp.int32),
+                 "labels": jnp.asarray(seq[:, 1:], jnp.int32)}
+        if self.extra_fn is not None:
+            batch.update(self.extra_fn(step, self.local_batch, self.seq_len))
+        return batch
+
+    def next(self):
+        return self._pf.next() if self._pf else None
+
+    def close(self):
+        if self._pf:
+            self._pf.close()
+
+
+class DcnnBatches:
+    """GAN batches: {z, real} (real = smoothed random images)."""
+
+    def __init__(self, batch: int, z_dim: int, out_shape, seed: int = 0,
+                 start_step: int = 0, prefetch: bool = True):
+        self.batch, self.z_dim, self.out_shape = batch, z_dim, tuple(out_shape)
+        self.seed = seed
+        self._pf = _Prefetcher(self.make_batch, start_step) if prefetch \
+            else None
+
+    def make_batch(self, step: int) -> dict:
+        rng = np.random.RandomState((self.seed + step * 7919) % (2 ** 31))
+        z = rng.randn(self.batch, self.z_dim).astype(np.float32)
+        real = np.tanh(rng.randn(self.batch, *self.out_shape)
+                       .astype(np.float32))
+        return {"z": jnp.asarray(z), "real": jnp.asarray(real)}
+
+    def next(self):
+        return self._pf.next() if self._pf else None
+
+    def close(self):
+        if self._pf:
+            self._pf.close()
+
+
+class VolumeBatches:
+    """V-Net batches: {vol, labels} — spheres to segment."""
+
+    def __init__(self, batch: int, spatial, seed: int = 0,
+                 start_step: int = 0, prefetch: bool = True):
+        self.batch, self.spatial = batch, tuple(spatial)
+        self.seed = seed
+        self._pf = _Prefetcher(self.make_batch, start_step) if prefetch \
+            else None
+
+    def make_batch(self, step: int) -> dict:
+        rng = np.random.RandomState((self.seed + step * 104729) % (2 ** 31))
+        h, w, d = self.spatial
+        grid = np.stack(np.meshgrid(np.arange(h), np.arange(w),
+                                    np.arange(d), indexing="ij"), -1)
+        vols, labs = [], []
+        for _ in range(self.batch):
+            c = rng.rand(3) * np.array([h, w, d])
+            r = (0.15 + 0.2 * rng.rand()) * min(h, w, d)
+            mask = (np.linalg.norm(grid - c, axis=-1) < r)
+            vol = mask.astype(np.float32) + 0.3 * rng.randn(h, w, d)
+            vols.append(vol[..., None])
+            labs.append(mask.astype(np.int32))
+        return {"vol": jnp.asarray(np.stack(vols)),
+                "labels": jnp.asarray(np.stack(labs))}
+
+    def next(self):
+        return self._pf.next() if self._pf else None
+
+    def close(self):
+        if self._pf:
+            self._pf.close()

@@ -1,0 +1,5 @@
+from repro.kernels.deconv.ops import deconv, choose_blocks  # noqa: F401
+from repro.kernels.deconv.ref import (  # noqa: F401
+    deconv_loop_oracle,
+    deconv_reference,
+)

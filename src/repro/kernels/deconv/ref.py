@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the deconv Pallas kernel.
+
+Independent of the kernel's polyphase construction: implements the canonical
+definition y[n,o,co] = sum_{i,k: o=i*S+k} x[n,i,ci] w[k,ci,co] via the
+literal IOM block overlap-add (vectorised), plus a python-loop version for
+tiny shapes used to anchor the oracle itself.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.functional import deconv_iom, deconv_output_shape
+
+
+def deconv_reference(x, w, stride, padding=0):
+    """Vectorised oracle (channels-last, rank-generic)."""
+    return deconv_iom(x, w, stride, padding)
+
+
+def deconv_loop_oracle(x, w, stride, padding=0):
+    """O(everything) python-loop oracle — tiny shapes only."""
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    rank = x.ndim - 2
+    stride = (stride,) * rank if isinstance(stride, int) else tuple(stride)
+    padding = (padding,) * rank if isinstance(padding, int) else tuple(padding)
+    kernel = w.shape[:rank]
+    in_sp = x.shape[1:-1]
+    out_sp = deconv_output_shape(in_sp, kernel, stride, 0)
+    y = np.zeros((x.shape[0], *out_sp, w.shape[-1]))
+    for n in range(x.shape[0]):
+        for i in itertools.product(*(range(v) for v in in_sp)):
+            for k in itertools.product(*(range(v) for v in kernel)):
+                o = tuple(ii * s + kk for ii, s, kk in zip(i, stride, k))
+                y[(n,) + o] += x[(n,) + i] @ w[k]
+    idx = (slice(None),) + tuple(slice(p, d - p) for p, d in zip(padding, out_sp)) \
+        + (slice(None),)
+    return jnp.asarray(y[idx])

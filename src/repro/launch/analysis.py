@@ -1,0 +1,211 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) modules.
+
+``cost_analysis()`` on the compiled executable reports the PER-DEVICE
+module (verified empirically: sharding a matmul 8-way divides reported
+flops by 8).  Collective operand bytes are likewise parsed from the
+per-device optimized HLO.  The roofline terms below therefore equal the
+brief's  ``global_quantity / (chips * per_chip_rate)``  with
+``global = per_device * chips``:
+
+    compute_s    = flops_per_device / peak_flops_per_chip
+    memory_s     = bytes_per_device / hbm_bw_per_chip
+    collective_s = collective_bytes_per_device / ici_bw_per_chip
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+# TPU v5e per-chip constants (from the brief)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-type {count, bytes} summed over the per-device module.
+
+    Convention: the RESULT shape of each collective is counted (for
+    all-gather that is the gathered tensor; for all-reduce the reduced
+    tensor; for reduce-scatter the scattered shard — a lower bound).
+    ``-done`` halves of async pairs are skipped to avoid double counting.
+    """
+    out = {op: {"count": 0, "bytes": 0} for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out[op]["count"] += 1
+        out[op]["bytes"] += _shape_bytes(m.group("result"))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float          # HLO 'bytes accessed' (UNFUSED upper
+                                     # bound on the CPU backend)
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: float = 0.0         # analytic 6*N*D (global)
+    analytic_bytes_per_device: float = 0.0   # fused-traffic estimate
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        """Memory term from the fused-traffic estimate when available (the
+        CPU-backend HLO count has no TPU fusion and overcounts ~50x)."""
+        b = self.analytic_bytes_per_device or self.bytes_per_device
+        return b / HBM_BW
+
+    @property
+    def memory_s_hlo_upper(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent on the dominant term if perfectly
+        overlapped vs the useful-compute lower bound."""
+        useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful / self.step_s if self.step_s > 0 else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global) — remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "analytic_bytes_per_device": self.analytic_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_s_hlo_upper": self.memory_s_hlo_upper,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analytic_hbm_bytes(kind: str, *, n_params: int, param_shards: int,
+                       tokens_local: int, d_model: int, n_layers: int,
+                       vocab_local: int = 0, xent_chunks: int = 0,
+                       cache_bytes_local: int = 0,
+                       opt_bits: int = 32, act_factor: float = 8.0) -> float:
+    """Fused HBM traffic estimate per device per step (TPU semantics: fusion
+    keeps elementwise chains and softmax/attention tiles VMEM-resident).
+
+    train:  weights bf16 read fwd + remat re-read (2x2) + grad write +
+            optimizer moment r/w + master r/w; activations ~act_factor
+            residual-stream passes per layer; CE table re-read per chunk x3.
+    prefill: weights once + activations (no backward).
+    decode:  weights once + KV/state cache read-write — the classic
+            decode memory wall.
+    """
+    p_loc = n_params / max(param_shards, 1)
+    if kind == "train":
+        opt_rw = 32.0 if opt_bits == 32 else 10.0     # f32 vs int8 moments
+        w = p_loc * (2 + 2) + p_loc * opt_rw
+        acts = tokens_local * d_model * 2 * n_layers * act_factor
+        ce = 3 * xent_chunks * vocab_local * d_model * 2 \
+            + 3 * tokens_local * d_model * 2
+        return w + acts + ce
+    if kind == "prefill":
+        return p_loc * 2 + tokens_local * d_model * 2 * n_layers * \
+            (act_factor / 2) + cache_bytes_local
+    # decode
+    return p_loc * 2 + cache_bytes_local * 1.5 + \
+        tokens_local * d_model * 2 * n_layers * 4
+
+
+def analyse_compiled(compiled, chips: int, model_flops: float = 0.0,
+                     analytic_bytes: float = 0.0):
+    """Extract roofline terms + memory stats from a compiled executable."""
+    ca = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    rl = Roofline(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(colls["total_bytes"]),
+        chips=chips, model_flops=model_flops,
+        analytic_bytes_per_device=analytic_bytes)
+    return {
+        "roofline": rl.to_dict(),
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_per_device": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+    }
+
+
+def model_flops_estimate(kind: str, n_active_params: int, tokens: int,
+                         extra: float = 0.0) -> float:
+    """6*N*D for train, 2*N*D for inference (fwd only), + extra."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens + extra

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+
+The 512 placeholder host devices exist ONLY here (the env line above runs
+before any jax import, and must never move into conftest/pyproject).
+"""
+
+import argparse
+import dataclasses as _dc
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL, ASSIGNED, PAPER_DCNNS, SHAPES, get_config
+from repro.configs.base import shape_applicable
+from repro.launch import steps as ST
+from repro.launch.analysis import (
+    Roofline,
+    analyse_compiled,
+    collective_bytes,
+    model_flops_estimate,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import flags as _flags
+
+
+def _probe_plan(cfg):
+    """(L1, L2) unrolled probe layer counts for exact-linear extrapolation
+    of per-layer cost (XLA counts while bodies once; probes unroll).
+    None -> cost analysis of the production lowering is already exact or
+    the full model is small enough to unroll exactly."""
+    if cfg.family == "dcnn":
+        return None                       # no structural loops
+    period = max(cfg.attn_every, cfg.slstm_every, 1)
+    if cfg.n_layers <= 2 * period and cfg.n_layers <= 8:
+        return (cfg.n_layers, cfg.n_layers)  # exact full unroll
+    return (period, 2 * period) if period > 1 else (1, 2)
+
+
+def _compile_bundle(cfg, shape, mesh):
+    bundle = ST.build_bundle(cfg, shape, mesh)
+    kind = "train" if (cfg.family == "dcnn" or shape is None) else shape.kind
+    # donation (production-correct): train updates (params, opt) in place;
+    # decode updates the cache in place.
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=donate)
+    return bundle, jitted.lower(*bundle.args).compile()
+
+
+def _analytic_bytes(cfg, shape, mesh, bundle):
+    """Inputs for the fused-traffic estimate (see analysis.py)."""
+    from repro.launch.analysis import analytic_hbm_bytes
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sh = axes.get("model", 1)
+    data_sh = axes.get("data", 1) * axes.get("pod", 1)
+    n_params = bundle.meta["params"]
+    p_shards = model_sh * (data_sh if cfg.fsdp else 1)
+    if cfg.family == "dcnn":
+        return analytic_hbm_bytes(
+            "train", n_params=n_params, param_shards=p_shards,
+            tokens_local=cfg.dcnn_batch * 64 * 64 // data_sh,
+            d_model=64, n_layers=8, opt_bits=cfg.opt_state_bits)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    tokens_local = max(tokens // data_sh, 1)
+    cache_local = 0
+    if shape.kind == "decode":
+        c_shapes, _ = ST.cache_specs(cfg, shape, mesh)
+        total = sum(v.size * jax.numpy.dtype(v.dtype).itemsize
+                    for v in jax.tree_util.tree_leaves(c_shapes))
+        cache_local = total // mesh.size
+    from repro.models.transformer import _XENT_CHUNK
+    xent_chunks = max(tokens // _XENT_CHUNK, 1) if shape.kind == "train" else 0
+    return analytic_hbm_bytes(
+        shape.kind, n_params=bundle.meta.get("active_params", n_params),
+        param_shards=p_shards, tokens_local=tokens_local,
+        d_model=cfg.d_model, n_layers=max(cfg.n_layers, 1),
+        vocab_local=cfg.vocab // model_sh, xent_chunks=xent_chunks,
+        cache_bytes_local=cache_local, opt_bits=cfg.opt_state_bits)
+
+
+def _probe_metrics(cfg, shape, mesh, plan):
+    """Unrolled probes at two layer counts -> exact per-device totals."""
+    def measure(n_layers):
+        pcfg = _dc.replace(cfg, n_layers=n_layers, scan_layers=False)
+        with _flags.unrolled():
+            _, compiled = _compile_bundle(pcfg, shape, mesh)
+        ca = compiled.cost_analysis()
+        colls = collective_bytes(compiled.as_text())
+        return {"flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll": float(colls["total_bytes"])}
+
+    l1, l2 = plan
+    m1 = measure(l1)
+    if l2 == l1:   # exact full unroll
+        return m1, {"probe_layers": [l1], "exact": True}
+    m2 = measure(l2)
+    per_layer = {k: (m2[k] - m1[k]) / (l2 - l1) for k in m1}
+    total = {k: m1[k] + per_layer[k] * (cfg.n_layers - l1) for k in m1}
+    return total, {"probe_layers": [l1, l2], "exact": False,
+                   "per_layer": per_layer}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probe: bool = True) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+
+    if cfg.family == "dcnn":
+        shape = None
+        kind = "train"
+    else:
+        shape = SHAPES[shape_name]
+        kind = shape.kind
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            rec.update(status="skipped", reason=why)
+            return rec
+
+    t0 = time.time()
+    try:
+        with mesh:
+            bundle, compiled = _compile_bundle(cfg, shape, mesh)
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+                  f"memory_analysis: {mem}")
+            print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+                  f"cost_analysis: flops={cost.get('flops')} "
+                  f"bytes={cost.get('bytes accessed')} "
+                  f"(while bodies counted once — see probes)")
+            if cfg.family == "dcnn":
+                tokens = cfg.dcnn_batch
+                n_active = bundle.meta["params"]
+            else:
+                tokens = shape.global_batch * (shape.seq_len
+                                               if kind != "decode" else 1)
+                n_active = bundle.meta.get("active_params",
+                                           bundle.meta["params"])
+            mf = model_flops_estimate(kind, n_active, tokens)
+            ab = _analytic_bytes(cfg, shape, mesh, bundle)
+            rec.update(
+                status="ok",
+                compile_s=round(time.time() - t0, 1),
+                params=bundle.meta["params"],
+                active_params=n_active,
+                tokens=tokens,
+                **analyse_compiled(compiled, chips, mf, ab))
+
+            # exact-cost probes (unrolled small-layer lowerings)
+            if probe and _probe_plan(cfg) is not None:
+                t1 = time.time()
+                totals, pinfo = _probe_metrics(cfg, shape, mesh,
+                                               _probe_plan(cfg))
+                rl = Roofline(
+                    flops_per_device=totals["flops"],
+                    bytes_per_device=totals["bytes"],
+                    collective_bytes_per_device=totals["coll"],
+                    chips=chips, model_flops=mf,
+                    analytic_bytes_per_device=ab)
+                rec["roofline"] = rl.to_dict()      # probe-corrected terms
+                rec["probe"] = {**pinfo,
+                                "probe_compile_s": round(time.time() - t1, 1)}
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, "dcnn"])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (assigned arch x shape) cell")
+    ap.add_argument("--dcnn", action="store_true",
+                    help="include the paper's DCNN configs")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="production compile only (multi-pod proof pass)")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+        if args.dcnn:
+            cells += [(a, "dcnn") for a in PAPER_DCNNS]
+    else:
+        assert args.arch, "--arch or --all required"
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(args.arch, s) for s in shapes]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch.replace('.', '_')}__{shape}__" \
+                  f"{'multi' if mp else 'single'}"
+            path = outdir / f"{tag}.json"
+            if path.exists():
+                rec = json.loads(path.read_text())
+                if rec.get("status") == "ok":
+                    print(f"skip cached {tag}")
+                    n_ok += 1
+                    continue
+            rec = run_cell(arch, shape, mp, probe=not args.no_probe)
+            path.write_text(json.dumps(rec, indent=1))
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_err += st == "error"
+            msg = rec.get("error", rec.get("reason", ""))
+            print(f"{tag:<50s} {st:<8s} {rec.get('compile_s', '')} {msg}",
+                  flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

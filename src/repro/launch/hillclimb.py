@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: re-measure one (arch x shape) cell with config
+overrides, writing experiments/hillclimb/<tag>.json.  Baselines under
+experiments/dryrun/ stay untouched.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3.2-1b \
+        --shape train_4k --tag llama_saveouts --set remat_policy=save_outs
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun as DR
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+
+    # monkeypatch get_config inside dryrun's view for this run
+    base_cfg = get_config(args.arch)
+    cfg = dataclasses.replace(base_cfg, **overrides)
+    DR.get_config = lambda _a: cfg
+
+    rec = DR.run_cell(args.arch, args.shape, args.multi_pod, probe=True)
+    rec["overrides"] = overrides
+    rec["tag"] = args.tag
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / f"{args.tag}.json").write_text(json.dumps(rec, indent=1))
+    rl = rec.get("roofline", {})
+    print(json.dumps({k: rl.get(k) for k in
+                      ("compute_s", "memory_s", "collective_s", "dominant",
+                       "step_s", "roofline_fraction",
+                       "useful_flops_ratio")}, indent=1))
+    print("status:", rec["status"], rec.get("error", ""))
+
+
+if __name__ == "__main__":
+    main()

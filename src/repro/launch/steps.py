@@ -1,0 +1,342 @@
+"""Jitted step builders + abstract input specs for every (arch x shape).
+
+``build_bundle(cfg, shape, mesh)`` assembles everything the dry-run, the
+trainer and the server need: the step function, abstract argument trees
+(ShapeDtypeStruct — no allocation), and in/out NamedSharding trees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import dcnn as D
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import QTensor
+from repro.sharding.partition import (
+    is_logical_leaf,
+    logical_to_spec,
+    param_shardings,
+    split_params,
+)
+
+
+# ---------------------------------------------------------------------------
+# Abstract parameter / optimizer trees
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct tree, logical tree) without allocating."""
+    def build():
+        ws = _init_ws(cfg, jax.random.PRNGKey(0))
+        values, _ = split_params(ws)
+        return values
+
+    shapes = jax.eval_shape(build)
+    ws = jax.eval_shape(lambda: _init_ws(cfg, jax.random.PRNGKey(0)))
+    _, logical = split_params(ws)
+    return shapes, logical
+
+
+def _init_ws(cfg: ModelConfig, key):
+    if cfg.family == "dcnn":
+        if cfg.dcnn == "v_net":
+            return {"vnet": D.init_vnet(cfg, key)}
+        kg, kd = jax.random.split(key)
+        return {"gen": D.init_generator(cfg, kg),
+                "disc": D.init_discriminator(cfg, kd)}
+    return T.init_params(cfg, key)
+
+
+def real_params(cfg: ModelConfig, key):
+    ws = _init_ws(cfg, key)
+    values, logical = split_params(ws)
+    dt = jnp.dtype(cfg.master_dtype)
+    values = jax.tree_util.tree_map(lambda v: v.astype(dt), values)
+    return values, logical
+
+
+def _cast_master(cfg, tree):
+    dt = jnp.dtype(cfg.master_dtype)
+    return jax.tree_util.tree_map(
+        lambda v: jax.ShapeDtypeStruct(v.shape, dt)
+        if isinstance(v, jax.ShapeDtypeStruct) else v.astype(dt), tree)
+
+
+def opt_shardings(mesh, state_shapes, p_logical, fsdp: bool):
+    """AdamWState shardings: moments follow params; QTensor scales
+    replicated; step replicated."""
+    def mom(logical_tree, shape_tree):
+        def one(lg, v):
+            if isinstance(v, QTensor):
+                return QTensor(
+                    NamedSharding(mesh, logical_to_spec(mesh, lg, v.q.shape,
+                                                        fsdp)),
+                    NamedSharding(mesh, P()))
+            return NamedSharding(mesh, logical_to_spec(mesh, lg, v.shape,
+                                                       fsdp))
+        return jax.tree_util.tree_map(
+            one, logical_tree, shape_tree, is_leaf=is_logical_leaf)
+
+    from repro.optim.adamw import AdamWState
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=mom(p_logical, state_shapes.m),
+        v=mom(p_logical, state_shapes.v))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def input_specs(arch_or_cfg, shape_name: str = "train_4k", mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of one (arch x
+    shape) cell — weak-type-correct, shardable, no device allocation.
+
+        specs, shardings = input_specs("llama3.2-1b", "train_4k", mesh)
+    """
+    from repro.configs import SHAPES, get_config
+    cfg = (get_config(arch_or_cfg) if isinstance(arch_or_cfg, str)
+           else arch_or_cfg)
+    shape = SHAPES[shape_name]
+    if mesh is None:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    batch, shard = batch_specs(cfg, shape, mesh)
+    if shape.kind == "decode":
+        c_shapes, c_shard = cache_specs(cfg, shape, mesh)
+        return {"batch": batch, "cache": c_shapes}, \
+            {"batch": shard, "cache": c_shard}
+    return {"batch": batch}, {"batch": shard}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(abstract batch dict, sharding dict) for the given input shape."""
+    gb, s = shape.global_batch, shape.seq_len
+    tok_s = NamedSharding(mesh, logical_to_spec(mesh, ("batch", None),
+                                                (gb, s)))
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+        shard = {"tokens": tok_s, "labels": tok_s}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+        shard = {"tokens": tok_s}
+    else:  # decode: one new token against a seq_len cache
+        one_s = NamedSharding(mesh, logical_to_spec(mesh, ("batch", None),
+                                                    (gb, 1)))
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, 1), jnp.int32)}
+        shard = {"tokens": one_s}
+
+    sq = s if shape.kind != "decode" else 1
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        shard["enc_embeds"] = NamedSharding(
+            mesh, logical_to_spec(mesh, ("batch", None, None),
+                                  (gb, cfg.enc_seq, cfg.d_model)))
+    if cfg.mrope:
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, gb, sq),
+                                                        jnp.int32)
+        shard["mrope_positions"] = NamedSharding(
+            mesh, logical_to_spec(mesh, (None, "batch", None), (3, gb, sq)))
+    return batch, shard
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    gb = shape.global_batch
+    seq_shard = gb == 1
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(None, cfg, gb, shape.seq_len))
+    logical = T.cache_logical(cfg, seq_shard=seq_shard)
+    shardings = param_shardings(mesh, cache_shapes, logical, fsdp_enabled=False)
+    return cache_shapes, shardings
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return T.forward(p, cfg, batch, mode="train",
+                             param_dtype=jnp.bfloat16)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = cosine_schedule(opt_state.step)
+        new_params, new_state = adamw_update(grads, opt_state, params, opt,
+                                             lr_scale=lr)
+        return new_params, new_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_gan_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                        method: str = "iom_phase"):
+    def train_step(params, opt_state, batch):
+        gen_p, disc_p = params["gen"], params["disc"]
+        gen_s, disc_s = opt_state
+
+        def g_loss_fn(gp):
+            gl, _, _ = D.gan_losses(gp, disc_p, cfg, batch["z"],
+                                    batch["real"], method)
+            return gl
+
+        def d_loss_fn(dp):
+            _, dl, _ = D.gan_losses(gen_p, dp, cfg, batch["z"],
+                                    batch["real"], method)
+            return dl
+
+        gl, g_grads = jax.value_and_grad(g_loss_fn)(gen_p)
+        dl, d_grads = jax.value_and_grad(d_loss_fn)(disc_p)
+        new_gen, gen_s = adamw_update(g_grads, gen_s, gen_p, opt)
+        new_disc, disc_s = adamw_update(d_grads, disc_s, disc_p, opt)
+        return ({"gen": new_gen, "disc": new_disc}, (gen_s, disc_s),
+                {"g_loss": gl, "d_loss": dl})
+    return train_step
+
+
+def make_vnet_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                         method: str = "iom_phase"):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits = D.vnet_forward(p["vnet"], cfg, batch["vol"], method)
+            return D.dice_loss(logits, batch["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_p, new_s = adamw_update(grads, opt_state, params, opt)
+        return new_p, new_s, {"loss": loss}
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, kind: str):
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            logits, cache = T.forward(params, cfg, batch, mode="prefill",
+                                      param_dtype=jnp.bfloat16)
+            token = jnp.argmax(logits[:, -1], axis=-1)
+            return token, cache
+        return prefill_step
+
+    def decode_step(params, cache, batch):
+        logits, cache = T.forward(params, cfg, batch, mode="decode",
+                                  cache=cache, param_dtype=jnp.bfloat16)
+        token = jnp.argmax(logits[:, -1], axis=-1)
+        return token, cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Bundles (dry-run / launcher assembly)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Bundle:
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _dcnn_bundle(cfg: ModelConfig, mesh, opt: AdamWConfig) -> Bundle:
+    p_shapes, p_logical = abstract_params(cfg)
+    p_shapes = _cast_master(cfg, p_shapes)
+    p_shard = param_shardings(mesh, p_shapes, p_logical, cfg.fsdp)
+    if cfg.dcnn == "v_net":
+        sp = D._vnet_spatial(cfg)
+        batch = {"vol": jax.ShapeDtypeStruct((cfg.dcnn_batch, *sp, 1),
+                                             jnp.float32),
+                 "labels": jax.ShapeDtypeStruct((cfg.dcnn_batch, *sp),
+                                                jnp.int32)}
+        step = make_vnet_train_step(cfg, opt, cfg.dcnn_method)
+        os_shapes = jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes)
+        os_shard = opt_shardings(mesh, os_shapes, p_logical, cfg.fsdp)
+    else:
+        layers = D._scaled_layers(cfg)
+        out_sp = layers[-1].out_spatial
+        batch = {"z": jax.ShapeDtypeStruct((cfg.dcnn_batch, cfg.dcnn_z),
+                                           jnp.float32),
+                 "real": jax.ShapeDtypeStruct(
+                     (cfg.dcnn_batch, *out_sp, layers[-1].cout),
+                     jnp.float32)}
+        step = make_gan_train_step(cfg, opt, cfg.dcnn_method)
+        os_shapes = (jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes["gen"]),
+                     jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes["disc"]))
+        os_shard = (opt_shardings(mesh, os_shapes[0], p_logical["gen"],
+                                  cfg.fsdp),
+                    opt_shardings(mesh, os_shapes[1], p_logical["disc"],
+                                  cfg.fsdp))
+    b_shard = jax.tree_util.tree_map(
+        lambda v: NamedSharding(mesh, logical_to_spec(
+            mesh, ("batch",) + (None,) * (len(v.shape) - 1), v.shape)),
+        batch)
+    return Bundle(
+        fn=step, args=(p_shapes, os_shapes, batch),
+        in_shardings=(p_shard, os_shard, b_shard),
+        out_shardings=(p_shard, os_shard, None),
+        meta={"params": sum(v.size for v in
+                            jax.tree_util.tree_leaves(p_shapes))})
+
+
+def build_bundle(cfg: ModelConfig, shape: ShapeConfig | None, mesh,
+                 opt: AdamWConfig | None = None) -> Bundle:
+    """Everything needed to lower one (arch x shape) cell on a mesh."""
+    opt = opt or AdamWConfig(state_bits=cfg.opt_state_bits)
+    if cfg.family == "dcnn":
+        return _dcnn_bundle(cfg, mesh, opt)
+
+    if shape is not None and shape.kind == "decode":
+        # decode-bundle policy (§Perf Cell B, measured 25.7-450x): FSDP's
+        # per-layer weight all-gather is pure overhead when every token
+        # re-reads all weights — but only while the TP-sharded weights fit
+        # HBM (arctic/dbrx-scale keeps FSDP); and when kv heads cannot
+        # shard over the model axis, put the cache SEQ dim there instead
+        # (split-KV).
+        axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        model_size = axes.get("model", 1)
+        shapes_probe, _ = abstract_params(cfg)
+        n_params = sum(v.size for v in
+                       jax.tree_util.tree_leaves(shapes_probe))
+        per_shard_gb = n_params * 2 / model_size / 1e9      # bf16 weights
+        kv_seq = (cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_size != 0
+                  and shape.global_batch > 1)
+        cfg = dataclasses.replace(cfg, fsdp=cfg.fsdp and per_shard_gb > 8.0,
+                                  kv_seq_shard=cfg.kv_seq_shard or kv_seq)
+
+    p_shapes, p_logical = abstract_params(cfg)
+    p_shapes = _cast_master(cfg, p_shapes)
+    p_shard = param_shardings(mesh, p_shapes, p_logical, cfg.fsdp)
+    batch, b_shard = batch_specs(cfg, shape, mesh)
+    n_params = sum(v.size for v in jax.tree_util.tree_leaves(p_shapes))
+    meta = {"params": n_params,
+            "active_params": T.active_param_count(p_shapes, cfg)}
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, opt)
+        os_shapes = jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes)
+        os_shard = opt_shardings(mesh, os_shapes, p_logical, cfg.fsdp)
+        return Bundle(fn=step, args=(p_shapes, os_shapes, batch),
+                      in_shardings=(p_shard, os_shard, b_shard),
+                      out_shardings=(p_shard, os_shard, None), meta=meta)
+
+    if shape.kind == "prefill":
+        step = make_serve_step(cfg, "prefill")
+        return Bundle(fn=step, args=(p_shapes, batch),
+                      in_shardings=(p_shard, b_shard),
+                      out_shardings=None, meta=meta)
+
+    # decode
+    step = make_serve_step(cfg, "decode")
+    c_shapes, c_shard = cache_specs(cfg, shape, mesh)
+    tok_out = NamedSharding(mesh, logical_to_spec(
+        mesh, ("batch",), (shape.global_batch,)))
+    return Bundle(fn=step, args=(p_shapes, c_shapes, batch),
+                  in_shardings=(p_shard, c_shard, b_shard),
+                  out_shardings=(tok_out, c_shard), meta=meta)

@@ -1,0 +1,110 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch dcgan --steps 200
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 100 --batch 8 --seq 128
+
+Real-cluster notes (1000+ nodes): this same entry point runs under
+``jax.distributed.initialize()`` (env-driven); the XLA flags below enable
+the latency-hiding scheduler so collectives overlap compute on TPU.  On
+this CPU container it trains reduced configs end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+TPU_PERF_FLAGS = " ".join([
+    "--xla_tpu_enable_latency_hiding_scheduler=true",
+    "--xla_tpu_megacore_fusion_allow_ags=true",
+    "--xla_enable_async_collective_permute=true",
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--deconv-method", default="iom_phase")
+    args = ap.parse_args()
+
+    if os.environ.get("TPU_PERF", "0") == "1":
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                                   + TPU_PERF_FLAGS)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data import DcnnBatches, TokenBatches, VolumeBatches
+    from repro.launch import steps as ST
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import dcnn as D
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.runtime import Trainer, TrainLoopConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(model=args.model_parallel)
+    opt = AdamWConfig(lr=args.lr, state_bits=cfg.opt_state_bits)
+
+    with mesh:
+        params, logical = ST.real_params(cfg, jax.random.PRNGKey(0))
+        if cfg.family == "dcnn":
+            if cfg.dcnn == "v_net":
+                data = VolumeBatches(cfg.dcnn_batch, D._vnet_spatial(cfg))
+                step_fn = ST.make_vnet_train_step(cfg, opt,
+                                                  args.deconv_method)
+                opt_state = adamw_init(params, opt)
+            else:
+                layers = D._scaled_layers(cfg)
+                data = DcnnBatches(cfg.dcnn_batch, cfg.dcnn_z,
+                                   (*layers[-1].out_spatial,
+                                    layers[-1].cout))
+                step_fn = ST.make_gan_train_step(cfg, opt,
+                                                 args.deconv_method)
+                opt_state = (adamw_init(params["gen"], opt),
+                             adamw_init(params["disc"], opt))
+        else:
+            def extra_fn(step, b, s):
+                extra = {}
+                if cfg.family == "encdec":
+                    extra["enc_embeds"] = jnp.zeros(
+                        (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+                if cfg.mrope:
+                    extra["mrope_positions"] = jnp.broadcast_to(
+                        jnp.arange(s)[None, None], (3, b, s)).astype(
+                        jnp.int32)
+                return extra
+            data = TokenBatches(cfg.vocab, args.batch, args.seq,
+                                extra_fn=extra_fn)
+            step_fn = ST.make_train_step(cfg, opt)
+            opt_state = adamw_init(params, opt)
+
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        trainer = Trainer(jitted, params, opt_state, data,
+                          TrainLoopConfig(
+                              total_steps=args.steps,
+                              checkpoint_every=args.checkpoint_every,
+                              checkpoint_dir=args.checkpoint_dir))
+        if args.resume:
+            resumed = trainer.maybe_resume()
+            print(f"resume: {'ok, step=' + str(trainer.step) if resumed else 'no checkpoint found'}")
+        trainer.run()
+        print(f"finished at step {trainer.step}; "
+              f"stragglers={trainer.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

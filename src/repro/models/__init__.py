@@ -1,0 +1,9 @@
+from repro.models import (  # noqa: F401
+    attention,
+    dcnn,
+    layers,
+    mlp,
+    moe,
+    ssm,
+    transformer,
+)

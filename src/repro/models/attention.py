@@ -1,0 +1,161 @@
+"""GQA/MQA attention with RoPE / M-RoPE, chunked softmax (no O(S^2)
+materialisation), KV caches, cross-attention (enc-dec)."""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import WS, constrain
+
+_NEG = -1e30
+_Q_CHUNK = 512
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array     # [D, Hq, hd]
+    wk: jax.Array     # [D, Hkv, hd]
+    wv: jax.Array     # [D, Hkv, hd]
+    wo: jax.Array     # [Hq, hd, D]
+
+
+def init_attention(key, cfg: ModelConfig, d_model=None, n_heads=None,
+                   n_kv=None):
+    d = d_model or cfg.d_model
+    hq = n_heads or cfg.n_heads
+    hkv = n_kv or cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return AttnParams(
+        wq=L.dense_init(ks[0], (d, hq, hd), ("fsdp", "model", None)),
+        wk=L.dense_init(ks[1], (d, hkv, hd), ("fsdp", "model", None)),
+        wv=L.dense_init(ks[2], (d, hkv, hd), ("fsdp", "model", None)),
+        wo=L.dense_init(ks[3], (hq, hd, d), ("model", None, "fsdp"),
+                        scale=1.0 / math.sqrt(hq * hd)),
+    )
+
+
+def _split_gqa(q, n_kv):
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def _softmax_attend(q, k, v, mask):
+    """q [B,Sq,Hkv,G,hd]; k/v [B,T,Hkv,hd]; mask [B,Sq,T] or None."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = scores + jnp.where(mask, 0.0, _NEG)[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    # f32 softmax math; bf16 probs/outputs — keeps the attention output's
+    # COTANGENT in bf16 too (§Perf: the f32 version made XLA all-reduce
+    # f32 activation grads, measured at ~1 GB/layer extra on llama train)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _attend_chunked(q, k, v, *, causal: bool, q_offset=0):
+    """Scan over query chunks so scores never exceed O(chunk * T).
+
+    q [B,Sq,Hkv,G,hd]; k/v [B,T,Hkv,hd].
+    """
+    b, sq, hkv, g, hd = q.shape
+    t = k.shape[1]
+    chunk = min(_Q_CHUNK, sq)
+    if sq % chunk != 0:
+        chunk = sq  # irregular small seqs: single chunk
+    n = sq // chunk
+    qs = q.reshape(b, n, chunk, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    t_idx = jnp.arange(t)
+
+    def one(ci, qc):
+        if causal:
+            q_idx = q_offset + ci * chunk + jnp.arange(chunk)
+            mask = t_idx[None, None, :] <= q_idx[None, :, None]
+            mask = jnp.broadcast_to(mask, (b, chunk, t))
+        else:
+            mask = None
+        return _softmax_attend(qc, k, v, mask)
+
+    from repro.models import flags
+    if n == 1:
+        out = one(0, qs[0])[None]
+    elif flags.UNROLL:
+        out = jnp.stack([jax.checkpoint(one, static_argnums=0)(ci, qs[ci])
+                         for ci in range(n)])
+    else:
+        # checkpoint the chunk body: backward recomputes one chunk's scores
+        # at a time instead of saving all S*T probs
+        out = jax.lax.map(jax.checkpoint(lambda args: one(*args)),
+                          (jnp.arange(n), qs))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, hd)
+    return out
+
+
+def attention(p: AttnParams, x: jax.Array, cfg: ModelConfig, *,
+              cos=None, sin=None, causal=True,
+              kv_cache=None, cache_pos=None,
+              xattn_kv=None):
+    """Returns (out, new_kv_cache).
+
+    modes:
+      * train/prefill: x [B,S,D]; kv_cache None -> cache returned is (k, v)
+      * decode: x [B,1,D]; kv_cache (k_cache, v_cache) with static length,
+        cache_pos scalar write index.
+      * cross-attention: xattn_kv = (k, v) precomputed from encoder.
+    """
+    b, s, d = x.shape
+    hkv = p.wk.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq.astype(x.dtype))
+    q = constrain(q, "batch", None, "model", None)
+    if xattn_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p.wk.astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p.wv.astype(x.dtype))
+        if cos is not None:
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        new_cache = (k, v)
+        if kv_cache is not None:
+            ck, cv = kv_cache
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                     cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                     cache_pos, axis=1)
+            new_cache = (ck, cv)
+            k, v = ck, cv
+    else:
+        k, v = xattn_kv
+        if cos is not None:
+            q = L.apply_rope(q, cos, sin)
+        new_cache = None
+
+    qg = _split_gqa(q, hkv)
+    if kv_cache is not None and s == 1:
+        # decode: mask positions beyond cache_pos
+        t = k.shape[1]
+        mask = (jnp.arange(t)[None, None, :] <= cache_pos)
+        mask = jnp.broadcast_to(mask, (b, 1, t))
+        out = _softmax_attend(qg, k, v, mask)
+    else:
+        out = _attend_chunked(qg, k, v, causal=causal and xattn_kv is None,
+                              q_offset=0)
+    out = out.reshape(b, s, -1, out.shape[-1]).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p.wo.astype(x.dtype))
+    y = constrain(y, "batch", None, None)
+    y = checkpoint_name(y, "blk_out")
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,220 @@
+"""The paper's four benchmark DCNNs as trainable JAX models.
+
+Generators (DCGAN / GP-GAN / 3D-GAN) and the V-Net encoder-decoder all route
+their transposed convolutions through ``repro.core.deconv_nd`` — the paper's
+uniform 2D/3D engine — selectable per call (``method=
+oom|xla|iom|iom_phase|pallas``).  The crop convention matches
+``networks.DeconvLayer`` ((0,1) per dim: exact spatial doubling).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import deconv_nd, networks
+from repro.core.functional import dim_numbers
+from repro.models import layers as L
+from repro.sharding.partition import WS, constrain
+
+
+def _scaled_layers(cfg: ModelConfig) -> list[networks.DeconvLayer]:
+    layers = networks.benchmark_layers(cfg.dcnn)
+    if not cfg.dcnn_reduced:
+        return layers
+    import dataclasses as dc
+    out = []
+    for l in layers:
+        cin = max(4, l.cin // 8)
+        cout = l.cout if l.cout <= 4 else max(4, l.cout // 8)
+        out.append(dc.replace(l, cin=cin, cout=cout))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Generators (DCGAN, GP-GAN, 3D-GAN)
+# ---------------------------------------------------------------------------
+
+def init_generator(cfg: ModelConfig, key):
+    layers = _scaled_layers(cfg)
+    first = layers[0]
+    ks = jax.random.split(key, len(layers) + 1)
+    proj_out = math.prod(first.in_spatial) * first.cin
+    params = {
+        "proj": L.dense_init(ks[0], (cfg.dcnn_z, proj_out), (None, None),
+                             scale=0.02),
+        "deconvs": [],
+    }
+    for i, l in enumerate(layers):
+        params["deconvs"].append({
+            "w": L.dense_init(ks[i + 1], (*l.kernel, l.cin, l.cout),
+                              tuple([None] * l.rank + [None, "model"]),
+                              scale=0.02),
+            "b": L.zeros_init((l.cout,), ("model",)),
+        })
+    return params
+
+
+def generator_forward(params, cfg: ModelConfig, z, method: str = "iom_phase"):
+    """z [B, dz] -> image/volume [B, *spatial, C_out] in (-1, 1)."""
+    layers = _scaled_layers(cfg)
+    first = layers[0]
+    h = jnp.einsum("bz,zp->bp", z, params["proj"].astype(z.dtype))
+    h = h.reshape(h.shape[0], *first.in_spatial, first.cin)
+    h = jax.nn.relu(h)
+    sp0 = "model" if cfg.dcnn_spatial_shard else None
+    h = constrain(h, "batch", sp0, *([None] * first.rank))
+    for i, l in enumerate(layers):
+        p = params["deconvs"][i]
+        h = deconv_nd(h, p["w"].astype(h.dtype), l.stride, 0, method=method)
+        # crop (0,1): exact doubling
+        idx = (slice(None),) + tuple(slice(0, o) for o in l.out_spatial) \
+            + (slice(None),)
+        h = h[idx].astype(z.dtype) + p["b"].astype(z.dtype)
+        h = jnp.tanh(h) if i == len(layers) - 1 else jax.nn.relu(h)
+        h = constrain(h, "batch", sp0, *([None] * l.rank))
+    return h
+
+
+def init_discriminator(cfg: ModelConfig, key):
+    layers = _scaled_layers(cfg)
+    rank = layers[0].rank
+    chans = [layers[-1].cout] + [max(8, layers[-1].cout * (2 ** i))
+                                 for i in range(1, len(layers) + 1)]
+    ks = jax.random.split(key, len(chans))
+    convs = []
+    for i in range(len(chans) - 1):
+        convs.append({
+            "w": L.dense_init(ks[i], (*(3,) * rank, chans[i], chans[i + 1]),
+                              tuple([None] * rank + [None, "model"]),
+                              scale=0.02)})
+    head_in = chans[-1]
+    return {"convs": convs,
+            "head": L.dense_init(ks[-1], (head_in, 1), (None, None),
+                                 scale=0.02)}
+
+
+def discriminator_forward(params, cfg: ModelConfig, x):
+    rank = x.ndim - 2
+    h = x
+    for c in params["convs"]:
+        h = lax.conv_general_dilated(
+            h, c["w"].astype(h.dtype), window_strides=(2,) * rank,
+            padding=[(1, 1)] * rank, dimension_numbers=dim_numbers(rank),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        h = jax.nn.leaky_relu(h, 0.2)
+        h = constrain(h, "batch", *([None] * (rank + 1)))
+    h = jnp.mean(h, axis=tuple(range(1, rank + 1)))       # GAP
+    return jnp.einsum("bc,co->bo", h, params["head"].astype(h.dtype))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# V-Net (encoder-decoder segmenter)
+# ---------------------------------------------------------------------------
+
+VNET_ENC = [(1, 16), (16, 32), (32, 64), (64, 128), (128, 256)]
+
+
+def _vnet_spatial(cfg: ModelConfig):
+    return (32, 32, 16) if cfg.dcnn_reduced else (128, 128, 64)
+
+
+def _vnet_chans(cfg: ModelConfig):
+    if cfg.dcnn_reduced:
+        return [(1, 4), (4, 8), (8, 16), (16, 32), (32, 64)]
+    return VNET_ENC
+
+
+def init_vnet(cfg: ModelConfig, key):
+    enc_spec = _vnet_chans(cfg)
+    n = len(enc_spec)
+    ks = jax.random.split(key, 4 * n + 2)
+    enc = []
+    for i, (ci, co) in enumerate(enc_spec):
+        enc.append({"w": L.dense_init(ks[i], (3, 3, 3, ci, co),
+                                      (None,) * 5, scale=0.05)})
+    dec = []
+    # decoder mirrors: deconv from co -> ci (skip concat) -> conv merge
+    for i, (ci, co) in enumerate(reversed(enc_spec[1:])):
+        j = n + 2 * i
+        dec.append({
+            "up_w": L.dense_init(ks[j], (3, 3, 3, co, ci), (None,) * 5,
+                                 scale=0.05),
+            "merge_w": L.dense_init(ks[j + 1], (3, 3, 3, 2 * ci, ci),
+                                    (None,) * 5, scale=0.05),
+        })
+    head = L.dense_init(ks[-1], (1, 1, 1, enc_spec[0][1], 2), (None,) * 5,
+                        scale=0.05)
+    return {"enc": enc, "dec": dec, "head": head}
+
+
+def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
+    """vol [B, H, W, D, 1] -> logits [B, H, W, D, 2]."""
+    h = vol
+    skips = []
+    for i, c in enumerate(params["enc"]):
+        stride = (1,) * 3 if i == 0 else (2,) * 3
+        h = lax.conv_general_dilated(
+            h, c["w"].astype(h.dtype), window_strides=stride,
+            padding=[(1, 1)] * 3, dimension_numbers=dim_numbers(3),
+            preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = jax.nn.relu(h)
+        h = constrain(h, "batch", None, None, None, None)
+        skips.append(h)
+    skips = skips[:-1]
+    for c, skip in zip(params["dec"], reversed(skips)):
+        h = deconv_nd(h, c["up_w"].astype(h.dtype), 2, 0, method=method)
+        idx = (slice(None),) + tuple(slice(0, s) for s in skip.shape[1:-1]) \
+            + (slice(None),)
+        h = jax.nn.relu(h[idx].astype(vol.dtype))
+        h = jnp.concatenate([h, skip], axis=-1)
+        h = lax.conv_general_dilated(
+            h, c["merge_w"].astype(h.dtype), window_strides=(1,) * 3,
+            padding=[(1, 1)] * 3, dimension_numbers=dim_numbers(3),
+            preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = jax.nn.relu(h)
+        h = constrain(h, "batch", None, None, None, None)
+    logits = lax.conv_general_dilated(
+        h, params["head"].astype(h.dtype), window_strides=(1,) * 3,
+        padding=[(0, 0)] * 3, dimension_numbers=dim_numbers(3),
+        preferred_element_type=jnp.float32)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def gan_losses(gen_params, disc_params, cfg: ModelConfig, z, real,
+               method: str = "iom_phase"):
+    """Non-saturating GAN losses (generator & discriminator)."""
+    fake = generator_forward(gen_params, cfg, z, method)
+    d_fake = discriminator_forward(disc_params, cfg, fake)
+    d_real = discriminator_forward(disc_params, cfg, real)
+
+    def bce(logit, target):
+        return jnp.mean(jnp.maximum(logit, 0) - logit * target
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    g_loss = bce(d_fake, jnp.ones_like(d_fake))
+    d_loss = 0.5 * (bce(d_real, jnp.ones_like(d_real))
+                    + bce(jax.lax.stop_gradient(d_fake),
+                          jnp.zeros_like(d_fake)))
+    return g_loss, d_loss, fake
+
+
+def dice_loss(logits, labels):
+    """labels [B,H,W,D] in {0,1}; logits [B,H,W,D,2]."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)[..., 1]
+    labels = labels.astype(jnp.float32)
+    inter = jnp.sum(probs * labels)
+    denom = jnp.sum(probs) + jnp.sum(labels)
+    dice = 1.0 - 2.0 * inter / jnp.maximum(denom, 1e-6)
+    ce = -jnp.mean(labels * jnp.log(probs + 1e-8)
+                   + (1 - labels) * jnp.log(1 - probs + 1e-8))
+    return dice + ce

@@ -1,0 +1,43 @@
+"""Analysis-mode flag: when UNROLL is set, every structural loop (layer
+scan, attention chunk map, CE chunk scan) unrolls into straight-line HLO so
+``cost_analysis`` counts true totals (XLA counts a while-loop body ONCE
+regardless of trip count — verified; see launch/analysis.py).
+
+Production lowering keeps the loops (compact HLO, fast compiles); the
+dry-run lowers small unrolled probes and extrapolates exactly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled():
+    global UNROLL
+    prev = UNROLL
+    UNROLL = True
+    try:
+        yield
+    finally:
+        UNROLL = prev
+
+
+def maybe_scan(body, carry, xs, jax=None):
+    """lax.scan unless analysis mode; python loop otherwise."""
+    import jax as _jax
+    import jax.numpy as jnp
+    if not UNROLL:
+        return _jax.lax.scan(body, carry, xs)
+    leaves = _jax.tree_util.tree_leaves(xs)
+    n = leaves[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = _jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = _jax.tree_util.tree_map(
+        lambda *zs: jnp.stack([jnp.asarray(z) for z in zs]), *ys)
+    return carry, stacked

@@ -1,0 +1,100 @@
+"""Shared model layers: norms, dense, embeddings, rotary (incl. M-RoPE)."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import WS, constrain
+
+
+def dense_init(key, shape: Sequence[int], logical: Sequence[str | None],
+               scale: float | None = None, dtype=jnp.float32) -> WS:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    v = jax.random.normal(key, tuple(shape), dtype) * scale
+    return WS(v, tuple(logical))
+
+
+def zeros_init(shape, logical, dtype=jnp.float32) -> WS:
+    return WS(jnp.zeros(tuple(shape), dtype), tuple(logical))
+
+
+def ones_init(shape, logical, dtype=jnp.float32) -> WS:
+    return WS(jnp.ones(tuple(shape), dtype), tuple(logical))
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gain.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, gain, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# -- rotary -------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions [...] -> cos/sin [..., head_dim//2] (f32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [B, S, H, hd]; cos/sin [B, S, hd//2] -> rotated x."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_cos_sin(positions3: jax.Array, head_dim: int,
+                  sections: Sequence[int], theta: float):
+    """Qwen2-VL M-RoPE: positions3 [3, B, S] (t, h, w streams); the rotary
+    half-dim is split into ``sections`` (sum == head_dim//2), each section
+    driven by its own position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    cos_parts, sin_parts = [], []
+    start = 0
+    for sec, pos in zip(sections, positions3):
+        f = freqs[start:start + sec]
+        ang = pos.astype(jnp.float32)[..., None] * f
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Vocab-sharded embedding lookup; XLA partitions the gather."""
+    h = jnp.take(table, ids, axis=0)
+    return constrain(h, "batch", None, None)

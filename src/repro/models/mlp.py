@@ -1,0 +1,46 @@
+"""Dense MLP blocks: gated (SwiGLU-family) and plain (GELU / squared-ReLU)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+class MlpParams(NamedTuple):
+    w_in: jax.Array          # [D, F]
+    w_gate: jax.Array | None  # [D, F] (gated only)
+    w_out: jax.Array         # [F, D]
+
+
+def init_mlp(key, cfg: ModelConfig, d_model=None, d_ff=None,
+             gated=None) -> MlpParams:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    gated = cfg.gated_mlp if gated is None else gated
+    ks = jax.random.split(key, 3)
+    return MlpParams(
+        w_in=L.dense_init(ks[0], (d, f), ("fsdp", "model")),
+        w_gate=L.dense_init(ks[1], (d, f), ("fsdp", "model")) if gated else None,
+        w_out=L.dense_init(ks[2], (f, d), ("model", "fsdp")),
+    )
+
+
+def mlp(p: MlpParams, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = L.activation(cfg.mlp_activation)
+    h = jnp.einsum("bsd,df->bsf", x, p.w_in.astype(x.dtype))
+    h = constrain(h, "batch", None, "model")
+    if p.w_gate is not None:
+        g = jnp.einsum("bsd,df->bsf", x, p.w_gate.astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p.w_out.astype(x.dtype))
+    y = constrain(y, "batch", None, None)
+    return checkpoint_name(y, "blk_out")

@@ -1,0 +1,423 @@
+"""Recurrent blocks: a shared chunkwise gated-linear-attention (GLA) engine
+instancing both xLSTM's mLSTM and Mamba-2's SSD, plus the sLSTM step
+recurrence.
+
+All are states of the common form  S_t = exp(ld_t) * S_{t-1} + k_t v_t^T,
+y_t = q_t @ S_t  — computed chunkwise (intra-chunk quadratic with decay
+matrix, inter-chunk scan over states), the standard sub-quadratic schedule.
+``long_500k`` decode is O(1) per token via ``gla_step``.
+
+Numerics note (DESIGN.md): xLSTM's exponential input gate + max-stabiliser
+is replaced by a sigmoid input gate folded into k; all recurrences run in
+f32.  Tests anchor the chunkwise path against the naive per-step recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise GLA engine
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q, k, v, log_decay, chunk: int, state0=None):
+    """q,k [B,S,H,dk]; v [B,S,H,dv]; log_decay [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).  All f32 internally.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    log_decay = log_decay.astype(f32)
+
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ldc = map(to_chunks, (q, k, v, log_decay))
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), f32)
+
+    lower = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, xs):
+        qi, ki, vi, ldi = xs                       # [B,L,H,*]
+        bi = jnp.cumsum(ldi, axis=1)               # inclusive log-decay prefix
+        bl = bi[:, -1]                             # [B,H]
+        # inter-chunk: y += (q_i * exp(b_i)) @ S_prev
+        y_inter = jnp.einsum("blhk,bhkv->blhv", qi * jnp.exp(bi)[..., None],
+                             state)
+        # intra-chunk: att_lm = (q_l . k_m) exp(b_l - b_m), m <= l
+        att = jnp.einsum("blhk,bmhk->bhlm", qi, ki)
+        decay = jnp.exp(bi[:, :, None] - bi[:, None, :])  # [B,L,M,H]
+        att = att * decay.transpose(0, 3, 1, 2)
+        att = jnp.where(lower[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhlm,bmhv->blhv", att, vi)
+        # state update with end-of-chunk decay alignment
+        kscale = ki * jnp.exp(bl[:, None] - bi)[..., None]
+        state = state * jnp.exp(bl)[..., None, None] + \
+            jnp.einsum("bmhk,bmhv->bhkv", kscale, vi)
+        return state, y_inter + y_intra
+
+    from repro.models.flags import maybe_scan
+    state_f, ys = maybe_scan(step, state0, (qc, kc, vc, ldc))
+    y = ys.swapaxes(0, 1).reshape(b, sp, h, dv)[:, :s]
+    return y, state_f
+
+
+def gla_step(state, q, k, v, log_decay):
+    """Single decode step: q,k [B,H,dk]; v [B,H,dv]; log_decay [B,H]."""
+    f32 = jnp.float32
+    state = state * jnp.exp(log_decay.astype(f32))[..., None, None] + \
+        k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), state)
+    return state, y
+
+
+def gla_reference(q, k, v, log_decay, state0=None):
+    """Naive per-step oracle (tests)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = state0 if state0 is not None else jnp.zeros((b, h, dk, dv),
+                                                        jnp.float32)
+    ys = []
+    for t in range(s):
+        state, y = gla_step(state, q[:, t], k[:, t], v[:, t], log_decay[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state
+
+
+def causal_conv1d(x, kernel, cache=None):
+    """x [B,S,C]; kernel [W,C] depthwise causal conv.  With ``cache``
+    ([B,W-1,C]) runs one decode step (S==1) and returns (y, new_cache)."""
+    w = kernel.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)       # [B,W,C]
+        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                       kernel.astype(jnp.float32))[:, None]
+        return y.astype(x.dtype), window[:, 1:]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32)
+            * kernel[i].astype(jnp.float32) for i in range(w))
+    return y.astype(x.dtype), None
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) block
+# ---------------------------------------------------------------------------
+
+class MLstmParams(NamedTuple):
+    norm: jax.Array        # [D]
+    w_up: jax.Array        # [D, 2*Di]
+    conv: jax.Array        # [4, Di]
+    wq: jax.Array          # [Di, H, dk]
+    wk: jax.Array          # [Di, H, dk]
+    wv: jax.Array          # [Di, H, dv]
+    w_gates: jax.Array     # [Di, 2*H]  (input, forget)
+    b_gates: jax.Array     # [2*H]
+    head_norm: jax.Array   # [H, dv]
+    w_down: jax.Array      # [Di, D]
+
+
+def init_mlstm(key, cfg: ModelConfig) -> MLstmParams:
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    dk = dv = di // h
+    ks = jax.random.split(key, 8)
+    return MLstmParams(
+        norm=L.ones_init((d,), (None,)),
+        w_up=L.dense_init(ks[0], (d, 2 * di), ("fsdp", "model")),
+        conv=L.dense_init(ks[1], (4, di), (None, "model"), scale=0.5),
+        wq=L.dense_init(ks[2], (di, h, dk), ("model", None, None)),
+        wk=L.dense_init(ks[3], (di, h, dk), ("model", None, None)),
+        wv=L.dense_init(ks[4], (di, h, dv), ("model", None, None)),
+        w_gates=L.dense_init(ks[5], (di, 2 * h), ("model", None)),
+        b_gates=L.zeros_init((2 * h,), (None,)),
+        head_norm=L.ones_init((h, dv), (None, None)),
+        w_down=L.dense_init(ks[6], (di, d), ("model", "fsdp")),
+    )
+
+
+def _mlstm_qkv(p: MLstmParams, x, cfg, conv_cache=None):
+    h0 = L.rmsnorm(x, p.norm, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h0, p.w_up.astype(x.dtype))
+    di = up.shape[-1] // 2
+    a, z = up[..., :di], up[..., di:]
+    a_c, new_conv = causal_conv1d(a, p.conv, conv_cache)
+    a_c = jax.nn.silu(a_c)
+    dk = p.wq.shape[-1]
+    nh = p.wq.shape[1]
+    # (§Perf xlstm it1 tried fusing q/k/gates into one einsum to merge
+    # psums — REFUTED: the concat/split bookkeeping added MORE collective
+    # traffic than it merged (3.05 -> 3.46 s); reverted, log in
+    # EXPERIMENTS.md §Perf)
+    q = jnp.einsum("bse,ehk->bshk", a_c, p.wq.astype(x.dtype))
+    k = jnp.einsum("bse,ehk->bshk", a_c, p.wk.astype(x.dtype)) / math.sqrt(dk)
+    v = jnp.einsum("bse,ehk->bshk", a, p.wv.astype(x.dtype))
+    gates = jnp.einsum("bse,eg->bsg", a_c.astype(jnp.float32),
+                       p.w_gates.astype(jnp.float32)) + p.b_gates
+    i_g = jax.nn.sigmoid(gates[..., :nh])            # input gate
+    log_f = jax.nn.log_sigmoid(gates[..., nh:] + 3.0)  # forget gate (log)
+    k = k * i_g[..., None].astype(k.dtype)
+    # normalizer channel: extend v with ones
+    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    return q, k, v_ext, log_f, z, new_conv
+
+
+def _mlstm_out(p: MLstmParams, y_ext, z, x, cfg):
+    dv = p.wv.shape[-1]
+    y, n = y_ext[..., :dv], y_ext[..., dv:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = L.rmsnorm(y, p.head_norm, cfg.norm_eps).astype(x.dtype)
+    y = y.reshape(*y.shape[:-2], -1) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_down.astype(x.dtype))
+    out = checkpoint_name(
+        constrain(out, "batch", None, None), "blk_out")
+    return x + out
+
+
+def mlstm_block(p: MLstmParams, x, cfg: ModelConfig, state=None):
+    """Train/prefill: x [B,S,D]; returns (y, (gla_state, conv_tail))."""
+    q, k, v_ext, log_f, z, _ = _mlstm_qkv(p, x, cfg)
+    st0 = state[0] if state is not None else None
+    y_ext, st = gla_chunked(q, k, v_ext, log_f, cfg.ssm_chunk, st0)
+    # conv tail for decode continuation
+    h0 = L.rmsnorm(x, p.norm, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h0, p.w_up.astype(x.dtype))
+    a = up[..., :up.shape[-1] // 2]
+    tail = a[:, -3:]
+    if tail.shape[1] < 3:
+        tail = jnp.pad(tail, ((0, 0), (3 - tail.shape[1], 0), (0, 0)))
+    return _mlstm_out(p, y_ext.astype(x.dtype), z, x, cfg), (st, tail)
+
+
+def mlstm_decode(p: MLstmParams, x, cfg: ModelConfig, state):
+    """x [B,1,D]; state (gla_state [B,H,dk,dv+1], conv_cache [B,3,Di])."""
+    gla_st, conv_cache = state
+    q, k, v_ext, log_f, z, new_conv = _mlstm_qkv(p, x, cfg, conv_cache)
+    st, y = gla_step(gla_st, q[:, 0], k[:, 0], v_ext[:, 0], log_f[:, 0])
+    return _mlstm_out(p, y[:, None].astype(x.dtype), z, x, cfg), (st, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+class SLstmParams(NamedTuple):
+    norm: jax.Array      # [D]
+    w_x: jax.Array       # [D, 4*D] (z, i, f, o pre-activations)
+    w_r: jax.Array       # [H, dh, 4*dh] recurrent (block-diagonal by head)
+    bias: jax.Array      # [4*D]
+    w_mlp_in: jax.Array  # [D, F]
+    w_mlp_gate: jax.Array
+    w_mlp_out: jax.Array
+    norm2: jax.Array
+
+
+def init_slstm(key, cfg: ModelConfig) -> SLstmParams:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f = 2 * d
+    ks = jax.random.split(key, 6)
+    return SLstmParams(
+        norm=L.ones_init((d,), (None,)),
+        w_x=L.dense_init(ks[0], (d, 4 * d), ("fsdp", None)),
+        w_r=L.dense_init(ks[1], (h, dh, 4 * dh), (None, None, None)),
+        bias=L.zeros_init((4 * d,), (None,)),
+        w_mlp_in=L.dense_init(ks[2], (d, f), ("fsdp", "model")),
+        w_mlp_gate=L.dense_init(ks[3], (d, f), ("fsdp", "model")),
+        w_mlp_out=L.dense_init(ks[4], (f, d), ("model", "fsdp")),
+        norm2=L.ones_init((d,), (None,)),
+    )
+
+
+def _slstm_cell(p: SLstmParams, xt, hcn, cfg):
+    """One step: xt [B,D] (pre-projected), state (h, c, n) each [B,D]."""
+    h_prev, c_prev, n_prev = hcn
+    b = xt.shape[0]
+    nh = p.w_r.shape[0]
+    dh = p.w_r.shape[1]
+    hh = h_prev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hdg->bhg", hh, p.w_r.astype(jnp.float32))
+    rec = rec.reshape(b, nh, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * nh * dh)
+    pre = xt + rec + p.bias
+    d = nh * dh
+    z = jnp.tanh(pre[:, :d])
+    i = jax.nn.sigmoid(pre[:, d:2 * d])
+    f = jax.nn.sigmoid(pre[:, 2 * d:3 * d] + 3.0)
+    o = jax.nn.sigmoid(pre[:, 3 * d:])
+    c = f * c_prev + i * z
+    n = f * n_prev + i
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (h, c, n)
+
+
+def slstm_block(p: SLstmParams, x, cfg: ModelConfig, state=None):
+    """x [B,S,D] -> (y, state).  Scan over time (sLSTM is inherently
+    sequential — the paper's sLSTM has no parallel form)."""
+    b, s, d = x.shape
+    h0 = L.rmsnorm(x, p.norm, cfg.norm_eps)
+    xt = jnp.einsum("bsd,dg->bsg", h0.astype(jnp.float32),
+                    p.w_x.astype(jnp.float32))
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros)
+
+    def step(carry, xs):
+        carry = _slstm_cell(p, xs, carry, cfg)
+        return carry, carry[0]
+
+    state_f, hs = jax.lax.scan(step, state, xt.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    x = x + constrain(y, "batch", None, None)
+    # post MLP
+    h2 = L.rmsnorm(x, p.norm2, cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", h2, p.w_mlp_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", h2, p.w_mlp_in.astype(x.dtype))
+    y2 = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                    p.w_mlp_out.astype(x.dtype))
+    return x + constrain(y2, "batch", None, None), state_f
+
+
+def slstm_decode(p: SLstmParams, x, cfg: ModelConfig, state):
+    return slstm_block(p, x, cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block — zamba2
+# ---------------------------------------------------------------------------
+
+class Mamba2Params(NamedTuple):
+    norm: jax.Array
+    w_in: jax.Array      # [D, Di(z) + Di(x) + 2N + H(dt)]
+    conv: jax.Array      # [4, Di + 2N]
+    a_log: jax.Array     # [H]
+    dt_bias: jax.Array   # [H]
+    d_skip: jax.Array    # [H]
+    w_out: jax.Array     # [Di, D]
+
+
+def _m2_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d
+    head_p = 64
+    h = di // head_p
+    n = cfg.ssm_state
+    return d, di, h, head_p, n
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Mamba2Params:
+    d, di, h, hp, n = _m2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return Mamba2Params(
+        norm=L.ones_init((d,), (None,)),
+        w_in=L.dense_init(ks[0], (d, 2 * di + 2 * n + h), ("fsdp", "model")),
+        conv=L.dense_init(ks[1], (4, di + 2 * n), (None, None), scale=0.5),
+        a_log=L.zeros_init((h,), (None,)),
+        dt_bias=L.zeros_init((h,), (None,)),
+        d_skip=L.ones_init((h,), (None,)),
+        w_out=L.dense_init(ks[2], (di, d), ("model", "fsdp")),
+    )
+
+
+def _m2_proj(p: Mamba2Params, x, cfg, conv_cache=None):
+    d, di, h, hp, n = _m2_dims(cfg)
+    h0 = L.rmsnorm(x, p.norm, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h0, p.w_in.astype(x.dtype))
+    z = up[..., :di]
+    xbc = up[..., di:di + di + 2 * n]
+    dt_raw = up[..., di + di + 2 * n:]
+    xbc, new_conv = causal_conv1d(xbc, p.conv, conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    bsz, s = x.shape[:2]
+    xs = xs.reshape(bsz, s, h, hp)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)   # [B,S,H]
+    log_decay = -jnp.exp(p.a_log.astype(jnp.float32)) * dt
+    # roles: q = C, k = B, v = dt * x   (state [N, P] per head)
+    q = jnp.broadcast_to(cmat[:, :, None], (bsz, s, h, n))
+    k = jnp.broadcast_to(bmat[:, :, None], (bsz, s, h, n))
+    v = xs * dt[..., None].astype(xs.dtype)
+    return q, k, v, log_decay, xs, z, new_conv
+
+
+def _m2_out(p: Mamba2Params, y, xs, z, x, cfg):
+    d, di, h, hp, n = _m2_dims(cfg)
+    y = y + xs.astype(jnp.float32) * p.d_skip[None, None, :, None]
+    y = y.reshape(*y.shape[:2], di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out.astype(x.dtype))
+    out = checkpoint_name(
+        constrain(out, "batch", None, None), "blk_out")
+    return x + out
+
+
+def mamba2_block(p: Mamba2Params, x, cfg: ModelConfig, state=None):
+    q, k, v, log_decay, xs, z, _ = _m2_proj(p, x, cfg)
+    st0 = state[0] if state is not None else None
+    y, st = gla_chunked(q, k, v, log_decay, cfg.ssm_chunk, st0)
+    # conv tail for decode continuation
+    tail = _m2_conv_tail(p, x, cfg)
+    return _m2_out(p, y, xs, z, x, cfg), (st, tail)
+
+
+def _m2_conv_tail(p: Mamba2Params, x, cfg):
+    d, di, h, hp, n = _m2_dims(cfg)
+    h0 = L.rmsnorm(x, p.norm, cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h0, p.w_in.astype(x.dtype))
+    xbc = up[..., di:di + di + 2 * n]
+    tail = xbc[:, -3:]
+    if tail.shape[1] < 3:
+        tail = jnp.pad(tail, ((0, 0), (3 - tail.shape[1], 0), (0, 0)))
+    return tail
+
+
+def mamba2_decode(p: Mamba2Params, x, cfg: ModelConfig, state):
+    gla_st, conv_cache = state
+    q, k, v, log_decay, xs, z, new_conv = _m2_proj(p, x, cfg, conv_cache)
+    st, y = gla_step(gla_st, q[:, 0], k[:, 0], v[:, 0], log_decay[:, 0])
+    return _m2_out(p, y[:, None], xs, z, x, cfg), (st, new_conv)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return (z, z, z)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    """Decode-state pytree for one layer of the configured SSM family."""
+    if cfg.ssm_block == "mamba2":
+        d, di, h, hp, n = _m2_dims(cfg)
+        return (jnp.zeros((batch, h, n, hp), jnp.float32),
+                jnp.zeros((batch, 3, di + 2 * n), jnp.bfloat16))
+    if cfg.ssm_block == "xlstm":
+        d = cfg.d_model
+        di = 2 * d
+        h = cfg.n_heads
+        dk = di // h
+        return (jnp.zeros((batch, h, dk, dk + 1), jnp.float32),
+                jnp.zeros((batch, 3, di), jnp.bfloat16))
+    raise ValueError(cfg.ssm_block)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+)
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    dequantize_int8,
+    psum_int8,
+    psum_int8_tree,
+    quantize_int8,
+)

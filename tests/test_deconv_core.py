@@ -1,0 +1,91 @@
+"""Core deconvolution: all methods agree with the naive oracle; Eq. (1);
+MAC accounting; sparsity analytics (paper Fig. 1 claims)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    deconv_macs,
+    deconv_nd,
+    deconv_output_shape,
+    insertion_sparsity,
+    networks,
+    sparsity,
+    zero_insert,
+)
+from repro.kernels.deconv.ref import deconv_loop_oracle
+
+CASES = [
+    # rank, I, K, S, P, ci, co
+    (1, (5,), (3,), (2,), 0, 4, 3),
+    (2, (4, 5), (3, 3), (2, 2), 1, 3, 2),
+    (2, (4, 4), (3, 3), (1, 1), 0, 2, 2),
+    (2, (3, 3), (4, 4), (2, 2), 1, 2, 3),
+    (2, (5, 3), (2, 3), (3, 2), 0, 1, 1),
+    (3, (3, 4, 3), (3, 3, 3), (2, 2, 2), 1, 2, 2),
+    (3, (2, 3, 4), (4, 3, 2), (2, 3, 1), 0, 3, 2),
+    (3, (4, 4, 4), (3, 3, 3), (2, 2, 2), 0, 2, 4),
+]
+
+
+@pytest.mark.parametrize("rank,I,K,S,P,ci,co", CASES)
+@pytest.mark.parametrize("method", ["oom", "xla", "iom", "iom_phase"])
+def test_methods_match_oracle(rng, rank, I, K, S, P, ci, co, method):
+    x = jnp.asarray(rng.randn(2, *I, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(*K, ci, co), jnp.float32)
+    ref = np.asarray(deconv_loop_oracle(x, w, S, P))
+    got = np.asarray(deconv_nd(x, w, S, P, method=method))
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_eq1_shape_law():
+    # paper Eq.(1): O = (I-1)*S + K per dim
+    for I, K, S in itertools.product([(4, 4), (3, 5)], [(3, 3), (2, 4)],
+                                     [(2, 2), (1, 3)]):
+        out = deconv_output_shape(I, K, S, 0)
+        assert out == tuple((i - 1) * s + k for i, k, s in zip(I, K, S))
+
+
+def test_zero_insert_structure(rng):
+    x = jnp.asarray(rng.randn(1, 3, 4, 2), jnp.float32)
+    xd = np.asarray(zero_insert(x, (2, 3)))
+    assert xd.shape == (1, 5, 10, 2)
+    np.testing.assert_allclose(xd[:, ::2, ::3], np.asarray(x))
+    mask = np.ones_like(xd, bool)
+    mask[:, ::2, ::3] = False
+    assert np.all(xd[mask] == 0)
+
+
+def test_mac_accounting_s_cubed():
+    iom = deconv_macs((8, 8, 8), (3, 3, 3), 64, 32, method="iom",
+                      stride=(2, 2, 2))
+    oom = deconv_macs((8, 8, 8), (3, 3, 3), 64, 32, method="oom",
+                      stride=(2, 2, 2))
+    # paper: OOM executes ~S^d x the valid MACs (border raises it slightly)
+    assert 8.0 <= oom / iom <= 12.0
+
+
+def test_fig1_sparsity_3d_exceeds_2d():
+    table = sparsity.fig1_table()
+    s2 = np.mean([s for _, s in table["dcgan"]])
+    s3 = np.mean([s for _, s in table["3d_gan"]])
+    assert s3 > s2 > 0.5          # the paper's Fig. 1 ordering
+    # interior sparsity: 1 - 1/S^d
+    assert abs(sparsity.interior_sparsity((2, 2)) - 0.75) < 1e-9
+    assert abs(sparsity.interior_sparsity((2, 2, 2)) - 0.875) < 1e-9
+
+
+def test_network_specs_double_spatially():
+    for name in networks.BENCHMARKS:
+        for l in networks.benchmark_layers(name):
+            assert l.out_spatial == tuple(2 * v for v in l.in_spatial)
+
+
+def test_insertion_sparsity_bounds():
+    s = insertion_sparsity((4, 4), (3, 3), (2, 2))
+    assert 0.75 < s < 1.0

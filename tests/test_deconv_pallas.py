@@ -1,0 +1,101 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps, gradients, blocking
+and the spatial-split fallback (interpret mode on CPU)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deconv import deconv, deconv_reference
+from repro.kernels.deconv import ops as deconv_ops
+from repro.kernels.deconv.kernel import vmem_bytes
+
+SHAPES = [
+    (2, (4, 4), (3, 3), (2, 2), 1, 7, 5),
+    (1, (8, 8), (3, 3), (2, 2), 0, 16, 8),
+    (2, (3, 4, 3), (3, 3, 3), (2, 2, 2), 1, 5, 3),
+    (1, (4, 4, 4), (3, 3, 3), (2, 2, 2), 0, 8, 8),
+    (2, (5, 3), (2, 3), (3, 2), 0, 3, 2),
+    (1, (6,), (3,), (2,), 0, 4, 4),
+    (1, (2, 3, 4), (4, 3, 2), (2, 3, 1), 0, 3, 2),
+    (1, (4, 4), (5, 5), (2, 2), 2, 4, 4),
+    (3, (7, 5), (3, 3), (2, 2), 1, 6, 9),   # non-pow2 channels -> padding
+]
+
+
+@pytest.mark.parametrize("n,I,K,S,P,ci,co", SHAPES)
+def test_pallas_matches_oracle_f32(rng, n, I, K, S, P, ci, co):
+    x = jnp.asarray(rng.randn(n, *I, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(*K, ci, co), jnp.float32)
+    ref = deconv_reference(x, w, S, P)
+    got = deconv(x, w, S, P)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 3e-2)])
+def test_pallas_dtypes(rng, dtype, tol):
+    x = jnp.asarray(rng.randn(2, 4, 4, 8), dtype)
+    w = jnp.asarray(rng.randn(3, 3, 8, 8) * 0.2, dtype)
+    ref = np.asarray(deconv_reference(x.astype(jnp.float32),
+                                      w.astype(jnp.float32), 2, 1))
+    got = np.asarray(deconv(x, w, 2, 1)).astype(np.float32)
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * 3)
+
+
+def test_pallas_gradients_match_reference(rng):
+    x = jnp.asarray(rng.randn(2, 4, 4, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4), jnp.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(deconv(x, w, 2, 1)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(deconv_reference(x, w, 2, 1)))
+
+    gp = jax.grad(f_pallas, (0, 1))(x, w)
+    gr = jax.grad(f_ref, (0, 1))(x, w)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_spatial_split_fallback(rng):
+    """Oversized leading spatial dim is split into disjoint input tiles
+    whose partial outputs overlap-add outside the kernel."""
+    x = jnp.asarray(rng.randn(1, 16, 8, 8, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4, 4), jnp.float32)
+    ref = deconv_reference(x, w, 2, 1)
+    got = deconv_ops._deconv_fwd_impl(x, w, 2, 1, None, None, True,
+                                      max_tile_bytes=64 * 1024)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_choice_respects_vmem():
+    bci, bco = deconv_ops.choose_blocks((16, 16, 16), (3, 3, 3), (2, 2, 2),
+                                        256, 256, vmem_budget=4 << 20)
+    assert vmem_bytes((16, 16, 16), (3, 3, 3), (2, 2, 2), bci, bco) <= 4 << 20
+    assert bci >= 8 and bco >= 8
+
+
+def test_explicit_blocks(rng):
+    x = jnp.asarray(rng.randn(1, 8, 8, 32), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 32, 16), jnp.float32)
+    ref = deconv_reference(x, w, 2, 0)
+    for bci, bco in [(8, 8), (16, 16), (32, 8)]:
+        got = deconv(x, w, 2, 0, block_ci=bci, block_co=bco)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_jit_and_vmap_compose(rng):
+    x = jnp.asarray(rng.randn(2, 4, 4, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 4, 4), jnp.float32)
+    f = jax.jit(lambda x, w: deconv(x, w, 2, 1))
+    np.testing.assert_allclose(np.asarray(f(x, w)),
+                               np.asarray(deconv_reference(x, w, 2, 1)),
+                               rtol=1e-4, atol=1e-4)

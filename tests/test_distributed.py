@@ -1,0 +1,156 @@
+"""Distributed behaviours on multi-device host meshes.  Each test runs in a
+subprocess with its own XLA_FLAGS device count (jax pins device count at
+first init, so the main pytest process stays single-device)."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(script: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_executes():
+    """Reduced llama, (4 data x 2 model) mesh: one REAL sharded train step
+    (not just a compile)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, SHAPES
+        from repro.launch import steps as ST
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import AdamWConfig, adamw_init
+        mesh = make_host_mesh(model=2)
+        cfg = get_config("llama3_2_1b").reduced()
+        opt = AdamWConfig()
+        with mesh:
+            params, logical = ST.real_params(cfg, jax.random.PRNGKey(0))
+            from repro.sharding.partition import param_shardings
+            shard = param_shardings(mesh, params, logical, cfg.fsdp)
+            params = jax.tree_util.tree_map(jax.device_put, params, shard)
+            opt_state = adamw_init(params, opt)
+            step = jax.jit(ST.make_train_step(cfg, opt),
+                           donate_argnums=(0, 1))
+            batch = {"tokens": jnp.zeros((8, 64), jnp.int32),
+                     "labels": jnp.ones((8, 64), jnp.int32)}
+            params, opt_state, m = step(params, opt_state, batch)
+            l1 = float(m["loss"])
+            for _ in range(3):
+                params, opt_state, m = step(params, opt_state, batch)
+            l2 = float(m["loss"])
+        assert l2 < l1, (l1, l2)
+        print("OK", l1, l2)
+    """)
+    assert "OK" in out
+
+
+def test_dp_trainer_int8_compression_converges():
+    """shard_map DP with int8 gradient all-reduce + error feedback reaches
+    the fp32 loss on a toy regression (8-way data parallel)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import AdamWConfig, adamw_init
+        from repro.runtime.dp_trainer import make_dp_train_step, \\
+            init_error_state
+        mesh = make_host_mesh(model=1)          # (8 data,)
+        rng = np.random.RandomState(0)
+        A = jnp.asarray(rng.randn(64, 16), jnp.float32)
+        t = jnp.asarray(rng.randn(16), jnp.float32)
+        y = A @ t
+
+        def loss_fn(params, batch):
+            xb, yb = batch
+            return jnp.mean((xb @ params["w"] - yb) ** 2)
+
+        results = {}
+        for compress in (False, True):
+            params = {"w": jnp.zeros(16)}
+            opt = AdamWConfig(lr=0.05, weight_decay=0.0)
+            opt_state = adamw_init(params, opt)
+            err = init_error_state(params, 8)
+            step = make_dp_train_step(loss_fn, opt, mesh, compress=compress)
+            batch = (A, y)
+            for i in range(150):
+                params, opt_state, err, l = step(params, opt_state, err,
+                                                 batch)
+            results[compress] = float(l)
+        print("LOSSES", results)
+        assert results[True] < 1e-2, results
+        assert abs(results[True] - results[False]) < 5e-2, results
+    """)
+    assert "LOSSES" in out
+
+
+def test_elastic_checkpoint_rescale():
+    """Save sharded over 8 devices -> restore onto a 4-device mesh (values
+    identical; shardings re-derived)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        _run(f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.checkpoint import Checkpointer
+            mesh = jax.make_mesh((8,), ("data",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            x = jnp.arange(64.0).reshape(8, 8)
+            x = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+            ck = Checkpointer("{td}", async_save=False)
+            ck.save(3, {{"x": x}})
+            print("SAVED")
+        """, devices=8)
+        out = _run(f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.checkpoint import Checkpointer
+            mesh = jax.make_mesh((4,), ("data",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            ck = Checkpointer("{td}", async_save=False)
+            template = {{"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+            sh = {{"x": NamedSharding(mesh, P("data", None))}}
+            t = ck.restore(3, template, shardings=sh)
+            np.testing.assert_array_equal(np.asarray(t["x"]),
+                                          np.arange(64.0).reshape(8, 8))
+            assert len(t["x"].sharding.device_set) == 4
+            print("RESTORED_ON_4")
+        """, devices=4)
+        assert "RESTORED_ON_4" in out
+
+
+def test_production_mesh_cell_compiles():
+    """End-to-end dry-run machinery on the real multi-pod mesh shape with a
+    reduced arch (fast): lower + compile + memory/cost analysis succeed."""
+    out = _run("""
+        import os
+        import jax, dataclasses
+        from repro.configs import get_config, SHAPES
+        from repro.launch import steps as ST
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=True)
+        assert mesh.shape == {"pod": 2, "data": 16, "model": 16}
+        cfg = get_config("llama3_2_1b").reduced()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128,
+                                    global_batch=64)
+        with mesh:
+            b = ST.build_bundle(cfg, shape, mesh)
+            c = jax.jit(b.fn, in_shardings=b.in_shardings,
+                        out_shardings=b.out_shardings).lower(*b.args).compile()
+            ca = c.cost_analysis()
+            assert ca.get("flops", 0) > 0
+            print("MULTIPOD_OK", c.memory_analysis().temp_size_in_bytes)
+    """, devices=512, timeout=560)
+    assert "MULTIPOD_OK" in out

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import deconv_nd, deconv_output_shape
+from repro.core.functional import dim_numbers, _flip_spatial
+from repro.kernels.deconv import deconv
+
+dims = st.integers(min_value=2, max_value=5)
+kernels = st.integers(min_value=1, max_value=4)
+strides = st.integers(min_value=1, max_value=3)
+chans = st.integers(min_value=1, max_value=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(i1=dims, i2=dims, k=kernels, s=strides, ci=chans, co=chans,
+       seed=st.integers(0, 2 ** 16))
+def test_iom_equals_oom_2d(i1, i2, k, s, ci, co, seed):
+    """IOM eliminates only invalid (zero) MACs — results identical to the
+    zero-inserted dense convolution for ANY geometry."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, i1, i2, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(k, k, ci, co), jnp.float32)
+    a = np.asarray(deconv_nd(x, w, s, 0, method="oom"))
+    b = np.asarray(deconv_nd(x, w, s, 0, method="iom_phase"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(i1=dims, k=kernels, s=strides, ci=chans, co=chans,
+       seed=st.integers(0, 2 ** 16))
+def test_pallas_matches_oom_any_geometry(i1, k, s, ci, co, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, i1, i1, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(k, k, ci, co), jnp.float32)
+    a = np.asarray(deconv_nd(x, w, s, 0, method="oom"))
+    b = np.asarray(deconv(x, w, s, 0))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(i1=dims, i2=dims, k=kernels, s=strides, seed=st.integers(0, 2 ** 16))
+def test_linearity(i1, i2, k, s, seed):
+    """Deconvolution is linear in both x and w."""
+    rng = np.random.RandomState(seed)
+    x1 = jnp.asarray(rng.randn(1, i1, i2, 2), jnp.float32)
+    x2 = jnp.asarray(rng.randn(1, i1, i2, 2), jnp.float32)
+    w = jnp.asarray(rng.randn(k, k, 2, 3), jnp.float32)
+    a = np.asarray(deconv_nd(x1 + 2.0 * x2, w, s, 0, method="iom_phase"))
+    b = np.asarray(deconv_nd(x1, w, s, 0, method="iom_phase")) + \
+        2.0 * np.asarray(deconv_nd(x2, w, s, 0, method="iom_phase"))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(i1=dims, i2=dims, k=kernels, seed=st.integers(0, 2 ** 16))
+def test_stride1_deconv_is_full_convolution(i1, i2, k, seed):
+    """With S=1 there are no inserted zeros: deconv == full convolution."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, i1, i2, 2), jnp.float32)
+    w = jnp.asarray(rng.randn(k, k, 2, 2), jnp.float32)
+    got = np.asarray(deconv_nd(x, w, 1, 0, method="iom_phase"))
+    full = lax.conv_general_dilated(
+        x, _flip_spatial(w), (1, 1), padding=[(k - 1, k - 1)] * 2,
+        dimension_numbers=dim_numbers(2))
+    np.testing.assert_allclose(got, np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(i1=dims, i2=dims, k=kernels, s=strides, seed=st.integers(0, 2 ** 16))
+def test_deconv_is_conv_adjoint(i1, i2, k, s, seed):
+    """<deconv(x), y> == <x, conv(y)> — transposed convolution is the
+    adjoint of the strided convolution (the paper's 'final result equals
+    traditional convolution on the zero-inserted map' restated)."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, i1, i2, 2), jnp.float32)
+    w = jnp.asarray(rng.randn(k, k, 2, 3), jnp.float32)
+    dx = deconv_nd(x, w, s, 0, method="iom_phase")         # [1, O, O', 3]
+    y = jnp.asarray(rng.randn(*dx.shape), jnp.float32)
+    lhs = jnp.sum(dx * y)
+    # conv(y) with the same kernel, stride s, VALID: maps y back to x-space
+    conv_y = lax.conv_general_dilated(
+        y, jnp.swapaxes(w, -1, -2), (s, s), padding="VALID",
+        dimension_numbers=dim_numbers(2))
+    rhs = jnp.sum(x * conv_y)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(i=st.integers(1, 64), k=st.integers(1, 7), s=st.integers(1, 4),
+       p=st.integers(0, 2))
+def test_shape_law_eq1(i, k, s, p):
+    out = deconv_output_shape((i,), (k,), (s,), (p,))[0]
+    assert out == (i - 1) * s + k - 2 * p
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 2 ** 16), bits=st.sampled_from([32, 8]))
+def test_adamw_descends_quadratic(seed, bits):
+    """Optimizer invariant: AdamW (fp32 or 8-bit states) reduces a convex
+    quadratic loss.  (8-bit moments quantise per-tensor, so progress on a
+    pathological seed can be slower — the invariant is monotone-ish
+    descent, checked with generous steps/threshold.)"""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    rng = np.random.RandomState(seed)
+    target = jnp.asarray(rng.randn(16), jnp.float32)
+    params = {"w": jnp.zeros(16)}
+    opt = AdamWConfig(lr=0.05, weight_decay=0.0, state_bits=bits)
+    state = adamw_init(params, opt)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, opt)
+    assert float(loss(params)) < 0.3 * l0 + 1e-3
