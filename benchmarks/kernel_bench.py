@@ -1,6 +1,7 @@
 """Pallas-kernel microbenchmark (interpret mode on CPU): per-method
-wall-time on downsized paper layers + VMEM working-set report for the real
-layer geometry (the TPU-relevant structural number)."""
+wall-time on downsized paper layers, the fused multi-tile grid vs the seed's
+stitched Python-loop overlap-add, and the tiling planner's decisions for
+the real layer geometry (the TPU-relevant structural numbers)."""
 
 import dataclasses as dc
 import time
@@ -11,8 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks
-from repro.core.functional import deconv_nd
-from repro.kernels.deconv import choose_blocks
+from repro.core.functional import deconv_nd, deconv_output_shape
+from repro.core.tiling import plan_deconv_tiles
+from repro.kernels.deconv import ops as deconv_ops
 from repro.kernels.deconv.kernel import vmem_bytes
 
 
@@ -40,14 +42,67 @@ def run() -> list[str]:
                                                          0, method=m))
             us = _time(f, x, w)
             rows.append(f"kernel_{name}_{method},{us:.0f},")
-    # VMEM working set for the REAL layer geometry at the chosen blocking
+    rows += _split_path_rows(rng)
+    # Planner decision + VMEM working set for the REAL layer geometry.  The
+    # lift matches ops.py: the large dim leads (2D -> [H, 1, W]).
     for name, lay in (("2d", networks.benchmark_layers("dcgan")[1]),
                       ("3d", networks.benchmark_layers("3d_gan")[1])):
-        sp3 = (1,) * (3 - lay.rank) + lay.in_spatial
-        k3 = (1,) * (3 - lay.rank) + lay.kernel
-        s3 = (1,) * (3 - lay.rank) + lay.stride
-        bci, bco = choose_blocks(sp3, k3, s3, lay.cin, lay.cout)
-        vb = vmem_bytes(sp3, k3, s3, bci, bco)
+        if lay.rank == 2:
+            sp3 = (lay.in_spatial[0], 1, lay.in_spatial[1])
+            k3 = (lay.kernel[0], 1, lay.kernel[1])
+            s3 = (lay.stride[0], 1, lay.stride[1])
+        else:
+            sp3, k3, s3 = lay.in_spatial, lay.kernel, lay.stride
+        plan = plan_deconv_tiles(sp3, k3, s3, lay.cin, lay.cout)
+        vb = vmem_bytes(sp3, k3, s3, plan.block_ci, plan.block_co,
+                        dtile=plan.dtile)
         rows.append(f"kernel_vmem_bytes/{name},0,{vb}")
-        rows.append(f"kernel_blocks/{name},0,{bci}x{bco}")
+        rows.append(f"kernel_blocks/{name},0,{plan.block_ci}x{plan.block_co}")
+        rows.append(f"kernel_plan/{name},0,{plan.describe()}")
     return rows
+
+
+def _stitched_baseline(x3, w3, stride3, plan, interpret=True):
+    """The seed's pre-fusion path, reconstructed as the benchmark baseline:
+    one ``pallas_call`` per leading-dim tile, partial outputs overlap-added
+    OUTSIDE the grid via dynamic_update_slice (serial tiles, HBM
+    round-trips)."""
+    kernel3 = w3.shape[:3]
+    out3 = deconv_output_shape(x3.shape[1:4], kernel3, stride3, 0)
+    y3 = jnp.zeros((x3.shape[0], *out3, w3.shape[-1]), jnp.float32)
+    d, s0 = x3.shape[1], stride3[0]
+    for t0 in range(0, d, plan.dtile):
+        xt = x3[:, t0:min(t0 + plan.dtile, d)]
+        yt = deconv_ops._core_call(xt, w3, stride3, kernel3,
+                                   plan.block_ci, plan.block_co, interpret)
+        o0 = t0 * s0
+        y3 = jax.lax.dynamic_update_slice(
+            y3,
+            jax.lax.dynamic_slice(
+                y3, (0, o0, 0, 0, 0),
+                (y3.shape[0], yt.shape[1], *y3.shape[2:]))
+            + yt.astype(y3.dtype),
+            (0, o0, 0, 0, 0))
+    return y3
+
+
+def _split_path_rows(rng) -> list[str]:
+    """Fused 4D grid vs the stitched loop on a forced-split geometry."""
+    budget = 96 * 1024
+    in_sp, k, s, ci, co = (24, 8, 8), (3, 3, 3), (2, 2, 2), 8, 8
+    x = jnp.asarray(rng.randn(1, *in_sp, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(*k, ci, co), jnp.float32)
+    plan = plan_deconv_tiles(in_sp, k, s, ci, co, vmem_budget=budget)
+    assert plan.n_dtiles > 1, plan
+
+    fused = jax.jit(lambda x, w: deconv_ops._deconv_fwd_impl(
+        x, w, s, 0, None, None, True, max_tile_bytes=budget))
+    stitched = jax.jit(lambda x, w: _stitched_baseline(x, w, s, plan))
+    np.testing.assert_allclose(np.asarray(fused(x, w)),
+                               np.asarray(stitched(x, w)),
+                               rtol=1e-4, atol=1e-4)
+    return [
+        f"kernel_split_fused,{_time(fused, x, w):.0f},{plan.describe()}",
+        f"kernel_split_stitched,{_time(stitched, x, w):.0f},"
+        f"tiles{plan.n_dtiles}",
+    ]

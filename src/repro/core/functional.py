@@ -27,7 +27,12 @@ Four implementations, all bit-identical (tested):
                  input with the sub-kernel W_p[m] = W[m*S + p]; phases are
                  interleaved by strided writes.  Exactly the IOM MAC count.
     pallas     — the Pallas kernel (see repro.kernels.deconv), dispatched via
-                 this module's ``deconv_nd`` for uniform access.
+                 this module's ``deconv_nd`` for uniform access.  Any input
+                 size runs as ONE fused pallas_call: the unified planner
+                 (repro.core.tiling.plan_deconv_tiles) blocks the leading
+                 spatial dim into grid tiles that exchange their overlap-add
+                 halo in-kernel; ``max_tile_bytes`` (forwarded via **kw)
+                 overrides the per-step VMEM budget.
 """
 
 from __future__ import annotations

@@ -130,6 +130,89 @@ def network_summary(name: str) -> dict:
     }
 
 
+# -- Unified deconv tiling planner (Pallas kernel) ---------------------------
+
+# default VMEM budget the planner targets per grid step
+DECONV_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvTilePlan:
+    """Joint (leading-dim tile, channel blocks) decision for one deconv call.
+
+    ``dtile`` input rows of the (lifted) leading spatial dim are resident
+    per grid step; ``n_dtiles`` is the grid extent of the sequential tile
+    dimension (1 = the whole input is a single resident tile).  The fused
+    kernel serves every plan with ONE ``pallas_call``; adjacent tiles
+    exchange their overlap-add halo in-grid (see kernels/deconv/kernel.py).
+    ``step_vmem_bytes`` is the modeled per-step working set the decision was
+    made against — benchmarks report it alongside timings.
+    """
+    dtile: int
+    n_dtiles: int
+    block_ci: int
+    block_co: int
+    step_vmem_bytes: int
+    vmem_budget: int
+
+    @property
+    def split(self) -> bool:
+        return self.n_dtiles > 1
+
+    def describe(self) -> str:
+        return (f"dtile{self.dtile}x{self.n_dtiles}"
+                f"_ci{self.block_ci}_co{self.block_co}"
+                f"_vmem{self.step_vmem_bytes}")
+
+
+def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
+                      vmem_budget: int = DECONV_VMEM_BUDGET,
+                      block_ci: int | None = None,
+                      block_co: int | None = None,
+                      allow_split: bool = True,
+                      in_dtype_bytes: int = 2) -> DeconvTilePlan:
+    """Jointly pick ``(dtile, block_ci, block_co)`` against the VMEM budget.
+
+    Preference order follows the paper's blocking: keep channel parallelism
+    (Tm/Tn -> MXU-wide 128-channel blocks) and shrink the spatial tile
+    (Tz/Tr/Tc -> dtile) first; only when even ``dtile == 1`` exceeds the
+    budget do channel blocks halve (block_co before block_ci, floor 8).
+    Explicit ``block_ci``/``block_co`` pin the channel blocks, so only the
+    spatial tile adapts.  ``allow_split=False`` pins ``n_dtiles == 1`` and
+    reproduces the channels-only shrink of the old ``choose_blocks``.
+
+    The planned leading extent includes ``ceil(K_d/S_d) - 1`` rows of zero
+    slack so the final tile's halo carry-out is structurally zero (the
+    kernel's contract); ``n_dtiles * dtile`` always covers it.
+    """
+    from repro.kernels.deconv import kernel as _k  # local: avoids a cycle
+
+    d = in_spatial[0]
+    d_eff = d + _k.halo_depth(kernel, stride)
+    bci = block_ci or min(cin, 128)
+    bco = block_co or min(cout, 128)
+
+    def step_bytes(dt, ci, co):
+        return _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
+                             in_dtype_bytes, dtile=dt)
+
+    dtile = d_eff
+    if allow_split:
+        while dtile > 1 and step_bytes(dtile, bci, bco) > vmem_budget:
+            dtile = -(-dtile // 2)
+    if block_co is None:
+        while step_bytes(dtile, bci, bco) > vmem_budget and bco > 8:
+            bco //= 2
+    if block_ci is None:
+        while step_bytes(dtile, bci, bco) > vmem_budget and bci > 8:
+            bci //= 2
+    n_dt = -(-d_eff // dtile)
+    return DeconvTilePlan(dtile=dtile, n_dtiles=n_dt,
+                          block_ci=bci, block_co=bco,
+                          step_vmem_bytes=step_bytes(dtile, bci, bco),
+                          vmem_budget=vmem_budget)
+
+
 # -- TPU mapping -------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

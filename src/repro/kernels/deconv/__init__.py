@@ -1,3 +1,7 @@
+from repro.core.tiling import (  # noqa: F401
+    DeconvTilePlan,
+    plan_deconv_tiles,
+)
 from repro.kernels.deconv.ops import deconv, choose_blocks  # noqa: F401
 from repro.kernels.deconv.ref import (  # noqa: F401
     deconv_loop_oracle,

@@ -1,23 +1,41 @@
 """Pallas TPU kernel: uniform 2D/3D IOM deconvolution (polyphase form).
 
-Maps the paper's PE mesh onto the TPU memory hierarchy:
+Maps the paper's PE mesh onto the TPU memory hierarchy with a fused 4D grid
 
-  * grid = (N, Cout/block_co, Cin/block_ci); the innermost (sequential) Cin
+    grid = (N, Cout/block_co, n_dtiles, Cin/block_ci)
+
+  * the two leading dimensions are parallel (independent batch / out-channel
+    blocks); the two trailing ones are sequential.  The innermost Cin
     dimension is the paper's adder tree — partial products accumulate into a
     VMEM f32 scratch (`@pl.when(ci == 0)` zero-init, write-out at the last
     Cin step).
-  * one MXU matmul per kernel tap: x_flat [D*H*W, bci] @ w_tap [bci, bco];
-    taps across all phases number exactly K^d — the IOM valid-MAC count.
-    No inserted zero is ever touched.
-  * the overlap-add (paper: FIFO-V/H/D exchange between PEs) is a shifted
-    in-VMEM accumulation into the per-phase buffer; phases interleave into
-    the output by a reshape/transpose at write-out.
-  * 2D is the degenerate case D=1 (depth phase/tap loops statically collapse
-    to one iteration — the paper's "FIFO-D disabled").
+  * the leading spatial dim is blocked into ``n_dtiles`` tiles of ``dtile``
+    input rows each, all served by this single ``pallas_call``: the paper's
+    spatial blocking (Tz/Tr/Tc) lives *inside* the accelerator grid instead
+    of a Python loop around it.
+  * adjacent d-tiles overlap in the output by ``ceil(K_d/S_d) - 1`` phase
+    rows.  That overlap — the paper's FIFO-D exchange between PE planes — is
+    carried through a VMEM halo scratch: tile ``t`` overlap-adds the tail of
+    tile ``t-1`` into the head of its accumulator and deposits its own tail
+    for tile ``t+1``.  The carry composes recursively, so halos deeper than
+    one tile (K_d ≫ S_d·dtile) propagate correctly.  Each tile then owns a
+    disjoint ``dtile·S_d``-row slab of the output: no HBM round-trip, no
+    outside stitching.
+  * one MXU matmul per kernel tap: x_flat [dtile*H*W, bci] @ w_tap
+    [bci, bco]; taps across all phases number exactly K^d — the IOM
+    valid-MAC count.  No inserted zero is ever touched.
+  * the in-tile overlap-add (paper: FIFO-V/H exchange) is a shifted in-VMEM
+    accumulation into the per-phase buffer; phases interleave into the
+    output by a reshape/transpose at write-out.
+  * 2D is the degenerate case of a singleton middle dim (depth phase/tap
+    loops statically collapse — the paper's "FIFO-D disabled"); ``ops.py``
+    lifts 2D inputs as [N, H, 1, W, C] so the large image dim lands on the
+    tileable leading axis.
 
-All spatial extents live in VMEM per grid step (the paper likewise holds the
-blocked tile on-chip); `ops.py` splits oversized inputs into halo-free
-disjoint spatial tiles and overlap-adds the partial outputs outside.
+The caller (``ops.py``) zero-pads the leading dim to ``n_dtiles * dtile``
+with at least ``ceil(K_d/S_d) - 1`` rows of slack, which makes the final
+tile's carry-out provably zero; the blocking decision itself comes from the
+unified planner in ``repro.core.tiling.plan_deconv_tiles``.
 """
 
 from __future__ import annotations
@@ -32,6 +50,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# JAX 0.4.x exposes TPUCompilerParams; newer JAX renamed it CompilerParams.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _phase_geometry(kernel, stride):
     """Static geometry: M_max (taps per phase per dim) and acc lengths."""
@@ -39,26 +61,34 @@ def _phase_geometry(kernel, stride):
     return m_max
 
 
-def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, *,
-                        in_spatial, kernel, stride, out_spatial,
-                        n_ci_blocks, out_dtype):
-    """One grid step: accumulate a (batch, co-block, ci-block) contribution.
+def halo_depth(kernel, stride) -> int:
+    """Phase rows adjacent leading-dim tiles exchange (FIFO-D carry depth)."""
+    return -(-kernel[0] // stride[0]) - 1
 
-    x_ref:  [1, D, H, W, bci]
-    w_ref:  [Kpad_d, Kpad_h, Kpad_w, bci, bco]   (zero-padded to M_max*S)
-    o_ref:  [1, OD, OH, OW, bco]
-    acc_ref: VMEM f32 [n_phases, L_d, L_h, L_w, bco]
+
+def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
+                        tile_spatial, kernel, stride, out_trailing,
+                        n_ci_blocks, out_dtype):
+    """One grid step: accumulate a (batch, co-block, d-tile, ci-block) part.
+
+    x_ref:   [1, dtile, H, W, bci]
+    w_ref:   [Kpad_d, Kpad_h, Kpad_w, bci, bco]   (zero-padded to M_max*S)
+    o_ref:   [1, dtile*S_d, OH, OW, bco]          (this tile's output slab)
+    acc_ref: VMEM f32 [n_phases, dtile + M_d - 1, L_h, L_w, bco]
+    halo_ref: VMEM f32 [n_phases, M_d - 1, L_h, L_w, bco] (None if M_d == 1)
     """
-    ci = pl.program_id(2)
+    dt = pl.program_id(2)
+    ci = pl.program_id(3)
     m_max = _phase_geometry(kernel, stride)
-    lengths = tuple(i + m - 1 for i, m in zip(in_spatial, m_max))
+    halo = halo_depth(kernel, stride)
+    dtile = tile_spatial[0]
 
     @pl.when(ci == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[0]                                    # [D, H, W, bci]
-    dhw = math.prod(in_spatial)
+    x = x_ref[0]                                    # [dtile, H, W, bci]
+    dhw = math.prod(tile_spatial)
     bci = x.shape[-1]
     x_flat = x.reshape(dhw, bci)
 
@@ -72,88 +102,138 @@ def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, *,
             contrib = jax.lax.dot_general(
                 x_flat, w_tap, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
-            contrib = contrib.reshape(*in_spatial, -1)
+            contrib = contrib.reshape(*tile_spatial, -1)
             # overlap-add: y_p[q] += x[q - m] * w_tap  ->  slice offset m
             idx = (p_idx,) + tuple(slice(mj, mj + ij)
-                                   for mj, ij in zip(m, in_spatial))
+                                   for mj, ij in zip(m, tile_spatial))
             acc_ref[idx] += contrib
+
+    if halo:
+        # FIFO-D exchange, in-grid: the previous tile's tail rows
+        # overlap-add into the head of this tile's accumulator ...
+        @pl.when(jnp.logical_and(ci == n_ci_blocks - 1, dt > 0))
+        def _carry_in():
+            acc_ref[:, :halo] += halo_ref[...]
+
+        # ... and this tile's tail (read AFTER the carry-in, so halos
+        # deeper than one tile compose recursively) is left for the next.
+        @pl.when(ci == n_ci_blocks - 1)
+        def _carry_out():
+            halo_ref[...] = acc_ref[:, dtile:]
 
     @pl.when(ci == n_ci_blocks - 1)
     def _flush():
-        acc = acc_ref[...]                          # [P, L_d, L_h, L_w, bco]
+        acc = acc_ref[:, :dtile]        # owned rows; the tail rides the halo
         bco = acc.shape[-1]
+        lh, lw = acc.shape[2], acc.shape[3]
+        s_d, s_h, s_w = stride
         # unflatten phases and interleave: out[q*S + p] = acc[p, q]
-        acc = acc.reshape(*stride, *lengths, bco)
-        # [S_d,S_h,S_w, L_d,L_h,L_w, bco] -> [L_d,S_d, L_h,S_h, L_w,S_w, bco]
-        rank = len(stride)
-        perm = []
-        for d in range(rank):
-            perm += [rank + d, d]
-        perm += [2 * rank]
-        acc = acc.transpose(*perm)
-        full = acc.reshape(*(l * s for l, s in zip(lengths, stride)), bco)
-        crop = tuple(slice(0, o) for o in out_spatial)
-        o_ref[0] = full[crop].astype(out_dtype)
+        acc = acc.reshape(s_d, s_h, s_w, dtile, lh, lw, bco)
+        acc = acc.transpose(3, 0, 4, 1, 5, 2, 6)
+        full = acc.reshape(dtile * s_d, lh * s_h, lw * s_w, bco)
+        o_ref[0] = full[:, :out_trailing[0], :out_trailing[1]].astype(out_dtype)
 
 
 def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
                      kernel: Sequence[int], stride: Sequence[int],
                      block_ci: int, block_co: int,
+                     dtile: int | None = None,
                      interpret: bool = True) -> jax.Array:
-    """Uniform deconv on rank-3 canonical layout.
+    """Uniform deconv on rank-3 canonical layout — one call, any input size.
 
-    x: [N, D, H, W, Ci] (D=1 expresses 2D); w_padded: [Kpad..., Ci, Co] with
-    Kpad = ceil(K/S)*S (zero tail).  Channels must divide the blocks
-    (ops.py pads).  Returns [N, OD, OH, OW, Co] with O = (I-1)S + K.
+    x: [N, D_pad, H, W, Ci] with ``D_pad`` a multiple of ``dtile``
+    (``dtile=None`` means one tile spanning the whole leading dim);
+    w_padded: [Kpad..., Ci, Co] with Kpad = ceil(K/S)*S (zero tail).
+    Channels must divide the blocks (ops.py pads).
+
+    Whenever K_d > S_d the caller must zero-pad the true leading extent D by
+    at least ``ceil(K_d/S_d) - 1`` rows (ops.py always pads to
+    ``n_dtiles * dtile >= D + ceil(K_d/S_d) - 1``): that guarantees every
+    real output row lands inside the returned [N, D_pad*S_d, OH, OW, Co]
+    extent and the last tile's halo carry-out is structurally zero.  Rows at
+    or beyond (D-1)*S_d + K_d are zero and cropped by the caller.
     """
-    n, *in_spatial, ci = x.shape
+    n, d_pad, h, wdim, ci = x.shape
     co = w_padded.shape[-1]
     kernel = tuple(kernel)
     stride = tuple(stride)
-    out_spatial = tuple((i - 1) * s + k
-                        for i, s, k in zip(in_spatial, stride, kernel))
+    if dtile is None:
+        dtile = d_pad
+    assert d_pad % dtile == 0, (d_pad, dtile)
+    n_dt = d_pad // dtile
     assert ci % block_ci == 0 and co % block_co == 0, (ci, co, block_ci, block_co)
     n_ci, n_co = ci // block_ci, co // block_co
 
     m_max = _phase_geometry(kernel, stride)
-    lengths = tuple(i + m - 1 for i, m in zip(in_spatial, m_max))
+    halo = halo_depth(kernel, stride)
+    tile_spatial = (dtile, h, wdim)
+    lengths = tuple(i + m - 1 for i, m in zip(tile_spatial, m_max))
     n_phases = math.prod(stride)
+    out_trailing = tuple((i - 1) * s + k for i, s, k in
+                         zip((h, wdim), stride[1:], kernel[1:]))
+    out_block_lead = dtile * stride[0]
 
     kpad = w_padded.shape[:3]
     body = functools.partial(
         _deconv_kernel_body,
-        in_spatial=tuple(in_spatial), kernel=kernel, stride=stride,
-        out_spatial=out_spatial, n_ci_blocks=n_ci, out_dtype=x.dtype)
+        tile_spatial=tile_spatial, kernel=kernel, stride=stride,
+        out_trailing=out_trailing, n_ci_blocks=n_ci, out_dtype=x.dtype)
 
-    grid = (n, n_co, n_ci)
+    scratch = [pltpu.VMEM((n_phases, *lengths, block_co), jnp.float32)]
+    if halo:
+        scratch.append(
+            pltpu.VMEM((n_phases, halo, *lengths[1:], block_co), jnp.float32))
+
+    grid = (n, n_co, n_dt, n_ci)
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, *in_spatial, block_ci),
-                         lambda b, oc, ic: (b, 0, 0, 0, ic)),
+            pl.BlockSpec((1, dtile, h, wdim, block_ci),
+                         lambda b, oc, dt, ic: (b, dt, 0, 0, ic)),
             pl.BlockSpec((*kpad, block_ci, block_co),
-                         lambda b, oc, ic: (0, 0, 0, ic, oc)),
+                         lambda b, oc, dt, ic: (0, 0, 0, ic, oc)),
         ],
-        out_specs=pl.BlockSpec((1, *out_spatial, block_co),
-                               lambda b, oc, ic: (b, 0, 0, 0, oc)),
-        out_shape=jax.ShapeDtypeStruct((n, *out_spatial, co), x.dtype),
-        scratch_shapes=[pltpu.VMEM((n_phases, *lengths, block_co), jnp.float32)],
+        out_specs=pl.BlockSpec((1, out_block_lead, *out_trailing, block_co),
+                               lambda b, oc, dt, ic: (b, dt, 0, 0, oc)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, n_dt * out_block_lead, *out_trailing, co), x.dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
     )(x, w_padded)
 
 
 def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
-               in_dtype_bytes: int = 2) -> int:
-    """Static VMEM footprint of one grid step (for the tiling planner)."""
+               in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static VMEM footprint of one grid step (for the tiling planner).
+
+    ``dtile=None`` is the classic whole-leading-dim accounting; with
+    ``dtile`` set it accounts the tiled grid's per-step input/output blocks
+    plus the f32 halo-carry scratch.
+    """
     m_max = _phase_geometry(kernel, stride)
-    lengths = tuple(i + m - 1 for i, m in zip(in_spatial, m_max))
-    out_spatial = tuple((i - 1) * s + k
-                        for i, s, k in zip(in_spatial, stride, kernel))
+    if dtile is None:
+        lengths = tuple(i + m - 1 for i, m in zip(in_spatial, m_max))
+        out_spatial = tuple((i - 1) * s + k
+                            for i, s, k in zip(in_spatial, stride, kernel))
+        in_elems = math.prod(in_spatial)
+        halo_elems = 0
+    else:
+        trail = tuple(in_spatial[1:])
+        lengths = (dtile + m_max[0] - 1,) + tuple(
+            i + m - 1 for i, m in zip(trail, m_max[1:]))
+        out_spatial = (dtile * stride[0],) + tuple(
+            (i - 1) * s + k
+            for i, s, k in zip(trail, stride[1:], kernel[1:]))
+        in_elems = dtile * math.prod(trail)
+        halo_elems = (math.prod(stride) * (m_max[0] - 1)
+                      * math.prod(lengths[1:]))
     kpad = tuple(m * s for m, s in zip(m_max, stride))
-    return (math.prod(in_spatial) * block_ci * in_dtype_bytes
+    return (in_elems * block_ci * in_dtype_bytes
             + math.prod(kpad) * block_ci * block_co * in_dtype_bytes
             + math.prod(out_spatial) * block_co * in_dtype_bytes
-            + math.prod(stride) * math.prod(lengths) * block_co * 4)
+            + (math.prod(stride) * math.prod(lengths) + halo_elems)
+            * block_co * 4)

@@ -1,27 +1,32 @@
 """Jit'd public wrapper for the Pallas IOM deconv kernel.
 
-Handles: 2D -> canonical 3D lift (D=1), channel padding to block multiples,
-weight zero-padding to the phase grid (Kpad = ceil(K/S)*S), oversized-input
-spatial splitting with outside overlap-add, border cropping, and a custom
-VJP (deconv's adjoint is a strided convolution; dw is a K^d set of small
-contractions).
+Handles: rank lifting to canonical 3D (the large, tileable dim leading),
+channel padding to block multiples, weight zero-padding to the phase grid
+(Kpad = ceil(K/S)*S), leading-dim zero-padding to the planner's tile grid,
+border cropping, and a custom VJP (deconv's adjoint is a strided
+convolution; dw is a K^d set of small contractions).
+
+Oversized inputs are NOT split here: the unified planner
+(``repro.core.tiling.plan_deconv_tiles``) jointly picks
+``(dtile, block_ci, block_co)`` and a single ``pallas_call`` runs the fused
+4D grid with in-kernel halo overlap-add (see ``kernel.py``) — there is no
+Python-level tile loop or ``dynamic_update_slice`` stitching left.
 """
 
 from __future__ import annotations
 
 import functools
 import itertools
-import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import tiling as _tiling
 from repro.core.functional import _canon, deconv_output_shape
 from repro.kernels.deconv import kernel as _k
 
 # default VMEM budget the planner targets per grid step
-_VMEM_BUDGET = 8 * 1024 * 1024
+_VMEM_BUDGET = _tiling.DECONV_VMEM_BUDGET
 
 
 def _default_interpret() -> bool:
@@ -30,26 +35,16 @@ def _default_interpret() -> bool:
 
 def choose_blocks(in_spatial, kernel, stride, ci, co,
                   vmem_budget: int = _VMEM_BUDGET) -> tuple[int, int]:
-    """Largest MXU-aligned channel blocks whose working set fits VMEM."""
-    bci = min(ci, 128)
-    bco = min(co, 128)
-    while _k.vmem_bytes(in_spatial, kernel, stride, bci, bco) > vmem_budget \
-            and bco > 8:
-        bco //= 2
-    while _k.vmem_bytes(in_spatial, kernel, stride, bci, bco) > vmem_budget \
-            and bci > 8:
-        bci //= 2
-    return bci, bco
+    """Largest MXU-aligned channel blocks whose working set fits VMEM.
 
-
-def max_leading_tile(in_spatial, kernel, stride, bci, bco,
-                     vmem_budget: int = _VMEM_BUDGET) -> int:
-    """Largest leading-spatial-dim tile that fits VMEM at minimal blocks."""
-    d = in_spatial[0]
-    while d > 1 and _k.vmem_bytes((d, *in_spatial[1:]), kernel, stride,
-                                  bci, bco) > vmem_budget:
-        d = -(-d // 2)
-    return d
+    Compat shim over the unified planner with the spatial split disabled
+    (channels-only shrink); new code should call
+    ``repro.core.tiling.plan_deconv_tiles`` directly.
+    """
+    plan = _tiling.plan_deconv_tiles(in_spatial, kernel, stride, ci, co,
+                                     vmem_budget=vmem_budget,
+                                     allow_split=False)
+    return plan.block_ci, plan.block_co
 
 
 def _pad_axis_to(x, axis, mult):
@@ -63,74 +58,74 @@ def _pad_axis_to(x, axis, mult):
 
 
 def _lift_3d(x, w, stride):
-    """Canonicalise rank-1/2 inputs to rank-3 (leading singleton dims)."""
+    """Canonicalise rank-1/2 inputs to rank-3; returns squeeze axes.
+
+    Rank 2 lifts [N, H, W, C] -> [N, H, 1, W, C] (singleton in the MIDDLE):
+    the large image dim lands on the leading axis — the one the fused grid
+    tiles — while W stays innermost on the lanes.  Rank 1 lifts to
+    [N, 1, 1, W, C].
+    """
     rank = x.ndim - 2
     stride = _canon(stride, rank)
-    add = 3 - rank
-    x3 = x.reshape(x.shape[0], *(1,) * add, *x.shape[1:])
-    w3 = w.reshape(*(1,) * add, *w.shape)
-    return x3, w3, (1,) * add + tuple(stride), rank
+    if rank == 3:
+        return x, w, tuple(stride), ()
+    if rank == 2:
+        x3 = x.reshape(x.shape[0], x.shape[1], 1, x.shape[2], x.shape[3])
+        w3 = w.reshape(w.shape[0], 1, w.shape[1], w.shape[2], w.shape[3])
+        return x3, w3, (stride[0], 1, stride[1]), (2,)
+    x3 = x.reshape(x.shape[0], 1, 1, x.shape[1], x.shape[2])
+    w3 = w.reshape(1, 1, *w.shape)
+    return x3, w3, (1, 1, stride[0]), (1, 2)
 
 
-def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret):
-    """Pad channels + weights and invoke the kernel (canonical rank-3)."""
+def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
+               dtile=None, n_dtiles=1):
+    """Pad channels/weights/leading dim and invoke the fused kernel ONCE.
+
+    The leading dim is zero-padded to ``n_dtiles * dtile`` — always at least
+    ``ceil(K_d/S_d) - 1`` rows beyond the data, which the kernel's halo
+    contract requires.  Output is cropped back to Eq. (1) extent.
+    """
     ci, co = x3.shape[-1], w3.shape[-1]
+    out3 = deconv_output_shape(x3.shape[1:4], kernel3, stride3, 0)
     x3 = _pad_axis_to(x3, -1, block_ci)
     w3 = _pad_axis_to(_pad_axis_to(w3, -1, block_co), -2, block_ci)
     m_max = tuple(-(-k // s) for k, s in zip(kernel3, stride3))
     kpad = tuple(m * s for m, s in zip(m_max, stride3))
     w3 = jnp.pad(w3, [(0, kp - kk) for kp, kk in zip(kpad, kernel3)]
                  + [(0, 0), (0, 0)])
+    if dtile is None:
+        dtile = x3.shape[1] + m_max[0] - 1
+        n_dtiles = 1
+    d_pad = n_dtiles * dtile
+    assert d_pad >= x3.shape[1] + m_max[0] - 1, (d_pad, x3.shape, m_max)
+    x3 = jnp.pad(x3, [(0, 0), (0, d_pad - x3.shape[1])]
+                 + [(0, 0)] * 3)
     y = _k.deconv_pallas_3d(x3, w3, kernel=kernel3, stride=stride3,
                             block_ci=min(block_ci, x3.shape[-1]),
                             block_co=min(block_co, w3.shape[-1]),
-                            interpret=interpret)
-    return y[..., :co]
+                            dtile=dtile, interpret=interpret)
+    return y[:, :out3[0], :, :, :co]
 
 
 def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
-                     max_tile_bytes=_VMEM_BUDGET):
+                     max_tile_bytes=None):
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     padding_r = _canon(padding, rank)
-    kernel_r = w.shape[:rank]
-    x3, w3, stride3, _ = _lift_3d(x, w, stride_r)
+    x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
     kernel3 = w3.shape[:3]
     in_sp3 = x3.shape[1:4]
 
-    if block_ci is None or block_co is None:
-        bci, bco = choose_blocks(in_sp3, kernel3, stride3,
-                                 x3.shape[-1], w3.shape[-1], max_tile_bytes)
-    else:
-        bci, bco = block_ci, block_co
-
-    dtile = max_leading_tile(in_sp3, kernel3, stride3, bci, bco,
-                             max_tile_bytes)
-    if dtile >= in_sp3[0]:
-        y3 = _core_call(x3, w3, stride3, kernel3, bci, bco, interpret)
-    else:
-        # split the leading spatial dim into disjoint input tiles and
-        # overlap-add the partial outputs (tile t covers o in [t0*S, ...)).
-        out3 = deconv_output_shape(in_sp3, kernel3, stride3, 0)
-        y3 = jnp.zeros((x3.shape[0], *out3, w3.shape[-1]),
-                       jnp.promote_types(x.dtype, jnp.float32)
-                       if x.dtype == jnp.float32 else x.dtype)
-        d, s0, k0 = in_sp3[0], stride3[0], kernel3[0]
-        for t0 in range(0, d, dtile):
-            t1 = min(t0 + dtile, d)
-            xt = x3[:, t0:t1]
-            yt = _core_call(xt, w3, stride3, kernel3, bci, bco, interpret)
-            o0 = t0 * s0
-            y3 = jax.lax.dynamic_update_slice(
-                y3,
-                jax.lax.dynamic_slice(
-                    y3, (0, o0, 0, 0, 0),
-                    (y3.shape[0], yt.shape[1], *y3.shape[2:])) + yt.astype(y3.dtype),
-                (0, o0, 0, 0, 0))
-        y3 = y3.astype(x.dtype)
+    plan = _tiling.plan_deconv_tiles(
+        in_sp3, kernel3, stride3, x3.shape[-1], w3.shape[-1],
+        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
+        block_ci=block_ci, block_co=block_co)
+    y3 = _core_call(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
+                    interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles)
 
     # un-lift and crop
-    y = y3.reshape(y3.shape[0], *y3.shape[1 + (3 - rank):])
+    y = jnp.squeeze(y3, axis=squeeze) if squeeze else y3
     if any(p for p in padding_r):
         idx = (slice(None),) + tuple(
             slice(p, dim - p) for p, dim in zip(padding_r, y.shape[1:-1])
@@ -139,24 +134,27 @@ def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
     return y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def _deconv(x, w, stride, padding, block_ci, block_co, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _deconv(x, w, stride, padding, block_ci, block_co, interpret,
+            max_tile_bytes):
     return _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co,
-                            interpret)
+                            interpret, max_tile_bytes)
 
 
-def _fwd(x, w, stride, padding, block_ci, block_co, interpret):
-    return _deconv(x, w, stride, padding, block_ci, block_co, interpret), (x, w)
+def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
+         max_tile_bytes):
+    return _deconv(x, w, stride, padding, block_ci, block_co, interpret,
+                   max_tile_bytes), (x, w)
 
 
-def _bwd(stride, padding, block_ci, block_co, interpret, res, dy):
+def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
+         res, dy):
     x, w = res
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     padding_r = _canon(padding, rank)
     kernel_r = w.shape[:rank]
     in_sp = x.shape[1:-1]
-    out_full = deconv_output_shape(in_sp, kernel_r, stride_r, 0)
 
     # un-crop dy back to the full Eq.(1) extent
     if any(padding_r):
@@ -185,14 +183,19 @@ _deconv.defvjp(_fwd, _bwd)
 def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
            block_ci: int | None = None, block_co: int | None = None,
            interpret: bool | None = None,
+           max_tile_bytes: int | None = None,
            preferred_element_type=None) -> jax.Array:
     """Public op: uniform 1D/2D/3D IOM deconvolution via the Pallas kernel.
 
     x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; returns channels-last output
     of extent (I-1)*S + K - 2*padding per dim.  ``interpret`` defaults to
-    True off-TPU (CPU validation) and False on TPU.
+    True off-TPU (CPU validation) and False on TPU.  ``max_tile_bytes``
+    overrides the planner's per-grid-step VMEM budget (small values force
+    the multi-tile fused grid even on small inputs — used by tests and
+    benchmarks).
     """
     del preferred_element_type  # accumulation is always f32 in-kernel
     if interpret is None:
         interpret = _default_interpret()
-    return _deconv(x, w, stride, padding, block_ci, block_co, interpret)
+    return _deconv(x, w, stride, padding, block_ci, block_co, interpret,
+                   max_tile_bytes)

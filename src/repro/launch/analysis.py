@@ -18,6 +18,8 @@ import dataclasses
 import json
 import re
 
+from repro.sharding.compat import cost_analysis_dict
+
 # TPU v5e per-chip constants (from the brief)
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
@@ -179,7 +181,7 @@ def analytic_hbm_bytes(kind: str, *, n_params: int, param_shards: int,
 def analyse_compiled(compiled, chips: int, model_flops: float = 0.0,
                      analytic_bytes: float = 0.0):
     """Extract roofline terms + memory stats from a compiled executable."""
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     colls = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     rl = Roofline(

@@ -33,6 +33,7 @@ from repro.launch.analysis import (
 )
 from repro.launch.mesh import make_production_mesh
 from repro.models import flags as _flags
+from repro.sharding.compat import cost_analysis_dict
 
 
 def _probe_plan(cfg):
@@ -98,7 +99,7 @@ def _probe_metrics(cfg, shape, mesh, plan):
         pcfg = _dc.replace(cfg, n_layers=n_layers, scan_layers=False)
         with _flags.unrolled():
             _, compiled = _compile_bundle(pcfg, shape, mesh)
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         colls = collective_bytes(compiled.as_text())
         return {"flops": float(ca.get("flops", 0.0)),
                 "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -139,7 +140,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         with mesh:
             bundle, compiled = _compile_bundle(cfg, shape, mesh)
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             print(f"[{arch} x {shape_name} x {rec['mesh']}] "
                   f"memory_analysis: {mem}")
             print(f"[{arch} x {shape_name} x {rec['mesh']}] "

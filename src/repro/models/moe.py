@@ -21,6 +21,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.sharding import compat
 from repro.sharding.partition import constrain
 
 
@@ -213,10 +214,10 @@ def moe_shardmap(p: MoeParams, x: jax.Array, cfg: ModelConfig):
         args = (x, p.w_router, wi, wo)
         specs_in = (dp, P(), wspec, wspec)
     try:
-        fn = jax.shard_map(body, mesh=mesh, in_specs=specs_in,
+        fn = compat.shard_map(body, mesh=mesh, in_specs=specs_in,
                            out_specs=(dp, P()), check_vma=False)
     except TypeError:
-        fn = jax.shard_map(body, mesh=mesh, in_specs=specs_in,
+        fn = compat.shard_map(body, mesh=mesh, in_specs=specs_in,
                            out_specs=(dp, P()), check_rep=False)
     out, aux = fn(*args)
     out = checkpoint_name(out, "blk_out")

@@ -30,6 +30,7 @@ from repro.models import moe as MOE
 from repro.models import ssm as S
 from repro.models.flags import maybe_scan
 from repro.models.mlp import MlpParams, init_mlp, mlp
+from repro.sharding import compat
 from repro.sharding.partition import WS, constrain
 
 
@@ -532,24 +533,26 @@ def _xent_vocab_parallel(mesh, cfg, hf, lf, table, chunk):
             idx = jnp.clip(lc - v0, 0, v_loc - 1)
             ll_part = jnp.take_along_axis(logits, idx[:, None], axis=-1)[:, 0]
             ll_full = jax.lax.psum(jnp.where(mine, ll_part, 0.0), "model")
-            return acc + jnp.sum(lse - ll_full), None
+            # rank-1 carry, NOT scalar: jax 0.4.37's shard_map partial-eval
+            # mis-names scalar scan carries under grad (_SpecError)
+            return acc + jnp.sum(lse - ll_full, keepdims=True), None
 
         acc, _ = maybe_scan(jax.checkpoint(body),
-                            jnp.zeros((), jnp.float32),
+                            jnp.zeros((1,), jnp.float32),
                             (hl.reshape(n, c, d), ll.reshape(n, c)))
         acc = jax.lax.psum(acc, batch_axes) if batch_axes else acc
         return acc
 
     dp = P(batch_axes if batch_axes else None, None)
     try:
-        fn = jax.shard_map(local, mesh=mesh,
+        fn = compat.shard_map(local, mesh=mesh,
                            in_specs=(dp, P(dp[0]), P("model", None)),
-                           out_specs=P(), check_vma=False)
+                           out_specs=P(None), check_vma=False)
     except TypeError:
-        fn = jax.shard_map(local, mesh=mesh,
+        fn = compat.shard_map(local, mesh=mesh,
                            in_specs=(dp, P(dp[0]), P("model", None)),
-                           out_specs=P(), check_rep=False)
-    return fn(hf, lf, table.astype(hf.dtype)) / t
+                           out_specs=P(None), check_rep=False)
+    return fn(hf, lf, table.astype(hf.dtype))[0] / t
 
 
 def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",

@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.optim import AdamWConfig, adamw_update
 from repro.optim.compress import psum_int8_tree
+from repro.sharding import compat
 
 
 def init_error_state(params, n_data: int):
@@ -50,12 +51,12 @@ def make_dp_train_step(loss_fn: Callable, opt: AdamWConfig, mesh,
     rep = P()
     dp = P("data")
     try:
-        shard_step = jax.shard_map(
+        shard_step = compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
             check_vma=False)
     except TypeError:  # older jax: check_rep
-        shard_step = jax.shard_map(
+        shard_step = compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
             check_rep=False)

@@ -1,3 +1,4 @@
+from repro.sharding import compat  # noqa: F401
 from repro.sharding.partition import (  # noqa: F401
     WS,
     constrain,

@@ -1,0 +1,54 @@
+"""Version-compat shims for JAX API drift.
+
+``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``)
+appeared after JAX 0.4.37; ``make_mesh`` here passes ``axis_types`` only
+when the installed JAX supports it, so call sites stay uniform across
+versions instead of sprinkling hasattr checks.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# jax.shard_map was promoted out of jax.experimental after 0.4.x; alias the
+# one the installed JAX has.  Call sites keep their own check_vma/check_rep
+# TypeError fallback (that kwarg renamed independently).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def supports_axis_types() -> bool:
+    return hasattr(jax.sharding, "AxisType")
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX.
+
+    JAX 0.4.x returns a per-device list of dicts; newer JAX returns one
+    flat dict.  Returns {} when analysis is unavailable (some backends).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` that degrades gracefully without ``AxisType``.
+
+    ``explicit=False`` (the default, Auto axes) is representable on every
+    supported JAX — older versions simply have no axis_types concept and
+    behave as Auto.  ``explicit=True`` requires real AxisType support.
+    """
+    kw = {}
+    if supports_axis_types():
+        at = (jax.sharding.AxisType.Explicit if explicit
+              else jax.sharding.AxisType.Auto)
+        kw["axis_types"] = (at,) * len(axis_names)
+    elif explicit:
+        raise NotImplementedError(
+            "explicit-sharding meshes need jax.sharding.AxisType "
+            f"(installed jax {jax.__version__} predates it)")
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)

@@ -1,5 +1,5 @@
 """Pallas kernel vs pure-jnp oracle: shape/dtype sweeps, gradients, blocking
-and the spatial-split fallback (interpret mode on CPU)."""
+and the fused multi-tile grid (interpret mode on CPU)."""
 
 import numpy as np
 import pytest
@@ -7,6 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core.tiling import plan_deconv_tiles
 from repro.kernels.deconv import deconv, deconv_reference
 from repro.kernels.deconv import ops as deconv_ops
 from repro.kernels.deconv.kernel import vmem_bytes
@@ -63,16 +64,123 @@ def test_pallas_gradients_match_reference(rng):
                                    rtol=1e-4, atol=1e-4)
 
 
-def test_spatial_split_fallback(rng):
-    """Oversized leading spatial dim is split into disjoint input tiles
-    whose partial outputs overlap-add outside the kernel."""
+def test_fused_multitile_3d(rng):
+    """A tiny VMEM budget forces the multi-tile 4D grid on a 3D input; the
+    in-kernel halo overlap-add must reproduce the oracle exactly."""
     x = jnp.asarray(rng.randn(1, 16, 8, 8, 4), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 3, 4, 4), jnp.float32)
+    plan = plan_deconv_tiles((16, 8, 8), (3, 3, 3), (2, 2, 2), 4, 4,
+                             vmem_budget=64 * 1024)
+    assert plan.n_dtiles > 1
     ref = deconv_reference(x, w, 2, 1)
-    got = deconv_ops._deconv_fwd_impl(x, w, 2, 1, None, None, True,
-                                      max_tile_bytes=64 * 1024)
+    got = deconv(x, w, 2, 1, max_tile_bytes=64 * 1024)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_fused_multitile_2d(rng):
+    """2D inputs lift as [N, H, 1, W, C], so the big image dim is the one
+    the grid tiles — the multi-tile path engages for 2D too."""
+    x = jnp.asarray(rng.randn(1, 32, 8, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 5), jnp.float32)
+    plan = plan_deconv_tiles((32, 1, 8), (3, 1, 3), (2, 1, 2), 3, 5,
+                             vmem_budget=16 * 1024)
+    assert plan.n_dtiles > 1
+    got = deconv(x, w, 2, 0, max_tile_bytes=16 * 1024)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(deconv_reference(x, w, 2, 0)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_multitile_stride_gt_kernel(rng):
+    """S > K on the tiled dim: no halo rows at all (M_d == 1); tiles own
+    disjoint output slabs with structural zero gaps between phases."""
+    x = jnp.asarray(rng.randn(1, 12, 6, 2), jnp.float32)
+    w = jnp.asarray(rng.randn(2, 2, 2, 3), jnp.float32)
+    got = deconv(x, w, 3, 0, max_tile_bytes=8 * 1024)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(deconv_reference(x, w, 3, 0)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_multitile_deep_halo_nondivisible(rng):
+    """K_d much larger than S_d * dtile: the carry spans several tiles and
+    must compose recursively; the leading dim (13) does not divide the tile
+    (2), so the zero-padded tail tiles must contribute nothing."""
+    x = jnp.asarray(rng.randn(1, 13, 4, 2), jnp.float32)
+    w = jnp.asarray(rng.randn(7, 3, 2, 2), jnp.float32)
+    x3, w3, stride3, squeeze = deconv_ops._lift_3d(x, w, (1, 2))
+    got = deconv_ops._core_call(x3, w3, stride3, w3.shape[:3], 8, 8, True,
+                                dtile=2, n_dtiles=10)
+    got = jnp.squeeze(got, axis=squeeze)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(deconv_reference(x, w, (1, 2), 0)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_fused_multitile_gradients(rng):
+    """Forward through the multi-tile grid + custom-VJP gradients match the
+    oracle for both 2D and 3D cases."""
+    cases = [
+        (rng.randn(1, 12, 6, 2), rng.randn(3, 3, 2, 3), (2, 2), 32 * 1024),
+        (rng.randn(1, 10, 4, 4, 2), rng.randn(3, 3, 3, 2, 2), (2, 2, 2),
+         48 * 1024),
+    ]
+    for xa, wa, stride, budget in cases:
+        x = jnp.asarray(xa, jnp.float32)
+        w = jnp.asarray(wa, jnp.float32)
+
+        def f_pallas(x, w):
+            return jnp.sum(jnp.sin(deconv(x, w, stride, 1,
+                                          max_tile_bytes=budget)))
+
+        def f_ref(x, w):
+            return jnp.sum(jnp.sin(deconv_reference(x, w, stride, 1)))
+
+        gp = jax.grad(f_pallas, (0, 1))(x, w)
+        gr = jax.grad(f_ref, (0, 1))(x, w)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def _count_prims(jaxpr, counts):
+    """Recursively tally primitive names through call/custom_vjp sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+        for v in eqn.params.values():
+            vals = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vals:
+                inner = getattr(u, "jaxpr", None)
+                if hasattr(u, "eqns"):
+                    _count_prims(u, counts)
+                elif inner is not None and hasattr(inner, "eqns"):
+                    _count_prims(inner, counts)
+    return counts
+
+
+def test_split_is_single_pallas_call(rng):
+    """The acceptance criterion made structural: even when the planner
+    splits, the traced forward contains exactly ONE pallas_call and no
+    dynamic_update_slice stitching."""
+    x = jnp.asarray(rng.randn(1, 16, 8, 8, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4, 4), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda x, w: deconv(x, w, 2, 1, max_tile_bytes=64 * 1024))(x, w)
+    counts = _count_prims(jaxpr.jaxpr, {})
+    assert counts.get("pallas_call") == 1, counts
+    assert "dynamic_update_slice" not in counts, counts
+
+
+def test_planner_respects_budget_and_explicit_blocks():
+    plan = plan_deconv_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
+                             vmem_budget=1 << 20)
+    assert plan.step_vmem_bytes <= 1 << 20 or (
+        plan.dtile == 1 and plan.block_ci == 8 and plan.block_co == 8)
+    assert plan.n_dtiles * plan.dtile >= 64 + 1   # covers data + halo slack
+    pinned = plan_deconv_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
+                               vmem_budget=1 << 20, block_ci=32, block_co=16)
+    assert (pinned.block_ci, pinned.block_co) == (32, 16)
 
 
 def test_block_choice_respects_vmem():

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The whole module skips cleanly when ``hypothesis`` is not installed (it is
+a test-only extra, see pyproject.toml) instead of erroring at collection.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp

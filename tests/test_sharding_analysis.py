@@ -10,12 +10,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core import tiling
 from repro.launch import analysis
 from repro.models import flags
+from repro.sharding.compat import make_mesh
 from repro.sharding.partition import logical_to_spec
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_logical_to_spec_divisibility():
