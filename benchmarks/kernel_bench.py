@@ -1,10 +1,21 @@
 """Pallas-kernel microbenchmark (interpret mode on CPU): per-method
 wall-time on downsized paper layers, the fused multi-tile grid vs the seed's
-stitched Python-loop overlap-add, and the tiling planner's decisions for
-the real layer geometry (the TPU-relevant structural numbers)."""
+stitched Python-loop overlap-add, the NEW Pallas training backward (VJP) vs
+the replaced einsum ``_bwd`` and vs XLA conv-transpose autodiff, plus the
+tiling planner's forward/backward decisions for the real layer geometry
+(the TPU-relevant structural numbers).
+
+Also emits machine-readable ``BENCH_kernel.json`` at the repo root with
+every row and the planner decisions, so future PRs can diff perf.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py
+"""
 
 import dataclasses as dc
+import json
+import math
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -12,24 +23,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks
-from repro.core.functional import deconv_nd, deconv_output_shape
+from repro.core.functional import deconv_nd, deconv_output_shape, deconv_xla
+from repro.core.jaxpr_utils import count_prims, pallas_eqns
 from repro.core.tiling import plan_deconv_tiles
 from repro.kernels.deconv import ops as deconv_ops
-from repro.kernels.deconv.kernel import vmem_bytes
+from repro.kernels.deconv.kernel import vmem_bytes, vmem_bytes_bwd
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernel.json"
 
 
 def _time(fn, *args, repeats=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    jax.block_until_ready(fn(*args))   # one warm-up call: compile AND block
     t0 = time.perf_counter()
     for _ in range(repeats):
-        r = fn(*args)
-        jax.block_until_ready(r)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
+def _count_dots(jaxpr):
+    return count_prims(jaxpr).get("dot_general", 0)
+
+
 def run() -> list[str]:
-    rows = []
+    recs: list[dict] = []
+
+    def rec(name, us, detail=""):
+        recs.append({"name": name, "us": round(float(us), 1),
+                     "detail": str(detail)})
+
     rng = np.random.RandomState(0)
     lay2 = dc.replace(networks.benchmark_layers("dcgan")[1], cin=32, cout=16)
     lay3 = dc.replace(networks.benchmark_layers("3d_gan")[1], cin=16, cout=8)
@@ -40,11 +61,16 @@ def run() -> list[str]:
         for method in ("oom", "xla", "iom_phase", "pallas"):
             f = jax.jit(lambda x, w, m=method: deconv_nd(x, w, lay.stride,
                                                          0, method=m))
-            us = _time(f, x, w)
-            rows.append(f"kernel_{name}_{method},{us:.0f},")
-    rows += _split_path_rows(rng)
-    # Planner decision + VMEM working set for the REAL layer geometry.  The
-    # lift matches ops.py: the large dim leads (2D -> [H, 1, W]).
+            rec(f"kernel_{name}_{method}", _time(f, x, w))
+
+    _split_path_rows(rng, rec)
+    _matmul_count_rows(rng, rec)
+    _backward_rows(rng, rec)
+
+    # Planner decisions + VMEM working sets for the REAL layer geometry
+    # (forward plan and the backward-budgeted training plan).  The lift
+    # matches ops.py: the large dim leads (2D -> [H, 1, W]).
+    plans = {}
     for name, lay in (("2d", networks.benchmark_layers("dcgan")[1]),
                       ("3d", networks.benchmark_layers("3d_gan")[1])):
         if lay.rank == 2:
@@ -54,12 +80,24 @@ def run() -> list[str]:
         else:
             sp3, k3, s3 = lay.in_spatial, lay.kernel, lay.stride
         plan = plan_deconv_tiles(sp3, k3, s3, lay.cin, lay.cout)
+        tplan = plan_deconv_tiles(sp3, k3, s3, lay.cin, lay.cout,
+                                  backward=True)
         vb = vmem_bytes(sp3, k3, s3, plan.block_ci, plan.block_co,
                         dtile=plan.dtile)
-        rows.append(f"kernel_vmem_bytes/{name},0,{vb}")
-        rows.append(f"kernel_blocks/{name},0,{plan.block_ci}x{plan.block_co}")
-        rows.append(f"kernel_plan/{name},0,{plan.describe()}")
-    return rows
+        vbb = vmem_bytes_bwd(sp3, k3, s3, tplan.block_ci, tplan.block_co,
+                             dtile=tplan.dtile)
+        rec(f"kernel_vmem_bytes/{name}", 0, vb)
+        rec(f"kernel_blocks/{name}", 0, f"{plan.block_ci}x{plan.block_co}")
+        rec(f"kernel_plan/{name}", 0, plan.describe())
+        rec(f"kernel_plan_train/{name}", 0, tplan.describe())
+        rec(f"kernel_vmem_bytes_bwd/{name}", 0, vbb)
+        plans[name] = {"forward": plan.describe(),
+                       "train": tplan.describe(),
+                       "step_vmem_bytes": vb,
+                       "step_vmem_bytes_bwd": vbb}
+
+    _write_json(recs, plans)
+    return [f"{r['name']},{r['us']:.0f},{r['detail']}" for r in recs]
 
 
 def _stitched_baseline(x3, w3, stride3, plan, interpret=True):
@@ -86,7 +124,7 @@ def _stitched_baseline(x3, w3, stride3, plan, interpret=True):
     return y3
 
 
-def _split_path_rows(rng) -> list[str]:
+def _split_path_rows(rng, rec) -> None:
     """Fused 4D grid vs the stitched loop on a forced-split geometry."""
     budget = 96 * 1024
     in_sp, k, s, ci, co = (24, 8, 8), (3, 3, 3), (2, 2, 2), 8, 8
@@ -101,8 +139,89 @@ def _split_path_rows(rng) -> list[str]:
     np.testing.assert_allclose(np.asarray(fused(x, w)),
                                np.asarray(stitched(x, w)),
                                rtol=1e-4, atol=1e-4)
-    return [
-        f"kernel_split_fused,{_time(fused, x, w):.0f},{plan.describe()}",
-        f"kernel_split_stitched,{_time(stitched, x, w):.0f},"
-        f"tiles{plan.n_dtiles}",
-    ]
+    rec("kernel_split_fused", _time(fused, x, w), plan.describe())
+    rec("kernel_split_stitched", _time(stitched, x, w),
+        f"tiles{plan.n_dtiles}")
+
+
+def _matmul_count_rows(rng, rec) -> None:
+    """The tap-batching acceptance counter: MXU dispatches per grid step in
+    the traced kernels drop from K^d to S^d (forward), and the backward is
+    served by pallas_calls."""
+    x = jnp.asarray(rng.randn(1, 6, 6, 6, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4, 4), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda x, w: deconv_ops.deconv(x, w, 2, 0))(x, w)
+    fwd_dots = _count_dots(pallas_eqns(jaxpr.jaxpr)[0].params["jaxpr"])
+    rec("kernel_fwd_matmuls_per_step/3d", 0,
+        f"{fwd_dots}(S^3)_was_{math.prod(w.shape[:3])}(K^3)")
+    gj = jax.make_jaxpr(jax.grad(
+        lambda x, w: jnp.sum(deconv_ops.deconv(x, w, 2, 0)), (0, 1)))(x, w)
+    calls = pallas_eqns(gj.jaxpr)
+    bwd_dots = [_count_dots(c.params["jaxpr"]) for c in calls[1:]]
+    rec("kernel_bwd_pallas_calls", 0,
+        f"{len(calls)}calls_dots{'+'.join(map(str, bwd_dots))}")
+
+
+def _backward_rows(rng, rec) -> None:
+    """Training backward on a forced-split 3D geometry, interpret mode.
+
+    Three implementations of the same cotangents: the new Pallas VJP (the
+    uniform grid), the replaced einsum ``_bwd`` (K^d full-array f32 einsums
+    — XLA fuses these into large multithreaded GEMMs on CPU, so interpret
+    mode does NOT beat it at steady state; on TPU those einsums cannot tile
+    into VMEM while the Pallas grid does), and XLA conv-transpose autodiff
+    (the engine you'd train on WITHOUT the paper's kernel — the Pallas VJP
+    beats it even in interpret mode).  Full-gradient rows give the
+    end-to-end training-step comparison."""
+    budget = 1 << 20
+    in_sp, k, s, ci, co = (24, 10, 10), (3, 3, 3), (2, 2, 2), 32, 32
+    x = jnp.asarray(rng.randn(1, *in_sp, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(*k, ci, co) * 0.1, jnp.float32)
+    plan = plan_deconv_tiles(in_sp, k, s, ci, co, vmem_budget=budget,
+                             backward=True)
+    assert plan.n_dtiles > 1, plan
+    y = deconv_ops.deconv(x, w, s, 0, max_tile_bytes=budget)
+    dy = jnp.ones_like(y)
+
+    pallas_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd(
+        s, 0, None, None, True, budget, (x, w), dy))
+    einsum_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd_einsum(
+        s, 0, (x, w), dy))
+    for a, b in zip(pallas_vjp(x, w, dy), einsum_vjp(x, w, dy)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+    grad_pallas = jax.jit(jax.grad(
+        lambda x, w: jnp.sum(deconv_ops.deconv(x, w, s, 0,
+                                               max_tile_bytes=budget)),
+        (0, 1)))
+    grad_xla = jax.jit(jax.grad(
+        lambda x, w: jnp.sum(deconv_xla(x, w, s, 0)), (0, 1)))
+
+    rec("kernel_bwd_split_pallas_vjp", _time(pallas_vjp, x, w, dy),
+        plan.describe())
+    rec("kernel_bwd_split_einsum", _time(einsum_vjp, x, w, dy),
+        "replaced_K^3_einsum__bwd")
+    rec("kernel_grad_split_pallas", _time(grad_pallas, x, w),
+        "fwd+dx+dw_on_uniform_grid")
+    rec("kernel_grad_split_xla_autodiff", _time(grad_xla, x, w),
+        "lax_conv_transpose_autodiff")
+
+
+def _write_json(recs, plans) -> None:
+    payload = {
+        "bench": "kernel",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "interpret": True,
+        "rows": recs,
+        "plans": plans,
+    }
+    _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(row)
+    print(f"wrote {_JSON_PATH}")

@@ -40,7 +40,12 @@ ref2 = deconv_nd(x2, w2, 2, 1, method="oom")
 print(f"  pallas 2D out={tuple(y2.shape)}  "
       f"max|err|={np.abs(np.asarray(y2) - np.asarray(ref2)).max():.2e}")
 
-print("\n=== gradients flow through the kernel ===")
+print("\n=== training runs fully on the uniform kernel ===")
+# The custom VJP serves BOTH cotangents from the same fused Pallas grid as
+# the forward (dx = stride-S gather-convolution of dy, dw = per-tap
+# contractions): a train step never falls back to XLA einsums.
 g = jax.grad(lambda w: jnp.sum(deconv(x2, w2 * 0 + w, 2, 1) ** 2))(w2)
 print(f"  dL/dw shape={tuple(g.shape)}  |g|={float(jnp.abs(g).max()):.3f}")
+gx = jax.grad(lambda x: jnp.sum(deconv(x2 * 0 + x, w2, 2, 1) ** 2))(x2)
+print(f"  dL/dx shape={tuple(gx.shape)}  |g|={float(jnp.abs(gx).max()):.3f}")
 print("\nquickstart OK")

@@ -31,8 +31,14 @@ Four implementations, all bit-identical (tested):
                  size runs as ONE fused pallas_call: the unified planner
                  (repro.core.tiling.plan_deconv_tiles) blocks the leading
                  spatial dim into grid tiles that exchange their overlap-add
-                 halo in-kernel; ``max_tile_bytes`` (forwarded via **kw)
-                 overrides the per-step VMEM budget.
+                 halo in-kernel; each phase's valid taps are folded into one
+                 wide MXU matmul (S^d dispatches per grid step, not K^d);
+                 ``max_tile_bytes`` (forwarded via **kw) overrides the
+                 per-step VMEM budget.  TRAINING stays on the same engine:
+                 the custom VJP runs dx (a stride-S gather-convolution of
+                 dy) and dw (per-tap [bci, bco] contractions) as Pallas
+                 kernels on the same fused grid, planned with
+                 ``plan_deconv_tiles(backward=True)``.
 """
 
 from __future__ import annotations

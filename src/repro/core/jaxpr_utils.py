@@ -1,0 +1,51 @@
+"""Shared jaxpr introspection for structural tests and benchmarks.
+
+The kernel's acceptance criteria are structural ("one fused pallas_call",
+"S^d matmul dispatches per grid step, not K^d", "backward served by Pallas,
+not einsums"), so both the test suite and ``benchmarks/kernel_bench.py``
+need to walk traced jaxprs — through call/custom-vjp sub-jaxprs and into
+(or explicitly not into) ``pallas_call`` kernel bodies.  One walker lives
+here so the traversal can't drift between copies.
+"""
+
+from __future__ import annotations
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for u in vals:
+            inner = getattr(u, "jaxpr", None)
+            if hasattr(u, "eqns"):
+                yield u
+            elif inner is not None and hasattr(inner, "eqns"):
+                yield inner
+
+
+def count_prims(jaxpr, counts=None, into_pallas=True):
+    """Tally primitive names recursively.
+
+    ``into_pallas=False`` stops at ``pallas_call`` boundaries, so the counts
+    reflect only work XLA executes OUTSIDE the accelerator kernels (the
+    ``pallas_call`` eqn itself is still counted).
+    """
+    counts = {} if counts is None else counts
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+        if eqn.primitive.name == "pallas_call" and not into_pallas:
+            continue
+        for sub in _sub_jaxprs(eqn):
+            count_prims(sub, counts, into_pallas)
+    return counts
+
+
+def pallas_eqns(jaxpr, out=None):
+    """Collect every ``pallas_call`` eqn (its kernel body is
+    ``eqn.params["jaxpr"]``)."""
+    out = [] if out is None else out
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        for sub in _sub_jaxprs(eqn):
+            pallas_eqns(sub, out)
+    return out

@@ -170,6 +170,7 @@ def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
                       block_ci: int | None = None,
                       block_co: int | None = None,
                       allow_split: bool = True,
+                      backward: bool = False,
                       in_dtype_bytes: int = 2) -> DeconvTilePlan:
     """Jointly pick ``(dtile, block_ci, block_co)`` against the VMEM budget.
 
@@ -180,6 +181,12 @@ def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
     Explicit ``block_ci``/``block_co`` pin the channel blocks, so only the
     spatial tile adapts.  ``allow_split=False`` pins ``n_dtiles == 1`` and
     reproduces the channels-only shrink of the old ``choose_blocks``.
+
+    ``backward=True`` plans for a TRAINING step: the per-step byte model is
+    the max over the forward working set and the two VJP kernels' working
+    sets (dy slab + dx accumulator/halo, and the f32 dw scratch + x carry —
+    see ``kernels.deconv.kernel.vmem_bytes_bwd``), so one plan serves the
+    forward and both backward ``pallas_call``s.
 
     The planned leading extent includes ``ceil(K_d/S_d) - 1`` rows of zero
     slack so the final tile's halo carry-out is structurally zero (the
@@ -193,8 +200,12 @@ def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
     bco = block_co or min(cout, 128)
 
     def step_bytes(dt, ci, co):
-        return _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
-                             in_dtype_bytes, dtile=dt)
+        bytes_ = _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
+                               in_dtype_bytes, dtile=dt)
+        if backward:
+            bytes_ = max(bytes_, _k.vmem_bytes_bwd(
+                in_spatial, kernel, stride, ci, co, in_dtype_bytes, dtile=dt))
+        return bytes_
 
     dtile = d_eff
     if allow_split:
@@ -231,24 +242,17 @@ class TpuBlocking:
 def tpu_blocking(layer_cin: int, layer_cout: int, in_spatial, kernel, stride,
                  acc_bytes: int = 4, vmem_budget: int = 8 * 1024 * 1024,
                  lane: int = 128) -> TpuBlocking:
-    """Pick (block_ci, block_co) so input tile + f32 phase accumulator fit
-    VMEM, preferring MXU-aligned (multiples of 128) channel tiles."""
-    rank = len(in_spatial)
-    in_elems = math.prod(in_spatial)
-    m_max = [-(-k // s) for k, s in zip(kernel, stride)]
-    acc_elems = math.prod(i + m - 1 for i, m in zip(in_spatial, m_max)) \
-        * math.prod(stride)
+    """Pick (block_ci, block_co) for a whole-input-resident grid step.
 
-    def fits(ci, co):
-        vmem = (in_elems * ci * 2            # bf16 input tile
-                + acc_elems * co * acc_bytes  # f32 phase accumulator
-                + math.prod(kernel) * ci * co * 2)  # weights
-        return vmem <= vmem_budget
-
-    ci = min(layer_cin, lane)
-    co = min(layer_cout, lane)
-    while not fits(ci, co) and co > 8:
-        co //= 2
-    while not fits(ci, co) and ci > 8:
-        ci //= 2
-    return TpuBlocking(block_ci=ci, block_co=co, vmem_limit_bytes=vmem_budget)
+    Thin facade over the unified planner (``plan_deconv_tiles`` with the
+    spatial split disabled — channels-only shrink), so there is exactly ONE
+    VMEM budget model; ``acc_bytes``/``lane`` are retained for signature
+    compatibility (the planner accumulates in f32 and caps blocks at the
+    128-wide MXU lane).
+    """
+    del acc_bytes, lane  # the unified planner owns these decisions
+    plan = plan_deconv_tiles(in_spatial, kernel, stride, layer_cin,
+                             layer_cout, vmem_budget=vmem_budget,
+                             allow_split=False)
+    return TpuBlocking(block_ci=plan.block_ci, block_co=plan.block_co,
+                       vmem_limit_bytes=vmem_budget)

@@ -21,12 +21,23 @@ Maps the paper's PE mesh onto the TPU memory hierarchy with a fused 4D grid
     one tile (K_d ≫ S_d·dtile) propagate correctly.  Each tile then owns a
     disjoint ``dtile·S_d``-row slab of the output: no HBM round-trip, no
     outside stitching.
-  * one MXU matmul per kernel tap: x_flat [dtile*H*W, bci] @ w_tap
-    [bci, bco]; taps across all phases number exactly K^d — the IOM
-    valid-MAC count.  No inserted zero is ever touched.
+  * ONE tap-batched MXU matmul per phase: the phase's valid taps fold into
+    the weight columns, so x_flat [dtile*H*W, bci] contracts against
+    [bci, n_taps*bco] in a single dispatch — S^d wide matmuls per grid step
+    instead of K^d small ones (e.g. 27 -> 8 for 3³/s2, 25 -> 4 for 5²/s2).
+    Taps across all phases still number exactly K^d — the IOM valid-MAC
+    count; no inserted zero is ever touched.
   * the in-tile overlap-add (paper: FIFO-V/H exchange) is a shifted in-VMEM
     accumulation into the per-phase buffer; phases interleave into the
     output by a reshape/transpose at write-out.
+  * the TRAINING backward pass runs on the same uniform grid: deconv's
+    adjoint is a strided convolution, so ``deconv_dx_pallas_3d`` reuses this
+    body's skeleton with the output phases collapsed to one, taps gathered
+    from dy's S^d input phases, channel roles swapped, and the d-tile axis
+    iterated in reverse (the halo carry flows backward); and
+    ``deconv_dw_pallas_3d`` accumulates per-tap [bci, bco] contractions
+    across the sequential (N, d-tile) grid dims into an f32 VMEM scratch,
+    carrying the last M_d - 1 x rows so cross-tile pairs never leave VMEM.
   * 2D is the degenerate case of a singleton middle dim (depth phase/tap
     loops statically collapse — the paper's "FIFO-D disabled"); ``ops.py``
     lifts 2D inputs as [N, H, 1, W, C] so the large image dim lands on the
@@ -66,13 +77,53 @@ def halo_depth(kernel, stride) -> int:
     return -(-kernel[0] // stride[0]) - 1
 
 
+def _phase_taps(kernel, stride):
+    """Static (phase_index, phase, valid taps) triples; empty phases skipped.
+
+    A tap ``m`` of phase ``p`` touches kernel element ``k = m*S + p``; taps
+    with any ``k >= K`` are the zero-padded tail and carry no MACs, so they
+    are dropped here at trace time.  Summed over phases the surviving taps
+    number exactly K^d — the IOM valid-MAC count.
+    """
+    m_max = _phase_geometry(kernel, stride)
+    out = []
+    for p_idx, p in enumerate(itertools.product(*(range(s) for s in stride))):
+        taps = [m for m in itertools.product(*(range(mm) for mm in m_max))
+                if all(mj * sj + pj < kj
+                       for mj, sj, pj, kj in zip(m, stride, p, kernel))]
+        if taps:  # S > K leaves phases with no taps (structural zeros)
+            out.append((p_idx, p, taps))
+    return out
+
+
+def phase_major_tap_index(kernel, stride):
+    """Flat kernel-element indices ordered phase-major (the weight layout).
+
+    The caller gathers ``w.reshape(prod(K), ci, co)[index]`` so each phase's
+    valid taps sit contiguously: the kernel bodies then feed a whole phase
+    to the MXU with ONE static slice — no per-tap loads, no zero-padded
+    Kpad tail.  Total length is exactly prod(K): every kernel element
+    belongs to exactly one phase.
+    """
+    idx = []
+    for _, p, taps in _phase_taps(kernel, stride):
+        for m in taps:
+            k = tuple(mj * sj + pj for mj, sj, pj in zip(m, stride, p))
+            flat = 0
+            for kj, kk in zip(k, kernel):
+                flat = flat * kk + kj
+            idx.append(flat)
+    assert len(idx) == math.prod(kernel)
+    return idx
+
+
 def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
                         tile_spatial, kernel, stride, out_trailing,
                         n_ci_blocks, out_dtype):
     """One grid step: accumulate a (batch, co-block, d-tile, ci-block) part.
 
     x_ref:   [1, dtile, H, W, bci]
-    w_ref:   [Kpad_d, Kpad_h, Kpad_w, bci, bco]   (zero-padded to M_max*S)
+    w_ref:   [prod(K), bci, bco]                  (phase-major tap order)
     o_ref:   [1, dtile*S_d, OH, OW, bco]          (this tile's output slab)
     acc_ref: VMEM f32 [n_phases, dtile + M_d - 1, L_h, L_w, bco]
     halo_ref: VMEM f32 [n_phases, M_d - 1, L_h, L_w, bco] (None if M_d == 1)
@@ -92,17 +143,21 @@ def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
     bci = x.shape[-1]
     x_flat = x.reshape(dhw, bci)
 
-    phases = list(itertools.product(*(range(s) for s in stride)))
-    for p_idx, p in enumerate(phases):
-        for m in itertools.product(*(range(mm) for mm in m_max)):
-            k = tuple(mj * sj + pj for mj, sj, pj in zip(m, stride, p))
-            if any(kj >= kk for kj, kk in zip(k, kernel)):
-                continue  # zero-padded tap: statically skipped (no MAC)
-            w_tap = w_ref[k]                        # [bci, bco]
-            contrib = jax.lax.dot_general(
-                x_flat, w_tap, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            contrib = contrib.reshape(*tile_spatial, -1)
+    off = 0
+    for p_idx, p, taps in _phase_taps(kernel, stride):
+        # Tap-batched MXU dispatch: the phase's valid taps sit contiguously
+        # in the phase-major weight layout, so ONE static slice feeds ONE
+        # contraction — x_flat [dhw, bci] against [n_taps, bci, bco] is a
+        # single [dhw, bci] @ [bci, n_taps*bco] matmul (S^d dispatches per
+        # grid step instead of K^d).  The column groups are then distributed
+        # into the shifted overlap-add slices (VPU adds, no MXU traffic).
+        w_taps = w_ref[off:off + len(taps)]         # [n_taps, bci, bco]
+        off += len(taps)
+        contribs = jax.lax.dot_general(
+            x_flat, w_taps, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)     # [dhw, n_taps, bco]
+        for t_idx, m in enumerate(taps):
+            contrib = contribs[:, t_idx].reshape(*tile_spatial, -1)
             # overlap-add: y_p[q] += x[q - m] * w_tap  ->  slice offset m
             idx = (p_idx,) + tuple(slice(mj, mj + ij)
                                    for mj, ij in zip(m, tile_spatial))
@@ -134,7 +189,7 @@ def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
         o_ref[0] = full[:, :out_trailing[0], :out_trailing[1]].astype(out_dtype)
 
 
-def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
+def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      kernel: Sequence[int], stride: Sequence[int],
                      block_ci: int, block_co: int,
                      dtile: int | None = None,
@@ -143,8 +198,9 @@ def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
 
     x: [N, D_pad, H, W, Ci] with ``D_pad`` a multiple of ``dtile``
     (``dtile=None`` means one tile spanning the whole leading dim);
-    w_padded: [Kpad..., Ci, Co] with Kpad = ceil(K/S)*S (zero tail).
-    Channels must divide the blocks (ops.py pads).
+    w_taps: [prod(K), Ci, Co] in the phase-major tap order of
+    ``phase_major_tap_index`` (ops.py gathers it), so each phase's taps are
+    one contiguous slice.  Channels must divide the blocks (ops.py pads).
 
     Whenever K_d > S_d the caller must zero-pad the true leading extent D by
     at least ``ceil(K_d/S_d) - 1`` rows (ops.py always pads to
@@ -154,7 +210,7 @@ def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
     or beyond (D-1)*S_d + K_d are zero and cropped by the caller.
     """
     n, d_pad, h, wdim, ci = x.shape
-    co = w_padded.shape[-1]
+    co = w_taps.shape[-1]
     kernel = tuple(kernel)
     stride = tuple(stride)
     if dtile is None:
@@ -173,7 +229,6 @@ def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
                          zip((h, wdim), stride[1:], kernel[1:]))
     out_block_lead = dtile * stride[0]
 
-    kpad = w_padded.shape[:3]
     body = functools.partial(
         _deconv_kernel_body,
         tile_spatial=tile_spatial, kernel=kernel, stride=stride,
@@ -191,8 +246,8 @@ def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
         in_specs=[
             pl.BlockSpec((1, dtile, h, wdim, block_ci),
                          lambda b, oc, dt, ic: (b, dt, 0, 0, ic)),
-            pl.BlockSpec((*kpad, block_ci, block_co),
-                         lambda b, oc, dt, ic: (0, 0, 0, ic, oc)),
+            pl.BlockSpec((math.prod(kernel), block_ci, block_co),
+                         lambda b, oc, dt, ic: (0, ic, oc)),
         ],
         out_specs=pl.BlockSpec((1, out_block_lead, *out_trailing, block_co),
                                lambda b, oc, dt, ic: (b, dt, 0, 0, oc)),
@@ -203,7 +258,7 @@ def deconv_pallas_3d(x: jax.Array, w_padded: jax.Array, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary", "arbitrary")),
-    )(x, w_padded)
+    )(x, w_taps)
 
 
 def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
@@ -231,9 +286,317 @@ def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
         in_elems = dtile * math.prod(trail)
         halo_elems = (math.prod(stride) * (m_max[0] - 1)
                       * math.prod(lengths[1:]))
-    kpad = tuple(m * s for m, s in zip(m_max, stride))
     return (in_elems * block_ci * in_dtype_bytes
-            + math.prod(kpad) * block_ci * block_co * in_dtype_bytes
+            + math.prod(kernel) * block_ci * block_co * in_dtype_bytes
             + math.prod(out_spatial) * block_co * in_dtype_bytes
             + (math.prod(stride) * math.prod(lengths) + halo_elems)
-            * block_co * 4)
+            * block_co * 4
+            # tap-batched matmul output of the widest phase (f32, pre-split)
+            + in_elems * math.prod(m_max) * block_co * 4)
+
+
+# -- Backward (VJP) kernels: the adjoint on the SAME fused 4D grid -----------
+
+def _deconv_dx_kernel_body(dy_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
+                           tile_spatial, kernel, stride, n_co_blocks,
+                           out_dtype):
+    """One grid step of dx — a stride-S gather-convolution of dy.
+
+    Deconv's adjoint is a strided convolution: dx[i] = sum_k dy[i*S+k]·w[k]
+    (contracted over Cout).  This is the forward body's skeleton with the
+    output phases collapsed to ONE and the taps gathered from the S^d
+    *input* phases of dy; the channel roles swap, so the sequential
+    adder-tree grid dim runs over Cout blocks and dx's Cin is the parallel
+    one.  The leading d-tile axis is iterated in REVERSE (the caller's index
+    maps use ``n_dtiles - 1 - t``): dy block t spills contributions into dx
+    tile t-1's tail rows, so the FIFO-D carry flows backward through the
+    grid — same recursive composition as the forward halo.
+
+    dy_ref:  [1, dtile*S_d, OH, OW, bco]   (aligned dy slab of tile t)
+    w_ref:   [prod(K), bci, bco]           (phase-major tap order)
+    o_ref:   [1, dtile, H, W, bci]         (this tile's dx slab)
+    acc_ref: VMEM f32 [dtile + M_d - 1, H, W, bci]
+    halo_ref: VMEM f32 [M_d - 1, H, W, bci] (None if M_d == 1)
+    """
+    r = pl.program_id(2)
+    cb = pl.program_id(3)
+    m_max = _phase_geometry(kernel, stride)
+    halo = halo_depth(kernel, stride)
+    dtile, h, wdim = tile_spatial
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[0]                                  # [dtile*S_d, OH, OW, bco]
+    bco = dy.shape[-1]
+
+    off = 0
+    for _, p, taps in _phase_taps(kernel, stride):
+        # gather input phase p of dy once: dy_ph[u] = dy[u*S + p]
+        dy_ph = dy[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
+        lh, lw = dy_ph.shape[1], dy_ph.shape[2]
+        # one wide matmul per phase: [dtile*Lh*Lw, bco] x [n_taps, bci, bco]
+        w_taps = w_ref[off:off + len(taps)]
+        off += len(taps)
+        res = jax.lax.dot_general(
+            dy_ph.reshape(-1, bco), w_taps, (((1,), (2,)), ((), ())),
+            preferred_element_type=jnp.float32)   # [dtile*Lh*Lw, n_taps, bci]
+        res = res.reshape(dtile, lh, lw, len(taps), -1)
+        for t_idx, m in enumerate(taps):
+            # dx[i, h, w] += res[i + m_d, h + m_h, w + m_w, tap]; the
+            # leading shift lands in the accumulator (carry rows at the top)
+            win = res[:, m[1]:m[1] + h, m[2]:m[2] + wdim, t_idx]
+            j0 = m_max[0] - 1 - m[0]
+            acc_ref[j0:j0 + dtile] += win
+
+    if halo:
+        # reversed FIFO-D: the previous (reversed) step worked on tile t+1
+        # and deposited its spill into THIS tile's tail rows ...
+        @pl.when(jnp.logical_and(cb == n_co_blocks - 1, r > 0))
+        def _carry_in():
+            acc_ref[dtile:] += halo_ref[...]
+
+        # ... and this tile's head rows (dx rows of tile t-1, read AFTER the
+        # carry-in so deep halos compose) are left for the next step.
+        @pl.when(cb == n_co_blocks - 1)
+        def _carry_out():
+            halo_ref[...] = acc_ref[:halo]
+
+    @pl.when(cb == n_co_blocks - 1)
+    def _flush():
+        o_ref[0] = acc_ref[halo:].astype(out_dtype)
+
+
+def deconv_dx_pallas_3d(dy: jax.Array, w: jax.Array, *,
+                        kernel: Sequence[int], stride: Sequence[int],
+                        block_ci: int, block_co: int, dtile: int,
+                        interpret: bool = True,
+                        out_dtype=None) -> jax.Array:
+    """dx on the uniform grid: one ``pallas_call``, any dy size.
+
+    dy: [N, n_dtiles*dtile*S_d, OH, OW, Co] — the un-cropped cotangent,
+    zero-padded on the leading dim to the tile grid (ops.py pads); trailing
+    extents are the exact Eq. (1) forward output, so H/W recover statically.
+    w: [prod(K), Ci, Co] in the phase-major tap order (the same layout the
+    forward consumes — ops.py gathers it once).  Returns
+    [N, n_dtiles*dtile, H, W, Ci]; rows at or beyond the true input extent
+    are cropped by the caller.
+    """
+    n, od_pad, oh, ow, co = dy.shape
+    ci = w.shape[-2]
+    kernel = tuple(kernel)
+    stride = tuple(stride)
+    out_dtype = out_dtype or dy.dtype
+    assert od_pad % (dtile * stride[0]) == 0, (od_pad, dtile, stride)
+    n_dt = od_pad // (dtile * stride[0])
+    h = (oh - kernel[1]) // stride[1] + 1
+    wdim = (ow - kernel[2]) // stride[2] + 1
+    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                       block_ci, block_co)
+    n_ci, n_co = ci // block_ci, co // block_co
+    halo = halo_depth(kernel, stride)
+    tile_spatial = (dtile, h, wdim)
+
+    body = functools.partial(
+        _deconv_dx_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
+        stride=stride, n_co_blocks=n_co, out_dtype=out_dtype)
+    scratch = [pltpu.VMEM((dtile + halo, h, wdim, block_ci), jnp.float32)]
+    if halo:
+        scratch.append(pltpu.VMEM((halo, h, wdim, block_ci), jnp.float32))
+
+    grid = (n, n_ci, n_dt, n_co)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dtile * stride[0], oh, ow, block_co),
+                         lambda b, ic, t, oc: (b, n_dt - 1 - t, 0, 0, oc)),
+            pl.BlockSpec((math.prod(kernel), block_ci, block_co),
+                         lambda b, ic, t, oc: (0, ic, oc)),
+        ],
+        out_specs=pl.BlockSpec((1, dtile, h, wdim, block_ci),
+                               lambda b, ic, t, oc: (b, n_dt - 1 - t, 0, 0,
+                                                     ic)),
+        out_shape=jax.ShapeDtypeStruct((n, n_dt * dtile, h, wdim, ci),
+                                       out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+    )(dy, w)
+
+
+def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
+                           tile_spatial, kernel, stride, n_batch, n_dtiles,
+                           out_dtype):
+    """One grid step of dw: per-tap [bci, bco] contractions into VMEM.
+
+    dw[k, ci, co] = sum_{n, i} x[n, i, ci] * dy[n, i*S+k, co] — for each tap
+    the contraction runs over the whole (batch, spatial) extent, so it
+    accumulates across the sequential (N, d-tile) grid dims into an f32 VMEM
+    scratch and flushes once at the last step.  Cross-tile pairs (x tail
+    rows against the next dy block's head) ride a carried copy of the last
+    M_d - 1 x rows — iteration stays forward, no second pass.
+
+    A phase's valid taps form a cross product (leading shifts) x (trailing
+    shifts), so the whole phase is ONE MXU dispatch: stacked x windows
+    against stacked dy windows contract into every per-tap [bci, bco] block
+    at once — S^d dispatches per grid step here too, not K^d.  The scratch
+    is laid out tap-flat in the same phase-major order as the weights
+    (contiguous per-phase runs); the caller unscrambles.
+
+    x_ref:   [1, dtile, H, W, bci]
+    dy_ref:  [1, dtile*S_d, OH, OW, bco]
+    o_ref:   [prod(K), bci, bco]           (phase-major tap order)
+    acc_ref: VMEM f32 [prod(K), bci, bco]
+    xcarry_ref: VMEM f32 [M_d - 1, H, W, bci] (None if M_d == 1)
+    """
+    b = pl.program_id(2)
+    t = pl.program_id(3)
+    m_max = _phase_geometry(kernel, stride)
+    halo = halo_depth(kernel, stride)
+    dtile, h, wdim = tile_spatial
+
+    @pl.when(jnp.logical_and(b == 0, t == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)                # [dtile, H, W, bci]
+    if halo:
+        @pl.when(t == 0)
+        def _zero_carry():
+            xcarry_ref[...] = jnp.zeros_like(xcarry_ref)
+        # x rows [t*dtile - (M_d-1), (t+1)*dtile): carried head + this tile
+        x_ext = jnp.concatenate([xcarry_ref[...], x], axis=0)
+    else:
+        x_ext = x
+    bci = x.shape[-1]
+    dy = dy_ref[0]                                  # [dtile*S_d, OH, OW, bco]
+    bco = dy.shape[-1]
+
+    off = 0
+    for _, p, taps in _phase_taps(kernel, stride):
+        dy_ph = dy[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
+        # the phase's taps are a (leading m_d) x (trailing m_h, m_w) grid
+        lead = sorted({m[0] for m in taps})
+        trail = [m[1:] for m in taps if m[0] == lead[0]]
+        assert len(taps) == len(lead) * len(trail)
+        # x[u - m_d] pairs with dy phase row u: leading shifts window x_ext,
+        # trailing shifts window dy_ph
+        xs = jnp.stack([x_ext[m_max[0] - 1 - md:m_max[0] - 1 - md + dtile]
+                        for md in lead])            # [G, dtile, H, W, bci]
+        dys = jnp.stack([dy_ph[:, mh:mh + h, mw:mw + wdim]
+                         for mh, mw in trail])      # [T, dtile, H, W, bco]
+        res = jax.lax.dot_general(
+            xs.reshape(len(lead), -1, bci), dys.reshape(len(trail), -1, bco),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)     # [G, bci, T, bco]
+        res = res.transpose(0, 2, 1, 3).reshape(len(taps), bci, bco)
+        acc_ref[off:off + len(taps)] += res
+        off += len(taps)
+
+    if halo:
+        # recursive like the forward halo: composes when dtile < M_d - 1
+        xcarry_ref[...] = x_ext[dtile:]
+
+    @pl.when(jnp.logical_and(b == n_batch - 1, t == n_dtiles - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
+                        kernel: Sequence[int], stride: Sequence[int],
+                        block_ci: int, block_co: int, dtile: int,
+                        interpret: bool = True,
+                        out_dtype=None) -> jax.Array:
+    """dw on the uniform grid: one ``pallas_call`` reducing over (N, tiles).
+
+    x: [N, n_dtiles*dtile, H, W, Ci] (leading dim zero-padded to the tile
+    grid — padded rows pair only with padded/zero dy rows, contributing
+    nothing); dy: [N, n_dtiles*dtile*S_d, OH, OW, Co] un-cropped and padded
+    likewise.  Returns dw [prod(K), Ci, Co] in PHASE-MAJOR tap order — the
+    caller inverts ``phase_major_tap_index`` and crops channel padding.
+    """
+    n, d_pad, h, wdim, ci = x.shape
+    co = dy.shape[-1]
+    kernel = tuple(kernel)
+    stride = tuple(stride)
+    out_dtype = out_dtype or x.dtype
+    assert d_pad % dtile == 0, (d_pad, dtile)
+    n_dt = d_pad // dtile
+    assert dy.shape[1] == d_pad * stride[0], (dy.shape, d_pad, stride)
+    oh, ow = dy.shape[2], dy.shape[3]
+    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                       block_ci, block_co)
+    n_ci, n_co = ci // block_ci, co // block_co
+    halo = halo_depth(kernel, stride)
+    tile_spatial = (dtile, h, wdim)
+
+    body = functools.partial(
+        _deconv_dw_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
+        stride=stride, n_batch=n, n_dtiles=n_dt, out_dtype=out_dtype)
+    n_taps = math.prod(kernel)
+    scratch = [pltpu.VMEM((n_taps, block_ci, block_co), jnp.float32)]
+    if halo:
+        scratch.append(pltpu.VMEM((halo, h, wdim, block_ci), jnp.float32))
+
+    grid = (n_ci, n_co, n, n_dt)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dtile, h, wdim, block_ci),
+                         lambda ic, oc, b, t: (b, t, 0, 0, ic)),
+            pl.BlockSpec((1, dtile * stride[0], oh, ow, block_co),
+                         lambda ic, oc, b, t: (b, t, 0, 0, oc)),
+        ],
+        out_specs=pl.BlockSpec((n_taps, block_ci, block_co),
+                               lambda ic, oc, b, t: (0, ic, oc)),
+        out_shape=jax.ShapeDtypeStruct((n_taps, ci, co), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+    )(x, dy)
+
+
+def vmem_bytes_bwd(in_spatial, kernel, stride, block_ci, block_co,
+                   in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static per-grid-step VMEM footprint of the two VJP kernels (max).
+
+    Models the dx step (dy slab + weights + dx accumulator/halo + the
+    tap-batched matmul output of the widest phase) and the dw step (x slab +
+    dy slab + f32 dw scratch + f32 x_ext/carry); the planner budgets
+    ``max(forward, dx, dw)`` when asked to plan for training.
+    """
+    m_max = _phase_geometry(kernel, stride)
+    halo = m_max[0] - 1
+    trail = tuple(in_spatial[1:])
+    if dtile is None:
+        dtile = in_spatial[0] + halo
+    out_trail = tuple((i - 1) * s + k
+                      for i, s, k in zip(trail, stride[1:], kernel[1:]))
+    trail_elems = math.prod(trail)
+    dy_elems = dtile * stride[0] * math.prod(out_trail)
+    x_elems = dtile * trail_elems
+    k_elems = math.prod(kernel)
+    taps_max = math.prod(m_max)
+    # widest per-phase gather of dy (phase 0) and its batched matmul output
+    ph_elems = dtile * math.prod(-(-o // s)
+                                 for o, s in zip(out_trail, stride[1:]))
+    dx_step = (dy_elems * block_co * in_dtype_bytes            # dy slab
+               + k_elems * block_ci * block_co * in_dtype_bytes  # weights
+               + x_elems * block_ci * in_dtype_bytes           # dx out slab
+               + (dtile + 2 * halo) * trail_elems * block_ci * 4  # acc+halo
+               + ph_elems * taps_max * block_ci * 4)           # batched out
+    dw_step = (x_elems * block_ci * in_dtype_bytes             # x slab
+               + dy_elems * block_co * in_dtype_bytes          # dy slab
+               + k_elems * block_ci * block_co * (in_dtype_bytes + 4)
+               + (dtile + 2 * halo) * trail_elems * block_ci * 4  # x_ext+c
+               # stacked per-phase window batches (widest phase, f32)
+               + x_elems * (m_max[0] * block_ci
+                            + math.prod(m_max[1:]) * block_co) * 4)
+    return max(dx_step, dw_step)

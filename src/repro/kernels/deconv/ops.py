@@ -1,10 +1,14 @@
 """Jit'd public wrapper for the Pallas IOM deconv kernel.
 
 Handles: rank lifting to canonical 3D (the large, tileable dim leading),
-channel padding to block multiples, weight zero-padding to the phase grid
-(Kpad = ceil(K/S)*S), leading-dim zero-padding to the planner's tile grid,
-border cropping, and a custom VJP (deconv's adjoint is a strided
-convolution; dw is a K^d set of small contractions).
+channel padding to block multiples, the phase-major weight gather (each
+phase's valid taps contiguous, feeding the kernel's tap-batched matmuls),
+leading-dim zero-padding to the planner's tile grid,
+border cropping, and a custom VJP that runs BOTH cotangents on the same
+uniform Pallas grid as the forward (deconv's adjoint is a strided
+convolution): ``dx`` is a stride-S gather-convolution of ``dy`` and ``dw``
+a set of per-tap [bci, bco] contractions reduced across the sequential
+grid dims — training steps never leave the paper's engine.
 
 Oversized inputs are NOT split here: the unified planner
 (``repro.core.tiling.plan_deconv_tiles``) jointly picks
@@ -57,6 +61,19 @@ def _pad_axis_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
+def _phase_major(w3, kernel3, stride3):
+    """[K..., ci, co] -> [prod(K), ci, co] in phase-major tap order.
+
+    Each phase's valid taps land contiguously, so the kernel bodies slice a
+    whole phase for their tap-batched matmul — see
+    ``kernel.phase_major_tap_index``.  The gather is a static permutation,
+    fused by XLA; it replaces the old Kpad zero-tail padding entirely.
+    """
+    idx = _k.phase_major_tap_index(kernel3, stride3)
+    flat = w3.reshape(-1, *w3.shape[3:])
+    return flat[jnp.asarray(idx)]
+
+
 def _lift_3d(x, w, stride):
     """Canonicalise rank-1/2 inputs to rank-3; returns squeeze axes.
 
@@ -91,9 +108,7 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
     x3 = _pad_axis_to(x3, -1, block_ci)
     w3 = _pad_axis_to(_pad_axis_to(w3, -1, block_co), -2, block_ci)
     m_max = tuple(-(-k // s) for k, s in zip(kernel3, stride3))
-    kpad = tuple(m * s for m, s in zip(m_max, stride3))
-    w3 = jnp.pad(w3, [(0, kp - kk) for kp, kk in zip(kpad, kernel3)]
-                 + [(0, 0), (0, 0)])
+    w3 = _phase_major(w3, kernel3, stride3)
     if dtile is None:
         dtile = x3.shape[1] + m_max[0] - 1
         n_dtiles = 1
@@ -147,8 +162,11 @@ def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
                    max_tile_bytes), (x, w)
 
 
-def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
-         res, dy):
+def _bwd_einsum(stride, padding, res, dy):
+    """The pre-Pallas backward, kept VERBATIM as the benchmark baseline: a
+    Python loop of K^d full-array f32 einsums with no tiling, no VMEM
+    planning, and an unconditional upcast.  Production gradients go through
+    ``_bwd`` below — the uniform Pallas grid."""
     x, w = res
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
@@ -175,6 +193,69 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
         dx = dx + jnp.einsum("n...o,io->n...i", dy_k, wf[k])
         dw = dw.at[k].set(jnp.einsum("n...i,n...o->io", xf, dy_k))
     return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
+         res, dy):
+    """Training backward on the uniform Pallas grid.
+
+    Deconv's adjoint is a strided convolution, so both cotangents reuse the
+    forward's fused 4D grid (see ``kernel.py``): ``dx`` is a stride-S
+    gather-convolution of ``dy`` against the tap weights (phases collapsed
+    to one, reversed d-tile iteration), ``dw`` a per-tap [bci, bco]
+    contraction accumulated across the sequential grid dims in VMEM.  One
+    ``plan_deconv_tiles(backward=True)`` decision budgets the working sets
+    of both kernels; inputs stay in their storage dtype (accumulation is
+    f32 in-kernel — no full-array HBM upcast).
+    """
+    x, w = res
+    rank = x.ndim - 2
+    stride_r = _canon(stride, rank)
+    padding_r = _canon(padding, rank)
+
+    # un-crop dy back to the full Eq.(1) extent
+    if any(padding_r):
+        dy = jnp.pad(dy, [(0, 0)] + [(p, p) for p in padding_r] + [(0, 0)])
+
+    x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
+    dy3 = jnp.expand_dims(dy, squeeze) if squeeze else dy
+    kernel3 = w3.shape[:3]
+    ci, co = x3.shape[-1], w3.shape[-1]
+
+    plan = _tiling.plan_deconv_tiles(
+        x3.shape[1:4], kernel3, stride3, ci, co,
+        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
+        block_ci=block_ci, block_co=block_co, backward=True)
+
+    # pad channels to the blocks and leading dims to the tile grid: x to
+    # n_dtiles*dtile rows, dy to the matching output extent (the kernels'
+    # alignment contract; zero rows pair only with zeros)
+    x3p = _pad_axis_to(x3, -1, plan.block_ci)
+    w3p = _pad_axis_to(_pad_axis_to(w3, -1, plan.block_co), -2, plan.block_ci)
+    dy3p = _pad_axis_to(dy3, -1, plan.block_co)
+    d_pad = plan.n_dtiles * plan.dtile
+    x3p = jnp.pad(x3p, [(0, 0), (0, d_pad - x3.shape[1])] + [(0, 0)] * 3)
+    dy3p = jnp.pad(dy3p, [(0, 0), (0, d_pad * stride3[0] - dy3.shape[1])]
+                   + [(0, 0)] * 3)
+
+    dx3 = _k.deconv_dx_pallas_3d(
+        dy3p, _phase_major(w3p, kernel3, stride3), kernel=kernel3,
+        stride=stride3, block_ci=plan.block_ci,
+        block_co=plan.block_co, dtile=plan.dtile, interpret=interpret,
+        out_dtype=x.dtype)[:, :x3.shape[1], :, :, :ci]
+    dw3 = _k.deconv_dw_pallas_3d(
+        x3p, dy3p, kernel=kernel3, stride=stride3, block_ci=plan.block_ci,
+        block_co=plan.block_co, dtile=plan.dtile, interpret=interpret,
+        out_dtype=w.dtype)[:, :ci, :co]
+    # the kernel emits taps phase-major; invert back to kernel-element order
+    perm = _k.phase_major_tap_index(kernel3, stride3)
+    inv = [0] * len(perm)
+    for pos, j in enumerate(perm):
+        inv[j] = pos
+    dw3 = dw3[jnp.asarray(inv)]
+
+    dx = jnp.squeeze(dx3, axis=squeeze) if squeeze else dx3
+    return dx, dw3.reshape(w.shape)
 
 
 _deconv.defvjp(_fwd, _bwd)
