@@ -1,9 +1,13 @@
 """Pallas-kernel microbenchmark (interpret mode on CPU): per-method
 wall-time on downsized paper layers, the fused multi-tile grid vs the seed's
-stitched Python-loop overlap-add, the NEW Pallas training backward (VJP) vs
-the replaced einsum ``_bwd`` and vs XLA conv-transpose autodiff, plus the
-tiling planner's forward/backward decisions for the real layer geometry
-(the TPU-relevant structural numbers).
+stitched Python-loop overlap-add, the Pallas training backward (VJP) vs
+the replaced einsum ``_bwd`` and vs XLA conv-transpose autodiff, the NEW
+first-class forward-conv rows (stride 1 and 2, 2D and 3D, parity vs the
+``lax`` engine asserted at 1e-4), END-TO-END network rows (reduced
+discriminator / V-Net-style encoder on the uniform Pallas engine vs the
+XLA conv engine, with jaxpr dispatch counters), plus the tiling planner's
+forward/backward decisions for the real layer geometry (the TPU-relevant
+structural numbers).
 
 Also emits machine-readable ``BENCH_kernel.json`` at the repo root with
 every row and the planner decisions, so future PRs can diff perf.
@@ -22,10 +26,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import networks
+from repro.core import conv_nd, networks
 from repro.core.functional import deconv_nd, deconv_output_shape, deconv_xla
 from repro.core.jaxpr_utils import count_prims, pallas_eqns
-from repro.core.tiling import plan_deconv_tiles
+from repro.core.tiling import plan_conv_tiles, plan_deconv_tiles
+from repro.kernels.conv import ops as conv_ops
 from repro.kernels.deconv import ops as deconv_ops
 from repro.kernels.deconv.kernel import vmem_bytes, vmem_bytes_bwd
 
@@ -66,6 +71,8 @@ def run() -> list[str]:
     _split_path_rows(rng, rec)
     _matmul_count_rows(rng, rec)
     _backward_rows(rng, rec)
+    _conv_rows(rng, rec)
+    _network_rows(rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
     # (forward plan and the backward-budgeted training plan).  The lift
@@ -184,7 +191,7 @@ def _backward_rows(rng, rec) -> None:
     dy = jnp.ones_like(y)
 
     pallas_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd(
-        s, 0, None, None, True, budget, (x, w), dy))
+        s, 0, None, None, True, budget, None, (x, w), dy))
     einsum_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd_einsum(
         s, 0, (x, w), dy))
     for a, b in zip(pallas_vjp(x, w, dy), einsum_vjp(x, w, dy)):
@@ -206,6 +213,89 @@ def _backward_rows(rng, rec) -> None:
         "fwd+dx+dw_on_uniform_grid")
     rec("kernel_grad_split_xla_autodiff", _time(grad_xla, x, w),
         "lax_conv_transpose_autodiff")
+
+
+def _conv_rows(rng, rec) -> None:
+    """Forward-conv rows: the promoted strided-conv kernel vs the XLA conv
+    engine it displaces — stride 1 and 2, 2D and 3D, parity asserted at
+    1e-4 (the PR's acceptance tolerance)."""
+    cases = [
+        ("2d_s1", (24, 24), (3, 3), 1, 16, 16),
+        ("2d_s2", (24, 24), (3, 3), 2, 16, 16),
+        ("3d_s1", (10, 10, 10), (3, 3, 3), 1, 8, 8),
+        ("3d_s2", (10, 10, 10), (3, 3, 3), 2, 8, 8),
+    ]
+    for name, in_sp, k, s, ci, co in cases:
+        x = jnp.asarray(rng.randn(1, *in_sp, ci), jnp.float32)
+        w = jnp.asarray(rng.randn(*k, ci, co), jnp.float32)
+        f_pallas = jax.jit(lambda x, w, s=s: conv_ops.conv(x, w, s, 1))
+        f_xla = jax.jit(lambda x, w, s=s: conv_nd(x, w, s, 1, method="xla"))
+        np.testing.assert_allclose(np.asarray(f_pallas(x, w)),
+                                   np.asarray(f_xla(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+        if len(in_sp) == 2:
+            sp3 = (in_sp[0] + 2, 1, in_sp[1] + 2)
+            k3 = (k[0], 1, k[1])
+            s3 = (s, 1, s)
+        else:
+            sp3 = tuple(i + 2 for i in in_sp)
+            k3, s3 = k, (s,) * 3
+        plan = plan_conv_tiles(sp3, k3, s3, ci, co)
+        rec(f"conv_{name}_pallas", _time(f_pallas, x, w), plan.describe())
+        rec(f"conv_{name}_xla", _time(f_xla, x, w), "lax_conv_general")
+
+
+def _network_rows(rec) -> None:
+    """End-to-end network rows: whole conv stacks on the uniform Pallas
+    engine vs the XLA conv engine, with jaxpr dispatch counters (every
+    pallas run must show conv_general_dilated == 0)."""
+    from repro.configs import get_config
+    from repro.models import dcnn as D
+    from repro.sharding.partition import split_params
+
+    key = jax.random.PRNGKey(0)
+    rng = np.random.RandomState(0)
+
+    # reduced DCGAN discriminator: 4 strided 2D convs + GAP head
+    cfg = get_config("dcgan").reduced()
+    disc, _ = split_params(D.init_discriminator(cfg, key))
+    layers = D._scaled_layers(cfg)
+    x2 = jnp.asarray(rng.randn(2, *layers[-1].out_spatial, layers[-1].cout),
+                     jnp.float32)
+    # "xla" is a valid method for both engines, so the baseline row name
+    # pairs with the encoder rows below (net_*_pallas vs net_*_xla).
+    for method in ("pallas", "xla"):
+        f = jax.jit(lambda p, x, m=method: D.discriminator_forward(
+            p, cfg, x, method=m))
+        counts = count_prims(jax.make_jaxpr(f)(disc, x2).jaxpr, {},
+                             into_pallas=False)
+        n_pl = counts.get("pallas_call", 0)
+        n_cg = counts.get("conv_general_dilated", 0)
+        if method == "pallas":
+            assert n_cg == 0, counts
+        rec(f"net_discriminator_{method}", _time(f, disc, x2),
+            f"pallas{n_pl}_convgd{n_cg}")
+
+    # V-Net-style 3D encoder stem: conv s1 -> conv s2 (the workload shape
+    # of the full segmenter's hot path, sized for the bench smoke)
+    ws = [jnp.asarray(rng.randn(3, 3, 3, 4, 8) * 0.1, jnp.float32),
+          jnp.asarray(rng.randn(3, 3, 3, 8, 16) * 0.1, jnp.float32)]
+    x3 = jnp.asarray(rng.randn(1, 16, 16, 16, 4), jnp.float32)
+
+    def encoder(x, ws, method):
+        h = jax.nn.relu(conv_nd(x, ws[0], 1, 1, method=method))
+        return jax.nn.relu(conv_nd(h, ws[1], 2, 1, method=method))
+
+    for method in ("pallas", "xla"):
+        f = jax.jit(lambda x, ws, m=method: encoder(x, ws, m))
+        counts = count_prims(jax.make_jaxpr(f)(x3, ws).jaxpr, {},
+                             into_pallas=False)
+        n_pl = counts.get("pallas_call", 0)
+        n_cg = counts.get("conv_general_dilated", 0)
+        if method == "pallas":
+            assert n_cg == 0, counts
+        rec(f"net_vnet_encoder_{method}", _time(f, x3, ws),
+            f"pallas{n_pl}_convgd{n_cg}")
 
 
 def _write_json(recs, plans) -> None:

@@ -1,5 +1,8 @@
 """3D example: V-Net segmenting synthetic spheres — the paper's volumetric
-benchmark, decoder deconvolutions on the uniform IOM engine.
+benchmark.  Decoder deconvolutions run on the uniform IOM engine; with
+``--method pallas`` the encoder convs, skip-merge convs and the 1x1x1 head
+join them on the same fused Pallas grid (repro.kernels.conv), so the whole
+forward executes without a single ``conv_general_dilated`` dispatch.
 
     PYTHONPATH=src python examples/segment_vnet3d.py --steps 60
 """

@@ -1,10 +1,15 @@
 """End-to-end driver: train the (reduced) DCGAN generator/discriminator for
 a few hundred steps through the fault-tolerant Trainer, with checkpointing
-and resume.  The generator's deconvolutions run through the paper's IOM
-engine.
+and resume.  ``--method`` drives the WHOLE GAN step through the uniform
+engine: the generator's deconvolutions always route through the paper's
+IOM engine, and with ``--method pallas`` the discriminator's strided convs
+run on the same fused Pallas grid too (repro.kernels.conv) — a full
+generator+discriminator training step with zero ``conv_general_dilated``
+dispatches.
 
     PYTHONPATH=src python examples/train_dcgan.py --steps 200
-(use --full for the paper-size generator — slow on CPU)
+(use --full for the paper-size generator — slow on CPU; --method pallas
+runs every conv AND deconv on the Pallas engine)
 """
 
 import argparse

@@ -1,7 +1,11 @@
 # The paper's primary contribution: uniform 2D/3D deconvolution with
 # input-oriented mapping (IOM), adapted TPU-natively (polyphase + Pallas).
+# Since PR 3 the engine is bidirectional: ``conv_nd`` dispatches forward
+# strided convolutions onto the same fused Pallas grid (repro.core.engine),
+# so whole networks run on one engine.
 from repro.core.functional import (  # noqa: F401
     METHODS,
+    canon_padding,
     deconv_macs,
     deconv_nd,
     deconv_iom,
@@ -13,5 +17,11 @@ from repro.core.functional import (  # noqa: F401
     phase_kernels,
     valid_mac_fraction,
     zero_insert,
+)
+from repro.core.engine import (  # noqa: F401
+    CONV_METHODS,
+    conv_nd,
+    conv_output_shape,
+    uniform_conv_method,
 )
 from repro.core import networks, sparsity, tiling, comparison  # noqa: F401

@@ -65,6 +65,29 @@ def _canon(v, rank: int) -> tuple[int, ...]:
     return v
 
 
+def canon_padding(padding, rank: int) -> tuple[tuple[int, int], ...]:
+    """Canonicalise ``padding`` to ``((lo, hi), ...)`` per spatial dim.
+
+    Accepts a scalar (symmetric everywhere), a length-``rank`` sequence
+    whose entries are scalars (symmetric per dim) or ``(lo, hi)`` pairs —
+    the ``DeconvLayer.crop`` convention, e.g. ``((0, 1),) * rank`` for the
+    exact-doubling crop.  Entries may mix scalars and pairs.
+    """
+    if isinstance(padding, int):
+        return ((padding, padding),) * rank
+    padding = tuple(padding)
+    assert len(padding) == rank, (padding, rank)
+    out = []
+    for p in padding:
+        try:
+            pi = int(p)
+            out.append((pi, pi))
+        except TypeError:
+            lo, hi = p
+            out.append((int(lo), int(hi)))
+    return tuple(out)
+
+
 def dim_numbers(rank: int) -> lax.ConvDimensionNumbers:
     """Channels-last conv dimension numbers for a given spatial rank."""
     sp = _SPATIAL_CHARS[-rank:]
@@ -74,14 +97,19 @@ def dim_numbers(rank: int) -> lax.ConvDimensionNumbers:
 
 
 def deconv_output_shape(in_spatial: Ints, kernel: Ints, stride: Ints,
-                        padding: Ints | int = 0) -> tuple[int, ...]:
-    """Eq. (1): O = (I-1)*S + K, then crop ``padding`` from both borders."""
+                        padding=0) -> tuple[int, ...]:
+    """Eq. (1): O = (I-1)*S + K, then crop ``padding`` from the borders.
+
+    ``padding`` follows ``canon_padding``: a scalar, per-dim scalars, or
+    per-dim ``(lo, hi)`` pairs (asymmetric crop).
+    """
     rank = len(in_spatial)
     kernel = _canon(kernel, rank)
     stride = _canon(stride, rank)
-    padding = _canon(padding, rank)
-    return tuple((i - 1) * s + k - 2 * p
-                 for i, k, s, p in zip(in_spatial, kernel, stride, padding))
+    pads = canon_padding(padding, rank)
+    return tuple((i - 1) * s + k - lo - hi
+                 for i, k, s, (lo, hi) in zip(in_spatial, kernel, stride,
+                                              pads))
 
 
 def zero_insert(x: jax.Array, stride: Ints) -> jax.Array:
@@ -125,13 +153,13 @@ def _flip_spatial(w: jax.Array) -> jax.Array:
     return jnp.flip(w, axis=tuple(range(rank)))
 
 
-def _crop(y: jax.Array, padding: Ints) -> jax.Array:
+def _crop(y: jax.Array, padding) -> jax.Array:
     rank = y.ndim - 2
-    padding = _canon(padding, rank)
-    if all(p == 0 for p in padding):
+    pads = canon_padding(padding, rank)
+    if all(lo == 0 and hi == 0 for lo, hi in pads):
         return y
     idx = (slice(None),) + tuple(
-        slice(p, dim - p) for p, dim in zip(padding, y.shape[1:-1])
+        slice(lo, dim - hi) for (lo, hi), dim in zip(pads, y.shape[1:-1])
     ) + (slice(None),)
     return y[idx]
 
@@ -271,7 +299,11 @@ def deconv_nd(x: jax.Array, w: jax.Array, stride: Ints, padding: Ints | int = 0,
 
     x: [N, *spatial, Cin] with spatial rank 1..3; w: [*K, Cin, Cout].
     2D is the degenerate 3D case (the paper gates FIFO-D off; here the depth
-    loop statically collapses).
+    loop statically collapses).  ``padding`` is the border crop applied on
+    top of the Eq. (1) extent, as a scalar or per-dim ``(lo, hi)`` pairs —
+    ``((0, 1),) * rank`` is the benchmark networks' exact-doubling crop
+    (``DeconvLayer.crop``).  The forward STRIDED convolution lives on the
+    same grid: see ``repro.core.engine.conv_nd``.
     """
     if method == "oom":
         return deconv_oom(x, w, stride, padding, **kw)

@@ -130,7 +130,7 @@ def network_summary(name: str) -> dict:
     }
 
 
-# -- Unified deconv tiling planner (Pallas kernel) ---------------------------
+# -- Unified conv/deconv tiling planner (Pallas engine) ----------------------
 
 # default VMEM budget the planner targets per grid step
 DECONV_VMEM_BUDGET = 8 * 1024 * 1024
@@ -138,15 +138,18 @@ DECONV_VMEM_BUDGET = 8 * 1024 * 1024
 
 @dataclasses.dataclass(frozen=True)
 class DeconvTilePlan:
-    """Joint (leading-dim tile, channel blocks) decision for one deconv call.
+    """Joint (leading-dim tile, channel blocks) decision for one engine call.
 
-    ``dtile`` input rows of the (lifted) leading spatial dim are resident
-    per grid step; ``n_dtiles`` is the grid extent of the sequential tile
-    dimension (1 = the whole input is a single resident tile).  The fused
-    kernel serves every plan with ONE ``pallas_call``; adjacent tiles
-    exchange their overlap-add halo in-grid (see kernels/deconv/kernel.py).
-    ``step_vmem_bytes`` is the modeled per-step working set the decision was
-    made against — benchmarks report it alongside timings.
+    ``dtile`` rows of the (lifted) leading spatial dim are resident per grid
+    step — INPUT rows for a deconv, OUTPUT rows for a forward conv (the two
+    are the same quantity under the engine's conv<->deconv duality);
+    ``n_dtiles`` is the grid extent of the sequential tile dimension (1 =
+    the whole extent is a single resident tile).  The fused kernels serve
+    every plan with ONE ``pallas_call``; adjacent tiles exchange their
+    overlap-add halo in-grid (see kernels/deconv/kernel.py and
+    kernels/conv/kernel.py).  ``step_vmem_bytes`` is the modeled per-step
+    working set the decision was made against — benchmarks report it
+    alongside timings.
     """
     dtile: int
     n_dtiles: int
@@ -165,14 +168,26 @@ class DeconvTilePlan:
                 f"_vmem{self.step_vmem_bytes}")
 
 
-def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
-                      vmem_budget: int = DECONV_VMEM_BUDGET,
-                      block_ci: int | None = None,
-                      block_co: int | None = None,
-                      allow_split: bool = True,
-                      backward: bool = False,
-                      in_dtype_bytes: int = 2) -> DeconvTilePlan:
+def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
+                       mode: str = "deconv",
+                       vmem_budget: int = DECONV_VMEM_BUDGET,
+                       block_ci: int | None = None,
+                       block_co: int | None = None,
+                       allow_split: bool = True,
+                       backward: bool = False,
+                       in_dtype_bytes: int = 2) -> DeconvTilePlan:
     """Jointly pick ``(dtile, block_ci, block_co)`` against the VMEM budget.
+
+    The SHARED planner entry for both directions of the uniform engine:
+    ``mode="deconv"`` budgets the deconv forward (and, with
+    ``backward=True``, its two VJP kernels); ``mode="conv"`` budgets the
+    first-class strided convolution, where ``in_spatial`` is the PADDED
+    conv input extent and ``cin``/``cout``/``block_ci``/``block_co`` keep
+    their conv sense (ci contracted, co produced).  One VMEM byte model
+    serves both: the conv kernel IS the deconv dx body, so its working set
+    is ``kernels.conv.kernel.vmem_bytes`` and a conv training step
+    additionally budgets the deconv-forward kernel (conv's dx) and the dw
+    kernel with the channel roles swapped.
 
     Preference order follows the paper's blocking: keep channel parallelism
     (Tm/Tn -> MXU-wide 128-channel blocks) and shrink the spatial tile
@@ -182,30 +197,50 @@ def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
     spatial tile adapts.  ``allow_split=False`` pins ``n_dtiles == 1`` and
     reproduces the channels-only shrink of the old ``choose_blocks``.
 
-    ``backward=True`` plans for a TRAINING step: the per-step byte model is
-    the max over the forward working set and the two VJP kernels' working
-    sets (dy slab + dx accumulator/halo, and the f32 dw scratch + x carry —
-    see ``kernels.deconv.kernel.vmem_bytes_bwd``), so one plan serves the
-    forward and both backward ``pallas_call``s.
-
     The planned leading extent includes ``ceil(K_d/S_d) - 1`` rows of zero
     slack so the final tile's halo carry-out is structurally zero (the
-    kernel's contract); ``n_dtiles * dtile`` always covers it.
+    kernels' contract); ``n_dtiles * dtile`` always covers it.
     """
     from repro.kernels.deconv import kernel as _k  # local: avoids a cycle
 
-    d = in_spatial[0]
+    if mode == "conv":
+        from repro.core.engine import conv_output_shape
+        from repro.kernels.conv import kernel as _ck
+
+        out_sp = conv_output_shape(in_spatial, kernel, stride)
+        d = out_sp[0]
+
+        def step_bytes(dt, ci, co):
+            bytes_ = _ck.vmem_bytes(out_sp, kernel, stride, ci, co,
+                                    in_dtype_bytes, dtile=dt)
+            if backward:
+                # conv's dx is the deconv-forward kernel over dy and its dw
+                # the deconv dw kernel — both with channel roles swapped
+                # (they contract conv's Cout and produce conv's Cin).
+                bytes_ = max(
+                    bytes_,
+                    _k.vmem_bytes(out_sp, kernel, stride, co, ci,
+                                  in_dtype_bytes, dtile=dt),
+                    _k.vmem_bytes_dw(out_sp, kernel, stride, co, ci,
+                                     in_dtype_bytes, dtile=dt))
+            return bytes_
+    elif mode == "deconv":
+        d = in_spatial[0]
+
+        def step_bytes(dt, ci, co):
+            bytes_ = _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
+                                   in_dtype_bytes, dtile=dt)
+            if backward:
+                bytes_ = max(bytes_, _k.vmem_bytes_bwd(
+                    in_spatial, kernel, stride, ci, co, in_dtype_bytes,
+                    dtile=dt))
+            return bytes_
+    else:
+        raise ValueError(f"unknown mode {mode!r}; expected 'deconv'|'conv'")
+
     d_eff = d + _k.halo_depth(kernel, stride)
     bci = block_ci or min(cin, 128)
     bco = block_co or min(cout, 128)
-
-    def step_bytes(dt, ci, co):
-        bytes_ = _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
-                               in_dtype_bytes, dtile=dt)
-        if backward:
-            bytes_ = max(bytes_, _k.vmem_bytes_bwd(
-                in_spatial, kernel, stride, ci, co, in_dtype_bytes, dtile=dt))
-        return bytes_
 
     dtile = d_eff
     if allow_split:
@@ -222,6 +257,25 @@ def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout, *,
                           block_ci=bci, block_co=bco,
                           step_vmem_bytes=step_bytes(dtile, bci, bco),
                           vmem_budget=vmem_budget)
+
+
+def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout,
+                      **kw) -> DeconvTilePlan:
+    """Deconv-mode facade over ``plan_uniform_tiles`` (the original API)."""
+    return plan_uniform_tiles(in_spatial, kernel, stride, cin, cout,
+                              mode="deconv", **kw)
+
+
+def plan_conv_tiles(in_spatial, kernel, stride, cin, cout,
+                    **kw) -> DeconvTilePlan:
+    """Conv-mode facade: ``in_spatial`` is the PADDED conv input extent.
+
+    The returned plan's ``dtile`` counts conv OUTPUT rows (the quantity the
+    conv grid tiles) and ``block_ci``/``block_co`` keep their conv sense
+    (ci contracted, co produced).
+    """
+    return plan_uniform_tiles(in_spatial, kernel, stride, cin, cout,
+                              mode="conv", **kw)
 
 
 # -- TPU mapping -------------------------------------------------------------

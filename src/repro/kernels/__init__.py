@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The paper's uniform accelerator engine, both directions:
+#   deconv/ — the IOM transposed convolution (the paper's headline kernel)
+#   conv/   — the first-class forward strided convolution (the deconv
+#             grid's adjoint body promoted out of its backward-only role)
+#   common.py — the shared polyphase/tap geometry and host-side lifting
+# Both subsystems run the same fused 4D grid and share one VMEM planner
+# (repro.core.tiling.plan_uniform_tiles); whole networks dispatch through
+# repro.core.functional.deconv_nd and repro.core.engine.conv_nd.

@@ -1,0 +1,151 @@
+"""Shared polyphase geometry for the uniform conv/deconv Pallas engine.
+
+Both kernel families — the deconv forward (``kernels.deconv.kernel``) and
+the first-class strided convolution (``kernels.conv.kernel``) — run on the
+same fused 4D grid and share one tap bookkeeping: a stride-S deconv scatters
+each input activation through the S^d output phases, and its adjoint (a
+stride-S convolution) gathers the same taps back from the S^d input phases.
+The static geometry of that correspondence lives here so the two subsystems
+cannot drift:
+
+  * ``phase_geometry`` — taps per phase per dim, ``M = ceil(K/S)``,
+  * ``halo_depth`` — leading-dim rows adjacent grid tiles exchange (the
+    paper's FIFO-D carry depth),
+  * ``phase_taps`` — the static (phase, valid taps) table; summed over
+    phases the taps number exactly K^d (the IOM valid-MAC count),
+  * ``phase_major_tap_index`` — the weight gather that lands each phase's
+    taps contiguously, feeding ONE wide MXU matmul per phase.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.functional import _canon
+
+# JAX 0.4.x exposes TPUCompilerParams; newer JAX renamed it CompilerParams.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
+def phase_geometry(kernel, stride):
+    """Static geometry: M_max (taps per phase per dim) and acc lengths."""
+    return tuple(-(-k // s) for k, s in zip(kernel, stride))
+
+
+def halo_depth(kernel, stride) -> int:
+    """Phase rows adjacent leading-dim tiles exchange (FIFO-D carry depth)."""
+    return -(-kernel[0] // stride[0]) - 1
+
+
+def phase_taps(kernel, stride):
+    """Static (phase_index, phase, valid taps) triples; empty phases skipped.
+
+    A tap ``m`` of phase ``p`` touches kernel element ``k = m*S + p``; taps
+    with any ``k >= K`` are the zero-padded tail and carry no MACs, so they
+    are dropped here at trace time.  Summed over phases the surviving taps
+    number exactly K^d — the IOM valid-MAC count.
+    """
+    m_max = phase_geometry(kernel, stride)
+    out = []
+    for p_idx, p in enumerate(itertools.product(*(range(s) for s in stride))):
+        taps = [m for m in itertools.product(*(range(mm) for mm in m_max))
+                if all(mj * sj + pj < kj
+                       for mj, sj, pj, kj in zip(m, stride, p, kernel))]
+        if taps:  # S > K leaves phases with no taps (structural zeros)
+            out.append((p_idx, p, taps))
+    return out
+
+
+def phase_major_tap_index(kernel, stride):
+    """Flat kernel-element indices ordered phase-major (the weight layout).
+
+    The caller gathers ``w.reshape(prod(K), ci, co)[index]`` so each phase's
+    valid taps sit contiguously: the kernel bodies then feed a whole phase
+    to the MXU with ONE static slice — no per-tap loads, no zero-padded
+    Kpad tail.  Total length is exactly prod(K): every kernel element
+    belongs to exactly one phase.
+    """
+    idx = []
+    for _, p, taps in phase_taps(kernel, stride):
+        for m in taps:
+            k = tuple(mj * sj + pj for mj, sj, pj in zip(m, stride, p))
+            flat = 0
+            for kj, kk in zip(k, kernel):
+                flat = flat * kk + kj
+            idx.append(flat)
+    assert len(idx) == math.prod(kernel)
+    return idx
+
+
+def phase_major_inverse(kernel, stride):
+    """Inverse of ``phase_major_tap_index`` — unscrambles dw outputs.
+
+    The dw kernel emits taps phase-major; indexing its output with this
+    permutation restores kernel-element order (both ops layers' backwards
+    use it).
+    """
+    perm = phase_major_tap_index(kernel, stride)
+    inv = [0] * len(perm)
+    for pos, j in enumerate(perm):
+        inv[j] = pos
+    return inv
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: emulate everywhere but real TPUs."""
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+# -- Host-side canonicalisation shared by both ops layers --------------------
+
+def pad_axis_to(x, axis, mult):
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``mult``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def phase_major_weights(w3, kernel3, stride3):
+    """[K..., a, b] -> [prod(K), a, b] in phase-major tap order.
+
+    Each phase's valid taps land contiguously, so the kernel bodies slice a
+    whole phase for their tap-batched matmul — see
+    ``phase_major_tap_index``.  The gather is a static permutation, fused by
+    XLA; the trailing two dims are whatever channel pair the caller uses
+    ([ci, co] for deconv, [co, ci] for the forward conv).
+    """
+    idx = phase_major_tap_index(kernel3, stride3)
+    flat = w3.reshape(-1, *w3.shape[3:])
+    return flat[jnp.asarray(idx)]
+
+
+def lift_3d(x, w, stride):
+    """Canonicalise rank-1/2 inputs to rank-3; returns squeeze axes.
+
+    Rank 2 lifts [N, H, W, C] -> [N, H, 1, W, C] (singleton in the MIDDLE):
+    the large image dim lands on the leading axis — the one the fused grid
+    tiles — while W stays innermost on the lanes.  Rank 1 lifts to
+    [N, 1, 1, W, C].  Shared by the deconv and conv ops layers (the weight
+    layout [*K, c_a, c_b] lifts identically for either channel order).
+    """
+    rank = x.ndim - 2
+    stride = _canon(stride, rank)
+    if rank == 3:
+        return x, w, tuple(stride), ()
+    if rank == 2:
+        x3 = x.reshape(x.shape[0], x.shape[1], 1, x.shape[2], x.shape[3])
+        w3 = w.reshape(w.shape[0], 1, w.shape[1], w.shape[2], w.shape[3])
+        return x3, w3, (stride[0], 1, stride[1]), (2,)
+    x3 = x.reshape(x.shape[0], 1, 1, x.shape[1], x.shape[2])
+    w3 = w.reshape(1, 1, *w.shape)
+    return x3, w3, (1, 1, stride[0]), (1, 2)

@@ -1,0 +1,7 @@
+from repro.core.tiling import (  # noqa: F401
+    DeconvTilePlan,
+    plan_conv_tiles,
+    plan_uniform_tiles,
+)
+from repro.kernels.conv.ops import conv  # noqa: F401
+from repro.kernels.conv.ref import conv_output_shape, conv_reference  # noqa: F401

@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: first-class strided convolution on the uniform grid.
+
+PR 2 proved the deconv grid is bidirectional: the deconv backward's dx
+kernel IS a stride-S convolution of dy.  This module promotes that body out
+of its backward-only role into the engine's forward convolution — the other
+half of the paper's "uniform architecture" story (one PE mesh serving convs
+AND deconvs, cf. Bai et al. 2020).  ``kernels.deconv.kernel`` keeps
+``deconv_dx_pallas_3d`` as a thin channel-swapped wrapper over this kernel,
+so there is exactly ONE strided-conv body in the tree.
+
+Same fused 4D grid as the deconv forward:
+
+    grid = (N, Cout/block_co, n_dtiles, Cin/block_ci)
+
+  * the two leading dims are parallel; the trailing two sequential.  The
+    innermost Cin dim is the paper's adder tree — partial sums accumulate
+    into an f32 VMEM scratch across Cin blocks.
+  * y[o] = sum_k x[o*S + k] · w[k] (VALID, correlation convention — the
+    caller pads (lo, hi) host-side).  Taps are gathered from the S^d *input*
+    phases of x: for phase p, ``x_ph = x[p::S]`` feeds ONE wide MXU matmul
+    against the phase's valid taps (phase-major weight layout) — S^d
+    dispatches per grid step, not K^d.  Stride 1 is the degenerate single
+    phase (one matmul carrying all K^d taps).
+  * each grid tile owns ``dtile`` output rows and reads the aligned
+    ``dtile*S_d`` input rows; when K_d > S_d a tap reaches into the NEXT
+    tile's input slab, so the d-tile axis iterates in REVERSE and the spill
+    rides a VMEM halo carry (the FIFO-D exchange running backward) —
+    recursive, so K_d >> S_d*dtile composes.
+  * 2D/1D are the degenerate singleton-dim cases; ``ops.py`` lifts inputs
+    as [N, H, 1, W, C] so the large image dim lands on the tileable axis.
+
+The caller (``kernels.conv.ops``) zero-pads the input's leading dim to
+``n_dtiles * dtile * S_d`` rows with ``n_dtiles * dtile`` at least
+``O_d + ceil(K_d/S_d) - 1`` (output rows plus halo slack), which keeps every
+real tap in-slab and makes the final carry-out structurally zero; the
+blocking decision comes from ``repro.core.tiling.plan_conv_tiles``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (
+    CompilerParams,
+    halo_depth,
+    phase_geometry,
+    phase_taps,
+)
+
+
+def _conv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
+                      tile_spatial, kernel, stride, n_ci_blocks, out_dtype):
+    """One grid step: a (batch, co-block, d-tile, ci-block) partial conv.
+
+    x_ref:   [1, dtile*S_d, IH, IW, bci]   (aligned input slab of tile t)
+    w_ref:   [prod(K), bco, bci]           (phase-major tap order)
+    o_ref:   [1, dtile, OH, OW, bco]       (this tile's output slab)
+    acc_ref: VMEM f32 [dtile + M_d - 1, OH, OW, bco]
+    halo_ref: VMEM f32 [M_d - 1, OH, OW, bco] (None if M_d == 1)
+    """
+    r = pl.program_id(2)
+    cb = pl.program_id(3)
+    m_max = phase_geometry(kernel, stride)
+    halo = halo_depth(kernel, stride)
+    dtile, oh, ow = tile_spatial
+
+    @pl.when(cb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                    # [dtile*S_d, IH, IW, bci]
+    bci = x.shape[-1]
+
+    off = 0
+    for _, p, taps in phase_taps(kernel, stride):
+        # gather input phase p once: x_ph[u] = x[u*S + p]
+        x_ph = x[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
+        lh, lw = x_ph.shape[1], x_ph.shape[2]
+        # one wide matmul per phase: [dtile*Lh*Lw, bci] x [n_taps, bco, bci]
+        w_taps = w_ref[off:off + len(taps)]
+        off += len(taps)
+        res = jax.lax.dot_general(
+            x_ph.reshape(-1, bci), w_taps, (((1,), (2,)), ((), ())),
+            preferred_element_type=jnp.float32)   # [dtile*Lh*Lw, n_taps, bco]
+        res = res.reshape(dtile, lh, lw, len(taps), -1)
+        for t_idx, m in enumerate(taps):
+            # y[o, h, w] += res[o + m_d, h + m_h, w + m_w, tap]; the leading
+            # shift lands in the accumulator (carry rows at the top)
+            win = res[:, m[1]:m[1] + oh, m[2]:m[2] + ow, t_idx]
+            j0 = m_max[0] - 1 - m[0]
+            acc_ref[j0:j0 + dtile] += win
+
+    if halo:
+        # reversed FIFO-D: the previous (reversed) step worked on tile t+1
+        # and deposited its spill into THIS tile's tail rows ...
+        @pl.when(jnp.logical_and(cb == n_ci_blocks - 1, r > 0))
+        def _carry_in():
+            acc_ref[dtile:] += halo_ref[...]
+
+        # ... and this tile's head rows (outputs of tile t-1, read AFTER the
+        # carry-in so deep halos compose) are left for the next step.
+        @pl.when(cb == n_ci_blocks - 1)
+        def _carry_out():
+            halo_ref[...] = acc_ref[:halo]
+
+    @pl.when(cb == n_ci_blocks - 1)
+    def _flush():
+        o_ref[0] = acc_ref[halo:].astype(out_dtype)
+
+
+def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
+                   kernel: Sequence[int], stride: Sequence[int],
+                   block_ci: int, block_co: int, dtile: int,
+                   interpret: bool = True,
+                   out_dtype=None) -> jax.Array:
+    """Uniform strided conv on rank-3 canonical layout — one ``pallas_call``.
+
+    x: [N, n_dtiles*dtile*S_d, IH, IW, Ci] — the (lo, hi)-padded input,
+    zero-padded on the leading dim to the tile grid (ops.py pads); trailing
+    extents are consumed VALID, so OH/OW = (I - K)//S + 1 statically.
+    w_taps: [prod(K), Co, Ci] in the phase-major tap order of
+    ``kernels.common.phase_major_tap_index`` (ops.py gathers it), output
+    channels leading — the contraction runs over the trailing Ci.  Returns
+    [N, n_dtiles*dtile, OH, OW, Co]; rows at or beyond the true output
+    extent are cropped by the caller.
+    """
+    n, d_in, ih, iw, ci = x.shape
+    co = w_taps.shape[1]
+    kernel = tuple(kernel)
+    stride = tuple(stride)
+    out_dtype = out_dtype or x.dtype
+    assert d_in % (dtile * stride[0]) == 0, (d_in, dtile, stride)
+    n_dt = d_in // (dtile * stride[0])
+    oh = (ih - kernel[1]) // stride[1] + 1
+    ow = (iw - kernel[2]) // stride[2] + 1
+    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                       block_ci, block_co)
+    n_ci, n_co = ci // block_ci, co // block_co
+    halo = halo_depth(kernel, stride)
+    tile_spatial = (dtile, oh, ow)
+
+    body = functools.partial(
+        _conv_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
+        stride=stride, n_ci_blocks=n_ci, out_dtype=out_dtype)
+    scratch = [pltpu.VMEM((dtile + halo, oh, ow, block_co), jnp.float32)]
+    if halo:
+        scratch.append(pltpu.VMEM((halo, oh, ow, block_co), jnp.float32))
+
+    grid = (n, n_co, n_dt, n_ci)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dtile * stride[0], ih, iw, block_ci),
+                         lambda b, oc, t, ic: (b, n_dt - 1 - t, 0, 0, ic)),
+            pl.BlockSpec((math.prod(kernel), block_co, block_ci),
+                         lambda b, oc, t, ic: (0, oc, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, dtile, oh, ow, block_co),
+                               lambda b, oc, t, ic: (b, n_dt - 1 - t, 0, 0,
+                                                     oc)),
+        out_shape=jax.ShapeDtypeStruct((n, n_dt * dtile, oh, ow, co),
+                                       out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+    )(x, w_taps)
+
+
+def vmem_bytes(out_spatial, kernel, stride, block_ci, block_co,
+               in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static per-grid-step VMEM footprint of ``conv_pallas_3d``.
+
+    ``out_spatial`` is the conv OUTPUT extent per dim (the quantity the
+    leading-dim tiling counts); models the input slab, weights, output slab,
+    f32 accumulator + halo carry, and the tap-batched matmul output of the
+    widest phase.  The deconv backward's dx budget is this same model with
+    the channel roles swapped (see ``kernels.deconv.kernel.vmem_bytes_bwd``).
+    """
+    m_max = phase_geometry(kernel, stride)
+    halo = m_max[0] - 1
+    trail = tuple(out_spatial[1:])
+    if dtile is None:
+        dtile = out_spatial[0] + halo
+    in_trail = tuple((o - 1) * s + k
+                     for o, s, k in zip(trail, stride[1:], kernel[1:]))
+    trail_elems = math.prod(trail)
+    in_elems = dtile * stride[0] * math.prod(in_trail)
+    out_elems = dtile * trail_elems
+    k_elems = math.prod(kernel)
+    taps_max = math.prod(m_max)
+    # widest per-phase gather of x (phase 0) and its batched matmul output
+    ph_elems = dtile * math.prod(-(-i // s)
+                                 for i, s in zip(in_trail, stride[1:]))
+    return (in_elems * block_ci * in_dtype_bytes                # input slab
+            + k_elems * block_ci * block_co * in_dtype_bytes    # weights
+            + out_elems * block_co * in_dtype_bytes             # output slab
+            + (dtile + 2 * halo) * trail_elems * block_co * 4   # acc + halo
+            + ph_elems * taps_max * block_co * 4)               # batched out

@@ -1,0 +1,231 @@
+"""Jit'd public wrapper for the first-class strided-conv Pallas kernel.
+
+Handles: rank lifting to canonical 3D (the large, tileable dim leading),
+host-side ``(lo, hi)`` padding, channel padding to block multiples, the
+channel-swapped phase-major weight gather (the conv kernel contracts Cin,
+so weights go in as ``[prod(K), Cout, Cin]``), leading-dim alignment to the
+planner's tile grid, and a custom VJP that CLOSES THE ADJOINT LOOP on the
+uniform engine:
+
+  * the forward is ``conv_pallas_3d`` — the deconv grid's dx body promoted
+    out of its backward-only role (see ``kernels/conv/kernel.py``);
+  * dx of a conv IS a deconv, so the dx cotangent reuses the deconv forward
+    kernel (``deconv_pallas_3d`` via ``kernels.deconv.ops._core_call``)
+    with the channel roles swapped;
+  * dw reuses ``deconv_dw_pallas_3d`` with the (x, dy) roles swapped —
+    conv's stride-1-indexed array is dy where deconv's was x.
+
+One ``plan_conv_tiles`` decision (the shared VMEM model of
+``repro.core.tiling.plan_uniform_tiles``) budgets all three
+``pallas_call``s of a training step, exactly as the deconv op does.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiling as _tiling
+from repro.core.engine import conv_output_shape
+from repro.core.functional import _canon, canon_padding
+from repro.kernels import common as _common
+from repro.kernels.conv import kernel as _ck
+from repro.kernels.deconv import kernel as _dk
+from repro.kernels.deconv import ops as _dops
+
+# default VMEM budget the planner targets per grid step
+_VMEM_BUDGET = _tiling.DECONV_VMEM_BUDGET
+
+_default_interpret = _common.default_interpret
+
+
+def _lift_padding(pads, rank):
+    """Lift per-dim (lo, hi) pairs onto the canonical 3D layout."""
+    if rank == 3:
+        return tuple(pads)
+    if rank == 2:
+        return (pads[0], (0, 0), pads[1])
+    return ((0, 0), (0, 0), pads[0])
+
+
+def _window(arr, pads3, sizes3):
+    """Slice ``arr[:, lo : lo + size, ..., :]`` per dim, zero-padding any
+    tail the source does not cover (input rows past the last consumed tap
+    receive no gradient — they are structurally zero)."""
+    idx = [slice(None)]
+    widths = [(0, 0)]
+    for (lo, _), size, dim in zip(pads3, sizes3, arr.shape[1:4]):
+        stop = min(lo + size, dim)
+        idx.append(slice(lo, stop))
+        widths.append((0, lo + size - stop))
+    idx.append(slice(None))
+    widths.append((0, 0))
+    out = arr[tuple(idx)]
+    if any(hi for _, hi in widths):
+        out = jnp.pad(out, widths)
+    return out
+
+
+def _conv_core(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
+               dtile, n_dtiles, out_dtype):
+    """Pad channels/weights/leading dim and invoke the conv kernel ONCE.
+
+    ``x3`` is the already (lo, hi)-padded canonical input.  The leading dim
+    is aligned to ``n_dtiles * dtile * S_d`` rows — padded up, or cropped
+    when the true extent leaves unconsumed remainder rows (any output row
+    reads input rows strictly below ``(O - 1) * S_d + K_d``, which the
+    planner's halo slack always covers).  Output is cropped by the caller.
+    """
+    ip = x3.shape[1]
+    o_lead, = conv_output_shape((ip,), (kernel3[0],), (stride3[0],))
+    x3 = _common.pad_axis_to(x3, -1, block_ci)
+    # channel swap: the conv kernel contracts the TRAILING weight dim
+    w3t = jnp.swapaxes(w3, -1, -2)                      # [*K, co, ci]
+    w3t = _common.pad_axis_to(
+        _common.pad_axis_to(w3t, -1, block_ci), -2, block_co)
+    w_taps = _common.phase_major_weights(w3t, kernel3, stride3)
+    d_pad = n_dtiles * dtile * stride3[0]
+    assert d_pad >= (o_lead - 1) * stride3[0] + kernel3[0], \
+        (d_pad, o_lead, stride3, kernel3)
+    if d_pad >= ip:
+        x3 = jnp.pad(x3, [(0, 0), (0, d_pad - ip)] + [(0, 0)] * 3)
+    else:
+        x3 = x3[:, :d_pad]          # remainder rows no output row consumes
+    return _ck.conv_pallas_3d(
+        x3, w_taps, kernel=kernel3, stride=stride3,
+        block_ci=min(block_ci, x3.shape[-1]),
+        block_co=min(block_co, w_taps.shape[1]),
+        dtile=dtile, interpret=interpret, out_dtype=out_dtype)
+
+
+def _conv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
+                   max_tile_bytes=None, out_dtype=None):
+    rank = x.ndim - 2
+    stride_r = _canon(stride, rank)
+    pads_r = canon_padding(padding, rank)
+    x3, w3, stride3, squeeze = _common.lift_3d(x, w, stride_r)
+    pads3 = _lift_padding(pads_r, rank)
+    x3 = jnp.pad(x3, [(0, 0), *pads3, (0, 0)])
+    kernel3 = w3.shape[:3]
+    co = w3.shape[-1]
+    out3 = conv_output_shape(x3.shape[1:4], kernel3, stride3)
+
+    plan = _tiling.plan_conv_tiles(
+        x3.shape[1:4], kernel3, stride3, x3.shape[-1], co,
+        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
+        block_ci=block_ci, block_co=block_co)
+    y3 = _conv_core(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
+                    interpret, plan.dtile, plan.n_dtiles,
+                    out_dtype or x.dtype)
+    y3 = y3[:, :out3[0], :, :, :co]
+    return jnp.squeeze(y3, axis=squeeze) if squeeze else y3
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _conv(x, w, stride, padding, block_ci, block_co, interpret,
+          max_tile_bytes, out_dtype):
+    return _conv_fwd_impl(x, w, stride, padding, block_ci, block_co,
+                          interpret, max_tile_bytes, out_dtype)
+
+
+def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
+         max_tile_bytes, out_dtype):
+    return _conv(x, w, stride, padding, block_ci, block_co, interpret,
+                 max_tile_bytes, out_dtype), (x, w)
+
+
+def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
+         out_dtype, res, dy):
+    """Training backward, fully on the uniform Pallas grid.
+
+    Conv's adjoint is a deconv, so both cotangents reuse the DECONV
+    subsystem's kernels with the channel roles swapped: ``dx`` is the
+    deconv-forward kernel run on dy (windowed back through the (lo, hi)
+    padding), ``dw`` the deconv dw kernel with dy playing the
+    stride-1-indexed role.  One ``plan_conv_tiles(backward=True)`` decision
+    budgets both working sets alongside the forward's.
+    """
+    x, w = res
+    rank = x.ndim - 2
+    stride_r = _canon(stride, rank)
+    pads_r = canon_padding(padding, rank)
+    x3, w3, stride3, squeeze = _common.lift_3d(x, w, stride_r)
+    dy3 = jnp.expand_dims(dy, squeeze) if squeeze else dy
+    pads3 = _lift_padding(pads_r, rank)
+    kernel3 = w3.shape[:3]
+    ci, co = x3.shape[-1], w3.shape[-1]
+    in_p3 = tuple(i + lo + hi
+                  for i, (lo, hi) in zip(x3.shape[1:4], pads3))
+    out3 = conv_output_shape(in_p3, kernel3, stride3)
+
+    plan = _tiling.plan_conv_tiles(
+        in_p3, kernel3, stride3, ci, co,
+        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
+        block_ci=block_ci, block_co=block_co, backward=True)
+
+    # dx: deconv of dy on the same grid.  _core_call's (block_ci, block_co)
+    # are ITS input/output channel blocks — dy carries conv's Cout and the
+    # result conv's Cin, hence the swap; likewise the weights go in as
+    # [*K, Cout, Cin].
+    dx_full = _dops._core_call(
+        dy3, jnp.swapaxes(w3, -1, -2), stride3, kernel3,
+        plan.block_co, plan.block_ci, interpret,
+        dtile=plan.dtile, n_dtiles=plan.n_dtiles, out_dtype=x.dtype)
+    dx3 = _window(dx_full, pads3, x3.shape[1:4])
+    dx = jnp.squeeze(dx3, axis=squeeze) if squeeze else dx3
+
+    # dw: the deconv dw kernel with (x, dy) roles swapped — dy is the
+    # stride-1-indexed array, the padded input the strided one.
+    d_rows = plan.n_dtiles * plan.dtile
+    x3f = jnp.pad(x3, [(0, 0), *pads3, (0, 0)])
+    x3f = _common.pad_axis_to(x3f, -1, plan.block_ci)
+    d_pad_in = d_rows * stride3[0]
+    if d_pad_in >= x3f.shape[1]:
+        x3f = jnp.pad(x3f, [(0, 0), (0, d_pad_in - x3f.shape[1])]
+                      + [(0, 0)] * 3)
+    else:
+        x3f = x3f[:, :d_pad_in]
+    dy3p = _common.pad_axis_to(dy3, -1, plan.block_co)
+    dy3p = jnp.pad(dy3p, [(0, 0), (0, d_rows - out3[0])] + [(0, 0)] * 3)
+    dw3 = _dk.deconv_dw_pallas_3d(
+        dy3p, x3f, kernel=kernel3, stride=stride3,
+        block_ci=plan.block_co, block_co=plan.block_ci,
+        dtile=plan.dtile, interpret=interpret, out_dtype=w.dtype)
+    # the kernel emits taps phase-major; invert back to kernel-element order
+    inv = _common.phase_major_inverse(kernel3, stride3)
+    dw3 = dw3[jnp.asarray(inv)][:, :co, :ci]            # [prod(K), co, ci]
+    dw = jnp.swapaxes(dw3, -1, -2).reshape(w.shape)
+    return dx.astype(x.dtype), dw
+
+
+_conv.defvjp(_fwd, _bwd)
+
+
+def conv(x: jax.Array, w: jax.Array, stride=1, padding=0, *,
+         block_ci: int | None = None, block_co: int | None = None,
+         interpret: bool | None = None,
+         max_tile_bytes: int | None = None,
+         preferred_element_type=None) -> jax.Array:
+    """Public op: uniform 1D/2D/3D strided convolution via the Pallas kernel.
+
+    x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; semantics match
+    ``lax.conv_general_dilated`` (correlation, channels-last): per-dim
+    output extent ``(I + lo + hi - K) // S + 1``.  ``padding`` is a scalar,
+    per-dim scalars, or per-dim ``(lo, hi)`` pairs.  ``interpret`` defaults
+    to True off-TPU (CPU validation) and False on TPU.  ``max_tile_bytes``
+    overrides the planner's per-grid-step VMEM budget (small values force
+    the multi-tile fused grid — used by tests and benchmarks).
+    ``preferred_element_type`` sets the output dtype (accumulation is
+    always f32 in-kernel).
+    """
+    rank = x.ndim - 2
+    stride_t = _canon(stride, rank)
+    pads_t = canon_padding(padding, rank)
+    out_dtype = (jnp.dtype(preferred_element_type)
+                 if preferred_element_type is not None else None)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _conv(x, w, stride_t, pads_t, block_ci, block_co, interpret,
+                 max_tile_bytes, out_dtype)

@@ -1,0 +1,48 @@
+"""Reference implementations for the forward strided-conv Pallas kernel.
+
+The parity target is ``lax.conv_general_dilated`` — the XLA engine the
+subsystem replaces in the benchmark networks; a python-loop oracle anchors
+the correlation convention on tiny shapes.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.engine import conv_output_shape  # noqa: F401 (re-export)
+from repro.core.functional import _canon, canon_padding, dim_numbers
+
+
+def conv_reference(x, w, stride=1, padding=0, *,
+                   preferred_element_type=jnp.float32):
+    """XLA oracle (channels-last, rank-generic, correlation convention)."""
+    rank = x.ndim - 2
+    return lax.conv_general_dilated(
+        x, w, window_strides=_canon(stride, rank),
+        padding=list(canon_padding(padding, rank)),
+        dimension_numbers=dim_numbers(rank),
+        preferred_element_type=preferred_element_type)
+
+
+def conv_loop_oracle(x, w, stride=1, padding=0):
+    """O(everything) python-loop oracle — tiny shapes only."""
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    rank = x.ndim - 2
+    stride = _canon(stride, rank)
+    pads = canon_padding(padding, rank)
+    kernel = w.shape[:rank]
+    in_sp = x.shape[1:-1]
+    out_sp = conv_output_shape(in_sp, kernel, stride, pads)
+    xp = np.pad(x, [(0, 0)] + list(pads) + [(0, 0)])
+    y = np.zeros((x.shape[0], *out_sp, w.shape[-1]))
+    for n in range(x.shape[0]):
+        for o in itertools.product(*(range(v) for v in out_sp)):
+            for k in itertools.product(*(range(v) for v in kernel)):
+                i = tuple(oo * s + kk for oo, s, kk in zip(o, stride, k))
+                y[(n,) + o] += xp[(n,) + i] @ w[k]
+    return jnp.asarray(y)

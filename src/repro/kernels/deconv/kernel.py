@@ -31,13 +31,14 @@ Maps the paper's PE mesh onto the TPU memory hierarchy with a fused 4D grid
     accumulation into the per-phase buffer; phases interleave into the
     output by a reshape/transpose at write-out.
   * the TRAINING backward pass runs on the same uniform grid: deconv's
-    adjoint is a strided convolution, so ``deconv_dx_pallas_3d`` reuses this
-    body's skeleton with the output phases collapsed to one, taps gathered
-    from dy's S^d input phases, channel roles swapped, and the d-tile axis
-    iterated in reverse (the halo carry flows backward); and
-    ``deconv_dw_pallas_3d`` accumulates per-tap [bci, bco] contractions
-    across the sequential (N, d-tile) grid dims into an f32 VMEM scratch,
-    carrying the last M_d - 1 x rows so cross-tile pairs never leave VMEM.
+    adjoint is a strided convolution — which since PR 3 is the engine's
+    first-class forward conv (``kernels.conv.kernel.conv_pallas_3d``).
+    ``deconv_dx_pallas_3d`` is the channel-role-swapped wrapper over it
+    (taps gathered from dy's S^d input phases, d-tile axis iterated in
+    reverse so the halo carry flows backward); ``deconv_dw_pallas_3d``
+    accumulates per-tap [bci, bco] contractions across the sequential
+    (N, d-tile) grid dims into an f32 VMEM scratch, carrying the last
+    M_d - 1 x rows so cross-tile pairs never leave VMEM.
   * 2D is the degenerate case of a singleton middle dim (depth phase/tap
     loops statically collapse — the paper's "FIFO-D disabled"); ``ops.py``
     lifts 2D inputs as [N, H, 1, W, C] so the large image dim lands on the
@@ -52,7 +53,6 @@ unified planner in ``repro.core.tiling.plan_deconv_tiles``.
 from __future__ import annotations
 
 import functools
-import itertools
 import math
 from typing import Sequence
 
@@ -61,60 +61,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# JAX 0.4.x exposes TPUCompilerParams; newer JAX renamed it CompilerParams.
-_CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
-
-
-def _phase_geometry(kernel, stride):
-    """Static geometry: M_max (taps per phase per dim) and acc lengths."""
-    m_max = tuple(-(-k // s) for k, s in zip(kernel, stride))
-    return m_max
-
-
-def halo_depth(kernel, stride) -> int:
-    """Phase rows adjacent leading-dim tiles exchange (FIFO-D carry depth)."""
-    return -(-kernel[0] // stride[0]) - 1
-
-
-def _phase_taps(kernel, stride):
-    """Static (phase_index, phase, valid taps) triples; empty phases skipped.
-
-    A tap ``m`` of phase ``p`` touches kernel element ``k = m*S + p``; taps
-    with any ``k >= K`` are the zero-padded tail and carry no MACs, so they
-    are dropped here at trace time.  Summed over phases the surviving taps
-    number exactly K^d — the IOM valid-MAC count.
-    """
-    m_max = _phase_geometry(kernel, stride)
-    out = []
-    for p_idx, p in enumerate(itertools.product(*(range(s) for s in stride))):
-        taps = [m for m in itertools.product(*(range(mm) for mm in m_max))
-                if all(mj * sj + pj < kj
-                       for mj, sj, pj, kj in zip(m, stride, p, kernel))]
-        if taps:  # S > K leaves phases with no taps (structural zeros)
-            out.append((p_idx, p, taps))
-    return out
-
-
-def phase_major_tap_index(kernel, stride):
-    """Flat kernel-element indices ordered phase-major (the weight layout).
-
-    The caller gathers ``w.reshape(prod(K), ci, co)[index]`` so each phase's
-    valid taps sit contiguously: the kernel bodies then feed a whole phase
-    to the MXU with ONE static slice — no per-tap loads, no zero-padded
-    Kpad tail.  Total length is exactly prod(K): every kernel element
-    belongs to exactly one phase.
-    """
-    idx = []
-    for _, p, taps in _phase_taps(kernel, stride):
-        for m in taps:
-            k = tuple(mj * sj + pj for mj, sj, pj in zip(m, stride, p))
-            flat = 0
-            for kj, kk in zip(k, kernel):
-                flat = flat * kk + kj
-            idx.append(flat)
-    assert len(idx) == math.prod(kernel)
-    return idx
+# Shared polyphase geometry (also served to kernels.conv); the old private
+# names are kept as aliases for in-repo callers.
+from repro.kernels.common import (  # noqa: F401
+    CompilerParams as _CompilerParams,
+    halo_depth,
+    phase_geometry as _phase_geometry,
+    phase_major_tap_index,
+    phase_taps as _phase_taps,
+)
 
 
 def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
@@ -193,7 +148,8 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      kernel: Sequence[int], stride: Sequence[int],
                      block_ci: int, block_co: int,
                      dtile: int | None = None,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool = True,
+                     out_dtype=None) -> jax.Array:
     """Uniform deconv on rank-3 canonical layout — one call, any input size.
 
     x: [N, D_pad, H, W, Ci] with ``D_pad`` a multiple of ``dtile``
@@ -213,6 +169,7 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     co = w_taps.shape[-1]
     kernel = tuple(kernel)
     stride = tuple(stride)
+    out_dtype = out_dtype or x.dtype
     if dtile is None:
         dtile = d_pad
     assert d_pad % dtile == 0, (d_pad, dtile)
@@ -232,7 +189,7 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     body = functools.partial(
         _deconv_kernel_body,
         tile_spatial=tile_spatial, kernel=kernel, stride=stride,
-        out_trailing=out_trailing, n_ci_blocks=n_ci, out_dtype=x.dtype)
+        out_trailing=out_trailing, n_ci_blocks=n_ci, out_dtype=out_dtype)
 
     scratch = [pltpu.VMEM((n_phases, *lengths, block_co), jnp.float32)]
     if halo:
@@ -252,7 +209,7 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
         out_specs=pl.BlockSpec((1, out_block_lead, *out_trailing, block_co),
                                lambda b, oc, dt, ic: (b, dt, 0, 0, oc)),
         out_shape=jax.ShapeDtypeStruct(
-            (n, n_dt * out_block_lead, *out_trailing, co), x.dtype),
+            (n, n_dt * out_block_lead, *out_trailing, co), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         compiler_params=_CompilerParams(
@@ -297,77 +254,6 @@ def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
 
 # -- Backward (VJP) kernels: the adjoint on the SAME fused 4D grid -----------
 
-def _deconv_dx_kernel_body(dy_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
-                           tile_spatial, kernel, stride, n_co_blocks,
-                           out_dtype):
-    """One grid step of dx — a stride-S gather-convolution of dy.
-
-    Deconv's adjoint is a strided convolution: dx[i] = sum_k dy[i*S+k]·w[k]
-    (contracted over Cout).  This is the forward body's skeleton with the
-    output phases collapsed to ONE and the taps gathered from the S^d
-    *input* phases of dy; the channel roles swap, so the sequential
-    adder-tree grid dim runs over Cout blocks and dx's Cin is the parallel
-    one.  The leading d-tile axis is iterated in REVERSE (the caller's index
-    maps use ``n_dtiles - 1 - t``): dy block t spills contributions into dx
-    tile t-1's tail rows, so the FIFO-D carry flows backward through the
-    grid — same recursive composition as the forward halo.
-
-    dy_ref:  [1, dtile*S_d, OH, OW, bco]   (aligned dy slab of tile t)
-    w_ref:   [prod(K), bci, bco]           (phase-major tap order)
-    o_ref:   [1, dtile, H, W, bci]         (this tile's dx slab)
-    acc_ref: VMEM f32 [dtile + M_d - 1, H, W, bci]
-    halo_ref: VMEM f32 [M_d - 1, H, W, bci] (None if M_d == 1)
-    """
-    r = pl.program_id(2)
-    cb = pl.program_id(3)
-    m_max = _phase_geometry(kernel, stride)
-    halo = halo_depth(kernel, stride)
-    dtile, h, wdim = tile_spatial
-
-    @pl.when(cb == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    dy = dy_ref[0]                                  # [dtile*S_d, OH, OW, bco]
-    bco = dy.shape[-1]
-
-    off = 0
-    for _, p, taps in _phase_taps(kernel, stride):
-        # gather input phase p of dy once: dy_ph[u] = dy[u*S + p]
-        dy_ph = dy[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
-        lh, lw = dy_ph.shape[1], dy_ph.shape[2]
-        # one wide matmul per phase: [dtile*Lh*Lw, bco] x [n_taps, bci, bco]
-        w_taps = w_ref[off:off + len(taps)]
-        off += len(taps)
-        res = jax.lax.dot_general(
-            dy_ph.reshape(-1, bco), w_taps, (((1,), (2,)), ((), ())),
-            preferred_element_type=jnp.float32)   # [dtile*Lh*Lw, n_taps, bci]
-        res = res.reshape(dtile, lh, lw, len(taps), -1)
-        for t_idx, m in enumerate(taps):
-            # dx[i, h, w] += res[i + m_d, h + m_h, w + m_w, tap]; the
-            # leading shift lands in the accumulator (carry rows at the top)
-            win = res[:, m[1]:m[1] + h, m[2]:m[2] + wdim, t_idx]
-            j0 = m_max[0] - 1 - m[0]
-            acc_ref[j0:j0 + dtile] += win
-
-    if halo:
-        # reversed FIFO-D: the previous (reversed) step worked on tile t+1
-        # and deposited its spill into THIS tile's tail rows ...
-        @pl.when(jnp.logical_and(cb == n_co_blocks - 1, r > 0))
-        def _carry_in():
-            acc_ref[dtile:] += halo_ref[...]
-
-        # ... and this tile's head rows (dx rows of tile t-1, read AFTER the
-        # carry-in so deep halos compose) are left for the next step.
-        @pl.when(cb == n_co_blocks - 1)
-        def _carry_out():
-            halo_ref[...] = acc_ref[:halo]
-
-    @pl.when(cb == n_co_blocks - 1)
-    def _flush():
-        o_ref[0] = acc_ref[halo:].astype(out_dtype)
-
-
 def deconv_dx_pallas_3d(dy: jax.Array, w: jax.Array, *,
                         kernel: Sequence[int], stride: Sequence[int],
                         block_ci: int, block_co: int, dtile: int,
@@ -375,57 +261,29 @@ def deconv_dx_pallas_3d(dy: jax.Array, w: jax.Array, *,
                         out_dtype=None) -> jax.Array:
     """dx on the uniform grid: one ``pallas_call``, any dy size.
 
+    Deconv's adjoint is a strided convolution: dx[i] = sum_k dy[i*S+k]·w[k]
+    (contracted over Cout).  Since PR 3 that strided-conv body is the
+    engine's first-class FORWARD convolution (``kernels.conv.kernel.
+    conv_pallas_3d``); this wrapper is the channel-role swap that turns it
+    back into deconv's dx — the contracted dim is deconv's Cout and the
+    produced dim deconv's Cin, so the conv kernel's (block_ci, block_co)
+    are this deconv's (block_co, block_ci).
+
     dy: [N, n_dtiles*dtile*S_d, OH, OW, Co] — the un-cropped cotangent,
     zero-padded on the leading dim to the tile grid (ops.py pads); trailing
     extents are the exact Eq. (1) forward output, so H/W recover statically.
     w: [prod(K), Ci, Co] in the phase-major tap order (the same layout the
-    forward consumes — ops.py gathers it once).  Returns
-    [N, n_dtiles*dtile, H, W, Ci]; rows at or beyond the true input extent
-    are cropped by the caller.
+    forward consumes — ops.py gathers it once); the conv kernel reads it as
+    [prod(K), out, contracted].  Returns [N, n_dtiles*dtile, H, W, Ci];
+    rows at or beyond the true input extent are cropped by the caller.
     """
-    n, od_pad, oh, ow, co = dy.shape
-    ci = w.shape[-2]
-    kernel = tuple(kernel)
-    stride = tuple(stride)
-    out_dtype = out_dtype or dy.dtype
-    assert od_pad % (dtile * stride[0]) == 0, (od_pad, dtile, stride)
-    n_dt = od_pad // (dtile * stride[0])
-    h = (oh - kernel[1]) // stride[1] + 1
-    wdim = (ow - kernel[2]) // stride[2] + 1
-    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
-                                                       block_ci, block_co)
-    n_ci, n_co = ci // block_ci, co // block_co
-    halo = halo_depth(kernel, stride)
-    tile_spatial = (dtile, h, wdim)
-
-    body = functools.partial(
-        _deconv_dx_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
-        stride=stride, n_co_blocks=n_co, out_dtype=out_dtype)
-    scratch = [pltpu.VMEM((dtile + halo, h, wdim, block_ci), jnp.float32)]
-    if halo:
-        scratch.append(pltpu.VMEM((halo, h, wdim, block_ci), jnp.float32))
-
-    grid = (n, n_ci, n_dt, n_co)
-    return pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, dtile * stride[0], oh, ow, block_co),
-                         lambda b, ic, t, oc: (b, n_dt - 1 - t, 0, 0, oc)),
-            pl.BlockSpec((math.prod(kernel), block_ci, block_co),
-                         lambda b, ic, t, oc: (0, ic, oc)),
-        ],
-        out_specs=pl.BlockSpec((1, dtile, h, wdim, block_ci),
-                               lambda b, ic, t, oc: (b, n_dt - 1 - t, 0, 0,
-                                                     ic)),
-        out_shape=jax.ShapeDtypeStruct((n, n_dt * dtile, h, wdim, ci),
-                                       out_dtype),
-        scratch_shapes=scratch,
-        interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel",
-                                 "arbitrary", "arbitrary")),
-    )(dy, w)
+    # Lazy import: kernels.conv's ops pull deconv kernels for THEIR
+    # backward, so a module-level import here would be circular.
+    from repro.kernels.conv import kernel as _conv_k
+    return _conv_k.conv_pallas_3d(
+        dy, w, kernel=kernel, stride=stride,
+        block_ci=block_co, block_co=block_ci, dtile=dtile,
+        interpret=interpret, out_dtype=out_dtype or dy.dtype)
 
 
 def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
@@ -563,14 +421,27 @@ def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
     )(x, dy)
 
 
-def vmem_bytes_bwd(in_spatial, kernel, stride, block_ci, block_co,
-                   in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
-    """Static per-grid-step VMEM footprint of the two VJP kernels (max).
+def vmem_bytes_dx(in_spatial, kernel, stride, block_ci, block_co,
+                  in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static per-grid-step VMEM footprint of the dx VJP kernel.
 
-    Models the dx step (dy slab + weights + dx accumulator/halo + the
-    tap-batched matmul output of the widest phase) and the dw step (x slab +
-    dy slab + f32 dw scratch + f32 x_ext/carry); the planner budgets
-    ``max(forward, dx, dw)`` when asked to plan for training.
+    dx is the engine's strided convolution with the channel roles swapped
+    (contract Cout, produce Cin), so this is exactly the conv kernel's
+    model with ``in_spatial`` — deconv's input = the conv's output — as
+    the tiled extent and (block_co, block_ci) as its (block_ci, block_co).
+    """
+    from repro.kernels.conv import kernel as _conv_k  # lazy: avoids a cycle
+    return _conv_k.vmem_bytes(in_spatial, kernel, stride,
+                              block_co, block_ci, in_dtype_bytes,
+                              dtile=dtile)
+
+
+def vmem_bytes_dw(in_spatial, kernel, stride, block_ci, block_co,
+                  in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static per-grid-step VMEM footprint of the dw VJP kernel.
+
+    Models the x slab + dy slab + f32 dw scratch + the f32 x_ext/carry and
+    the stacked per-phase window batches of the widest phase.
     """
     m_max = _phase_geometry(kernel, stride)
     halo = m_max[0] - 1
@@ -583,20 +454,23 @@ def vmem_bytes_bwd(in_spatial, kernel, stride, block_ci, block_co,
     dy_elems = dtile * stride[0] * math.prod(out_trail)
     x_elems = dtile * trail_elems
     k_elems = math.prod(kernel)
-    taps_max = math.prod(m_max)
-    # widest per-phase gather of dy (phase 0) and its batched matmul output
-    ph_elems = dtile * math.prod(-(-o // s)
-                                 for o, s in zip(out_trail, stride[1:]))
-    dx_step = (dy_elems * block_co * in_dtype_bytes            # dy slab
-               + k_elems * block_ci * block_co * in_dtype_bytes  # weights
-               + x_elems * block_ci * in_dtype_bytes           # dx out slab
-               + (dtile + 2 * halo) * trail_elems * block_ci * 4  # acc+halo
-               + ph_elems * taps_max * block_ci * 4)           # batched out
-    dw_step = (x_elems * block_ci * in_dtype_bytes             # x slab
-               + dy_elems * block_co * in_dtype_bytes          # dy slab
-               + k_elems * block_ci * block_co * (in_dtype_bytes + 4)
-               + (dtile + 2 * halo) * trail_elems * block_ci * 4  # x_ext+c
-               # stacked per-phase window batches (widest phase, f32)
-               + x_elems * (m_max[0] * block_ci
-                            + math.prod(m_max[1:]) * block_co) * 4)
-    return max(dx_step, dw_step)
+    return (x_elems * block_ci * in_dtype_bytes                # x slab
+            + dy_elems * block_co * in_dtype_bytes             # dy slab
+            + k_elems * block_ci * block_co * (in_dtype_bytes + 4)
+            + (dtile + 2 * halo) * trail_elems * block_ci * 4  # x_ext+c
+            # stacked per-phase window batches (widest phase, f32)
+            + x_elems * (m_max[0] * block_ci
+                         + math.prod(m_max[1:]) * block_co) * 4)
+
+
+def vmem_bytes_bwd(in_spatial, kernel, stride, block_ci, block_co,
+                   in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+    """Static per-grid-step VMEM footprint of the two VJP kernels (max).
+
+    The planner budgets ``max(forward, dx, dw)`` when asked to plan for
+    training; see ``vmem_bytes_dx`` / ``vmem_bytes_dw``.
+    """
+    return max(vmem_bytes_dx(in_spatial, kernel, stride, block_ci, block_co,
+                             in_dtype_bytes, dtile=dtile),
+               vmem_bytes_dw(in_spatial, kernel, stride, block_ci, block_co,
+                             in_dtype_bytes, dtile=dtile))

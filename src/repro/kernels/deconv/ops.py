@@ -4,11 +4,13 @@ Handles: rank lifting to canonical 3D (the large, tileable dim leading),
 channel padding to block multiples, the phase-major weight gather (each
 phase's valid taps contiguous, feeding the kernel's tap-batched matmuls),
 leading-dim zero-padding to the planner's tile grid,
-border cropping, and a custom VJP that runs BOTH cotangents on the same
-uniform Pallas grid as the forward (deconv's adjoint is a strided
-convolution): ``dx`` is a stride-S gather-convolution of ``dy`` and ``dw``
-a set of per-tap [bci, bco] contractions reduced across the sequential
-grid dims — training steps never leave the paper's engine.
+border cropping — symmetric or per-dim ``(lo, hi)`` pairs, the
+``DeconvLayer.crop`` convention — and a custom VJP that runs BOTH
+cotangents on the same uniform Pallas grid as the forward (deconv's
+adjoint is a strided convolution — the engine's first-class forward conv,
+see ``repro.kernels.conv``): ``dx`` is a stride-S gather-convolution of
+``dy`` and ``dw`` a set of per-tap [bci, bco] contractions reduced across
+the sequential grid dims — training steps never leave the paper's engine.
 
 Oversized inputs are NOT split here: the unified planner
 (``repro.core.tiling.plan_deconv_tiles``) jointly picks
@@ -26,15 +28,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tiling as _tiling
-from repro.core.functional import _canon, deconv_output_shape
+from repro.core.functional import _canon, canon_padding, deconv_output_shape
+from repro.kernels import common as _common
 from repro.kernels.deconv import kernel as _k
 
 # default VMEM budget the planner targets per grid step
 _VMEM_BUDGET = _tiling.DECONV_VMEM_BUDGET
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# host-side canonicalisation shared with kernels.conv.ops
+_pad_axis_to = _common.pad_axis_to
+_lift_3d = _common.lift_3d
+_default_interpret = _common.default_interpret
 
 
 def choose_blocks(in_spatial, kernel, stride, ci, co,
@@ -51,52 +55,18 @@ def choose_blocks(in_spatial, kernel, stride, ci, co,
     return plan.block_ci, plan.block_co
 
 
-def _pad_axis_to(x, axis, mult):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 def _phase_major(w3, kernel3, stride3):
     """[K..., ci, co] -> [prod(K), ci, co] in phase-major tap order.
 
-    Each phase's valid taps land contiguously, so the kernel bodies slice a
-    whole phase for their tap-batched matmul — see
-    ``kernel.phase_major_tap_index``.  The gather is a static permutation,
-    fused by XLA; it replaces the old Kpad zero-tail padding entirely.
+    Alias of ``kernels.common.phase_major_weights`` — each phase's valid
+    taps land contiguously, so the kernel bodies slice a whole phase for
+    their tap-batched matmul.
     """
-    idx = _k.phase_major_tap_index(kernel3, stride3)
-    flat = w3.reshape(-1, *w3.shape[3:])
-    return flat[jnp.asarray(idx)]
-
-
-def _lift_3d(x, w, stride):
-    """Canonicalise rank-1/2 inputs to rank-3; returns squeeze axes.
-
-    Rank 2 lifts [N, H, W, C] -> [N, H, 1, W, C] (singleton in the MIDDLE):
-    the large image dim lands on the leading axis — the one the fused grid
-    tiles — while W stays innermost on the lanes.  Rank 1 lifts to
-    [N, 1, 1, W, C].
-    """
-    rank = x.ndim - 2
-    stride = _canon(stride, rank)
-    if rank == 3:
-        return x, w, tuple(stride), ()
-    if rank == 2:
-        x3 = x.reshape(x.shape[0], x.shape[1], 1, x.shape[2], x.shape[3])
-        w3 = w.reshape(w.shape[0], 1, w.shape[1], w.shape[2], w.shape[3])
-        return x3, w3, (stride[0], 1, stride[1]), (2,)
-    x3 = x.reshape(x.shape[0], 1, 1, x.shape[1], x.shape[2])
-    w3 = w.reshape(1, 1, *w.shape)
-    return x3, w3, (1, 1, stride[0]), (1, 2)
+    return _common.phase_major_weights(w3, kernel3, stride3)
 
 
 def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
-               dtile=None, n_dtiles=1):
+               dtile=None, n_dtiles=1, out_dtype=None):
     """Pad channels/weights/leading dim and invoke the fused kernel ONCE.
 
     The leading dim is zero-padded to ``n_dtiles * dtile`` — always at least
@@ -119,15 +89,16 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
     y = _k.deconv_pallas_3d(x3, w3, kernel=kernel3, stride=stride3,
                             block_ci=min(block_ci, x3.shape[-1]),
                             block_co=min(block_co, w3.shape[-1]),
-                            dtile=dtile, interpret=interpret)
+                            dtile=dtile, interpret=interpret,
+                            out_dtype=out_dtype)
     return y[:, :out3[0], :, :, :co]
 
 
 def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
-                     max_tile_bytes=None):
+                     max_tile_bytes=None, out_dtype=None):
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
-    padding_r = _canon(padding, rank)
+    pads_r = canon_padding(padding, rank)
     x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
     kernel3 = w3.shape[:3]
     in_sp3 = x3.shape[1:4]
@@ -137,29 +108,31 @@ def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
         vmem_budget=max_tile_bytes or _VMEM_BUDGET,
         block_ci=block_ci, block_co=block_co)
     y3 = _core_call(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
-                    interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles)
+                    interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles,
+                    out_dtype=out_dtype)
 
-    # un-lift and crop
+    # un-lift and crop ((lo, hi) per dim — asymmetric crops supported)
     y = jnp.squeeze(y3, axis=squeeze) if squeeze else y3
-    if any(p for p in padding_r):
+    if any(lo or hi for lo, hi in pads_r):
         idx = (slice(None),) + tuple(
-            slice(p, dim - p) for p, dim in zip(padding_r, y.shape[1:-1])
+            slice(lo, dim - hi)
+            for (lo, hi), dim in zip(pads_r, y.shape[1:-1])
         ) + (slice(None),)
         y = y[idx]
     return y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
 def _deconv(x, w, stride, padding, block_ci, block_co, interpret,
-            max_tile_bytes):
+            max_tile_bytes, out_dtype):
     return _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co,
-                            interpret, max_tile_bytes)
+                            interpret, max_tile_bytes, out_dtype)
 
 
 def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
-         max_tile_bytes):
+         max_tile_bytes, out_dtype):
     return _deconv(x, w, stride, padding, block_ci, block_co, interpret,
-                   max_tile_bytes), (x, w)
+                   max_tile_bytes, out_dtype), (x, w)
 
 
 def _bwd_einsum(stride, padding, res, dy):
@@ -170,13 +143,13 @@ def _bwd_einsum(stride, padding, res, dy):
     x, w = res
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
-    padding_r = _canon(padding, rank)
+    pads_r = canon_padding(padding, rank)
     kernel_r = w.shape[:rank]
     in_sp = x.shape[1:-1]
 
     # un-crop dy back to the full Eq.(1) extent
-    if any(padding_r):
-        dy = jnp.pad(dy, [(0, 0)] + [(p, p) for p in padding_r] + [(0, 0)])
+    if any(lo or hi for lo, hi in pads_r):
+        dy = jnp.pad(dy, [(0, 0)] + list(pads_r) + [(0, 0)])
     dy = dy.astype(jnp.float32)
     xf = x.astype(jnp.float32)
     wf = w.astype(jnp.float32)
@@ -196,7 +169,7 @@ def _bwd_einsum(stride, padding, res, dy):
 
 
 def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
-         res, dy):
+         out_dtype, res, dy):
     """Training backward on the uniform Pallas grid.
 
     Deconv's adjoint is a strided convolution, so both cotangents reuse the
@@ -211,11 +184,11 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
     x, w = res
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
-    padding_r = _canon(padding, rank)
+    pads_r = canon_padding(padding, rank)
 
     # un-crop dy back to the full Eq.(1) extent
-    if any(padding_r):
-        dy = jnp.pad(dy, [(0, 0)] + [(p, p) for p in padding_r] + [(0, 0)])
+    if any(lo or hi for lo, hi in pads_r):
+        dy = jnp.pad(dy, [(0, 0)] + list(pads_r) + [(0, 0)])
 
     x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
     dy3 = jnp.expand_dims(dy, squeeze) if squeeze else dy
@@ -248,11 +221,7 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
         block_co=plan.block_co, dtile=plan.dtile, interpret=interpret,
         out_dtype=w.dtype)[:, :ci, :co]
     # the kernel emits taps phase-major; invert back to kernel-element order
-    perm = _k.phase_major_tap_index(kernel3, stride3)
-    inv = [0] * len(perm)
-    for pos, j in enumerate(perm):
-        inv[j] = pos
-    dw3 = dw3[jnp.asarray(inv)]
+    dw3 = dw3[jnp.asarray(_common.phase_major_inverse(kernel3, stride3))]
 
     dx = jnp.squeeze(dx3, axis=squeeze) if squeeze else dx3
     return dx, dw3.reshape(w.shape)
@@ -269,14 +238,22 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
     """Public op: uniform 1D/2D/3D IOM deconvolution via the Pallas kernel.
 
     x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; returns channels-last output
-    of extent (I-1)*S + K - 2*padding per dim.  ``interpret`` defaults to
-    True off-TPU (CPU validation) and False on TPU.  ``max_tile_bytes``
-    overrides the planner's per-grid-step VMEM budget (small values force
-    the multi-tile fused grid even on small inputs — used by tests and
-    benchmarks).
+    of extent (I-1)*S + K - lo - hi per dim.  ``padding`` is a scalar,
+    per-dim scalars, or per-dim ``(lo, hi)`` pairs (the ``DeconvLayer.crop``
+    convention — ``((0, 1),) * rank`` crops to exact doubling).
+    ``interpret`` defaults to True off-TPU (CPU validation) and False on
+    TPU.  ``max_tile_bytes`` overrides the planner's per-grid-step VMEM
+    budget (small values force the multi-tile fused grid even on small
+    inputs — used by tests and benchmarks).  ``preferred_element_type``
+    sets the output dtype (accumulation is always f32 in-kernel, so e.g.
+    bf16 inputs can emit f32 without a second rounding).
     """
-    del preferred_element_type  # accumulation is always f32 in-kernel
+    rank = x.ndim - 2
+    stride_t = _canon(stride, rank)
+    pads_t = canon_padding(padding, rank)
+    out_dtype = (jnp.dtype(preferred_element_type)
+                 if preferred_element_type is not None else None)
     if interpret is None:
         interpret = _default_interpret()
-    return _deconv(x, w, stride, padding, block_ci, block_co, interpret,
-                   max_tile_bytes)
+    return _deconv(x, w, stride_t, pads_t, block_ci, block_co, interpret,
+                   max_tile_bytes, out_dtype)

@@ -13,7 +13,8 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.functional import deconv_iom, deconv_output_shape
+from repro.core.functional import canon_padding, deconv_iom, \
+    deconv_output_shape
 
 
 def deconv_reference(x, w, stride, padding=0):
@@ -27,7 +28,7 @@ def deconv_loop_oracle(x, w, stride, padding=0):
     w = np.asarray(w, np.float64)
     rank = x.ndim - 2
     stride = (stride,) * rank if isinstance(stride, int) else tuple(stride)
-    padding = (padding,) * rank if isinstance(padding, int) else tuple(padding)
+    pads = canon_padding(padding, rank)
     kernel = w.shape[:rank]
     in_sp = x.shape[1:-1]
     out_sp = deconv_output_shape(in_sp, kernel, stride, 0)
@@ -37,6 +38,7 @@ def deconv_loop_oracle(x, w, stride, padding=0):
             for k in itertools.product(*(range(v) for v in kernel)):
                 o = tuple(ii * s + kk for ii, s, kk in zip(i, stride, k))
                 y[(n,) + o] += x[(n,) + i] @ w[k]
-    idx = (slice(None),) + tuple(slice(p, d - p) for p, d in zip(padding, out_sp)) \
+    idx = (slice(None),) + tuple(slice(lo, d - hi)
+                                 for (lo, hi), d in zip(pads, out_sp)) \
         + (slice(None),)
     return jnp.asarray(y[idx])

@@ -1,26 +1,30 @@
 """The paper's four benchmark DCNNs as trainable JAX models.
 
-Generators (DCGAN / GP-GAN / 3D-GAN) and the V-Net encoder-decoder all route
-their transposed convolutions through ``repro.core.deconv_nd`` — the paper's
-uniform 2D/3D engine — selectable per call (``method=
-oom|xla|iom|iom_phase|pallas``).  The crop convention matches
-``networks.DeconvLayer`` ((0,1) per dim: exact spatial doubling).
+WHOLE networks on the uniform 2D/3D engine: the generators (DCGAN / GP-GAN
+/ 3D-GAN) and the V-Net decoder route their transposed convolutions through
+``repro.core.deconv_nd``, and — since PR 3 — every forward convolution (the
+discriminator stacks, the V-Net encoder/merge convs and its 1x1x1 head)
+routes through the sibling ``repro.core.conv_nd`` dispatch.  With
+``method="pallas"`` a full GAN loss step or V-Net forward therefore
+executes every conv AND deconv on the same fused Pallas grid — zero
+``lax.conv_general_dilated`` dispatches; any other method pairs the
+XLA-lowered deconv flavour with the XLA conv baseline
+(``repro.core.engine.uniform_conv_method``).  The crop convention matches
+``networks.DeconvLayer`` ((0,1) per dim: exact spatial doubling), applied
+INSIDE the deconv op via its ``(lo, hi)`` padding.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core import deconv_nd, networks
-from repro.core.functional import dim_numbers
+from repro.core import conv_nd, deconv_nd, networks, uniform_conv_method
 from repro.models import layers as L
-from repro.sharding.partition import WS, constrain
+from repro.sharding.partition import constrain
 
 
 def _scaled_layers(cfg: ModelConfig) -> list[networks.DeconvLayer]:
@@ -71,11 +75,10 @@ def generator_forward(params, cfg: ModelConfig, z, method: str = "iom_phase"):
     h = constrain(h, "batch", sp0, *([None] * first.rank))
     for i, l in enumerate(layers):
         p = params["deconvs"][i]
-        h = deconv_nd(h, p["w"].astype(h.dtype), l.stride, 0, method=method)
-        # crop (0,1): exact doubling
-        idx = (slice(None),) + tuple(slice(0, o) for o in l.out_spatial) \
-            + (slice(None),)
-        h = h[idx].astype(z.dtype) + p["b"].astype(z.dtype)
+        # crop (0,1) — exact doubling — applied inside the op
+        h = deconv_nd(h, p["w"].astype(h.dtype), l.stride, l.crop,
+                      method=method)
+        h = h.astype(z.dtype) + p["b"].astype(z.dtype)
         h = jnp.tanh(h) if i == len(layers) - 1 else jax.nn.relu(h)
         h = constrain(h, "batch", sp0, *([None] * l.rank))
     return h
@@ -99,14 +102,16 @@ def init_discriminator(cfg: ModelConfig, key):
                                  scale=0.02)}
 
 
-def discriminator_forward(params, cfg: ModelConfig, x):
+def discriminator_forward(params, cfg: ModelConfig, x,
+                          method: str = "iom_phase"):
+    """Strided-conv stack on the uniform engine (``method="pallas"`` runs
+    every conv on the same Pallas grid as the generator's deconvs)."""
     rank = x.ndim - 2
+    conv_method = uniform_conv_method(method)
     h = x
     for c in params["convs"]:
-        h = lax.conv_general_dilated(
-            h, c["w"].astype(h.dtype), window_strides=(2,) * rank,
-            padding=[(1, 1)] * rank, dimension_numbers=dim_numbers(rank),
-            preferred_element_type=jnp.float32).astype(x.dtype)
+        h = conv_nd(h, c["w"].astype(h.dtype), 2, 1, method=conv_method,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
         h = jax.nn.leaky_relu(h, 0.2)
         h = constrain(h, "batch", *([None] * (rank + 1)))
     h = jnp.mean(h, axis=tuple(range(1, rank + 1)))       # GAP
@@ -154,35 +159,43 @@ def init_vnet(cfg: ModelConfig, key):
 
 
 def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
-    """vol [B, H, W, D, 1] -> logits [B, H, W, D, 2]."""
+    """vol [B, H, W, D, 1] -> logits [B, H, W, D, 2].
+
+    Encoder convs, decoder deconvs, skip-merge convs and the 1x1x1 head all
+    dispatch through the uniform engine (``method="pallas"`` keeps the
+    whole forward on the Pallas grid)."""
+    conv_method = uniform_conv_method(method)
     h = vol
     skips = []
     for i, c in enumerate(params["enc"]):
         stride = (1,) * 3 if i == 0 else (2,) * 3
-        h = lax.conv_general_dilated(
-            h, c["w"].astype(h.dtype), window_strides=stride,
-            padding=[(1, 1)] * 3, dimension_numbers=dim_numbers(3),
-            preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = conv_nd(h, c["w"].astype(h.dtype), stride, 1,
+                    method=conv_method,
+                    preferred_element_type=jnp.float32).astype(vol.dtype)
         h = jax.nn.relu(h)
         h = constrain(h, "batch", None, None, None, None)
         skips.append(h)
     skips = skips[:-1]
     for c, skip in zip(params["dec"], reversed(skips)):
-        h = deconv_nd(h, c["up_w"].astype(h.dtype), 2, 0, method=method)
-        idx = (slice(None),) + tuple(slice(0, s) for s in skip.shape[1:-1]) \
-            + (slice(None),)
-        h = jax.nn.relu(h[idx].astype(vol.dtype))
+        # crop (0,1) — exact doubling — inside the op; the slice guard only
+        # engages for odd-sized skips
+        h = deconv_nd(h, c["up_w"].astype(h.dtype), 2, ((0, 1),) * 3,
+                      method=method)
+        if h.shape[1:-1] != skip.shape[1:-1]:
+            idx = (slice(None),) + tuple(slice(0, s)
+                                         for s in skip.shape[1:-1]) \
+                + (slice(None),)
+            h = h[idx]
+        h = jax.nn.relu(h.astype(vol.dtype))
         h = jnp.concatenate([h, skip], axis=-1)
-        h = lax.conv_general_dilated(
-            h, c["merge_w"].astype(h.dtype), window_strides=(1,) * 3,
-            padding=[(1, 1)] * 3, dimension_numbers=dim_numbers(3),
-            preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = conv_nd(h, c["merge_w"].astype(h.dtype), 1, 1,
+                    method=conv_method,
+                    preferred_element_type=jnp.float32).astype(vol.dtype)
         h = jax.nn.relu(h)
         h = constrain(h, "batch", None, None, None, None)
-    logits = lax.conv_general_dilated(
-        h, params["head"].astype(h.dtype), window_strides=(1,) * 3,
-        padding=[(0, 0)] * 3, dimension_numbers=dim_numbers(3),
-        preferred_element_type=jnp.float32)
+    logits = conv_nd(h, params["head"].astype(h.dtype), 1, 0,
+                     method=conv_method,
+                     preferred_element_type=jnp.float32)
     return logits
 
 
@@ -192,10 +205,13 @@ def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
 
 def gan_losses(gen_params, disc_params, cfg: ModelConfig, z, real,
                method: str = "iom_phase"):
-    """Non-saturating GAN losses (generator & discriminator)."""
+    """Non-saturating GAN losses (generator & discriminator).
+
+    ``method`` drives BOTH halves: the generator's deconvs and the
+    discriminator's convs share the uniform engine."""
     fake = generator_forward(gen_params, cfg, z, method)
-    d_fake = discriminator_forward(disc_params, cfg, fake)
-    d_real = discriminator_forward(disc_params, cfg, real)
+    d_fake = discriminator_forward(disc_params, cfg, fake, method)
+    d_real = discriminator_forward(disc_params, cfg, real, method)
 
     def bce(logit, target):
         return jnp.mean(jnp.maximum(logit, 0) - logit * target

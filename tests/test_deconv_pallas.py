@@ -274,6 +274,60 @@ def test_forward_matmuls_are_tap_batched(rng, rank, K, S):
     assert dots < math.prod(K)
 
 
+def test_asymmetric_padding_matches_slice(rng):
+    """(lo, hi) padding pairs — the DeconvLayer.crop (0, 1) convention —
+    crop inside the op exactly like the old post-hoc slicing, for the
+    Pallas op AND every XLA-lowered method, gradients included."""
+    from repro.core import deconv_nd
+
+    x = jnp.asarray(rng.randn(2, 5, 6, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4), jnp.float32)
+    full = deconv_reference(x, w, 2, 0)
+    for pads, sl in [
+        (((0, 1), (0, 1)), (slice(0, -1), slice(0, -1))),
+        (((1, 0), (0, 2)), (slice(1, None), slice(0, -2))),
+        ((1, (0, 1)), (slice(1, -1), slice(0, -1))),     # mixed scalar/pair
+    ]:
+        ref = full[(slice(None), *sl, slice(None))]
+        got = deconv(x, w, 2, pads)
+        assert got.shape == ref.shape, (pads, got.shape, ref.shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        for m in ("oom", "xla", "iom", "iom_phase"):
+            np.testing.assert_allclose(
+                np.asarray(deconv_nd(x, w, 2, pads, method=m)),
+                np.asarray(ref), rtol=1e-4, atol=1e-4, err_msg=m)
+
+    pads = ((0, 1), (0, 1))
+    gp = jax.grad(lambda x, w: jnp.sum(jnp.sin(deconv(x, w, 2, pads))),
+                  (0, 1))(x, w)
+    gr = jax.grad(
+        lambda x, w: jnp.sum(jnp.sin(
+            deconv_reference(x, w, 2, 0)[:, :-1, :-1])), (0, 1))(x, w)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_preferred_element_type_honored(rng):
+    """``preferred_element_type`` is no longer silently swallowed: bf16
+    inputs emit f32 straight from the f32 in-kernel accumulator (no second
+    rounding), and the VJP still returns input-dtype cotangents."""
+    x = jnp.asarray(rng.randn(1, 4, 4, 4), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(3, 3, 4, 4) * 0.2, jnp.bfloat16)
+    y = deconv(x, w, 2, 1, preferred_element_type=jnp.float32)
+    assert y.dtype == jnp.float32
+    ref = deconv_reference(x.astype(jnp.float32), w.astype(jnp.float32),
+                           2, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(
+            deconv(x, w, 2, 1, preferred_element_type=jnp.float32) ** 2),
+        (0, 1))(x, w)
+    assert gx.dtype == x.dtype and gw.dtype == w.dtype
+
+
 def test_jit_and_vmap_compose(rng):
     x = jnp.asarray(rng.randn(2, 4, 4, 4), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 4, 4), jnp.float32)

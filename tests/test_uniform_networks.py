@@ -1,0 +1,115 @@
+"""Whole networks on ONE engine — the PR's acceptance criteria made
+structural: a jitted DCGAN GAN-loss train step and a V-Net forward
+(reduced configs, interpret mode) execute every convolution AND
+deconvolution via ``pallas_call``, with zero ``conv_general_dilated``
+equations anywhere in the traced jaxpr."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.jaxpr_utils import count_prims
+from repro.launch import steps as ST
+from repro.models import dcnn as D
+from repro.optim import AdamWConfig, adamw_init
+from repro.sharding.partition import split_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _gan_fixtures():
+    cfg = get_config("dcgan").reduced()
+    params, _ = ST.real_params(cfg, KEY)
+    opt = AdamWConfig(lr=2e-4, weight_decay=0.0)
+    opt_state = (adamw_init(params["gen"], opt),
+                 adamw_init(params["disc"], opt))
+    layers = D._scaled_layers(cfg)
+    rng = np.random.RandomState(0)
+    batch = {"z": jnp.asarray(rng.randn(2, cfg.dcnn_z), jnp.float32),
+             "real": jnp.asarray(
+                 rng.randn(2, *layers[-1].out_spatial, layers[-1].cout),
+                 jnp.float32)}
+    return cfg, params, opt, opt_state, batch
+
+
+def test_gan_step_all_convs_on_pallas():
+    """Trace + EXECUTE one jitted GAN train step with method='pallas':
+    generator deconvs, discriminator convs and all their cotangents are
+    pallas_calls — no conv_general_dilated anywhere."""
+    cfg, params, opt, opt_state, batch = _gan_fixtures()
+    step = ST.make_gan_train_step(cfg, opt, method="pallas")
+
+    jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
+    counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
+    assert counts.get("conv_general_dilated", 0) == 0, counts
+    # 4 gen deconvs x (fwd + fwd-in-d-loss) x VJP(3) plus 4 disc convs x
+    # 3 forwards x VJP — the exact count is an implementation detail, but
+    # it must be large (whole network) and every conv must be served:
+    assert counts.get("pallas_call", 0) >= 24, counts
+
+    params2, _, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["g_loss"]))
+    assert np.isfinite(float(metrics["d_loss"]))
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0.0   # step actually moved
+
+
+def test_gan_step_xla_method_unchanged():
+    """Non-pallas methods keep the XLA conv baseline (the engine dispatch
+    must not silently reroute them)."""
+    cfg, params, opt, opt_state, batch = _gan_fixtures()
+    step = ST.make_gan_train_step(cfg, opt, method="iom_phase")
+    jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
+    counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
+    assert counts.get("conv_general_dilated", 0) > 0, counts
+    assert counts.get("pallas_call", 0) == 0, counts
+
+
+def test_vnet_forward_all_convs_on_pallas():
+    """V-Net: 5 encoder convs + 4 decoder deconvs + 4 merge convs + the
+    1x1x1 head = 14 pallas_calls, zero conv_general_dilated, zero
+    dot_general outside the kernels."""
+    cfg = get_config("vnet").reduced()
+    params, _ = split_params(D.init_vnet(cfg, KEY))
+    vol = jnp.full((1, *D._vnet_spatial(cfg), 1), 0.1, jnp.float32)
+
+    jaxpr = jax.make_jaxpr(
+        lambda p, v: D.vnet_forward(p, cfg, v, method="pallas"))(params, vol)
+    counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
+    assert counts.get("conv_general_dilated", 0) == 0, counts
+    assert counts.get("dot_general", 0) == 0, counts
+    assert counts.get("pallas_call") == 14, counts
+
+    logits = jax.jit(
+        lambda p, v: D.vnet_forward(p, cfg, v, method="pallas"))(params, vol)
+    assert logits.shape == (1, *D._vnet_spatial(cfg), 2)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_vnet_pallas_matches_xla_method():
+    """Same forward, two engines: full-network numerics agree."""
+    cfg = get_config("vnet").reduced()
+    params, _ = split_params(D.init_vnet(cfg, KEY))
+    rng = np.random.RandomState(0)
+    vol = jnp.asarray(rng.randn(1, *D._vnet_spatial(cfg), 1) * 0.1,
+                      jnp.float32)
+    ref = D.vnet_forward(params, cfg, vol, method="iom_phase")
+    got = D.vnet_forward(params, cfg, vol, method="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_discriminator_pallas_matches_xla():
+    cfg = get_config("dcgan").reduced()
+    params, _ = split_params(D.init_discriminator(cfg, KEY))
+    layers = D._scaled_layers(cfg)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, *layers[-1].out_spatial, layers[-1].cout),
+                    jnp.float32)
+    ref = D.discriminator_forward(params, cfg, x, method="iom_phase")
+    got = D.discriminator_forward(params, cfg, x, method="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
