@@ -23,7 +23,10 @@ def _hlo_flops(method, layer, batch=1):
                              jnp.float32)
     c = jax.jit(lambda x, w: deconv_nd(x, w, layer.stride, 0,
                                        method=method)).lower(x, w).compile()
-    return float(c.cost_analysis().get("flops", 0.0))
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax<0.4.x returned [dict]
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))
 
 
 def run() -> list[str]:

@@ -5,12 +5,15 @@ the replaced einsum ``_bwd`` and vs XLA conv-transpose autodiff, the NEW
 first-class forward-conv rows (stride 1 and 2, 2D and 3D, parity vs the
 ``lax`` engine asserted at 1e-4), END-TO-END network rows (reduced
 discriminator / V-Net-style encoder on the uniform Pallas engine vs the
-XLA conv engine, with jaxpr dispatch counters), plus the tiling planner's
-forward/backward decisions for the real layer geometry (the TPU-relevant
-structural numbers).
+XLA conv engine, with jaxpr dispatch counters), COMPILED-SCHEDULE rows
+(``compile_network`` over a reduced DCGAN generator and a V-Net
+encoder+decoder chain — timing plus the schedule report's MXU dispatch
+counters), plus the tiling planner's forward/backward decisions for the
+real layer geometry (the TPU-relevant structural numbers).
 
 Also emits machine-readable ``BENCH_kernel.json`` at the repo root with
-every row and the planner decisions, so future PRs can diff perf.
+every row, the planner decisions and the compiled per-layer schedules, so
+future PRs can diff perf.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py
 """
@@ -26,10 +29,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import conv_nd, networks
+from repro.core import (
+    UniformEngine,
+    compile_network,
+    conv_nd,
+    init_network_weights,
+    networks,
+)
+from repro.core.engine import default_engine
 from repro.core.functional import deconv_nd, deconv_output_shape, deconv_xla
 from repro.core.jaxpr_utils import count_prims, pallas_eqns
-from repro.core.tiling import plan_conv_tiles, plan_deconv_tiles
+from repro.core.tiling import plan_uniform_tiles
 from repro.kernels.conv import ops as conv_ops
 from repro.kernels.deconv import ops as deconv_ops
 from repro.kernels.deconv.kernel import vmem_bytes, vmem_bytes_bwd
@@ -73,6 +83,7 @@ def run() -> list[str]:
     _backward_rows(rng, rec)
     _conv_rows(rng, rec)
     _network_rows(rec)
+    schedules = _compiled_rows(rng, rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
     # (forward plan and the backward-budgeted training plan).  The lift
@@ -86,9 +97,9 @@ def run() -> list[str]:
             s3 = (lay.stride[0], 1, lay.stride[1])
         else:
             sp3, k3, s3 = lay.in_spatial, lay.kernel, lay.stride
-        plan = plan_deconv_tiles(sp3, k3, s3, lay.cin, lay.cout)
-        tplan = plan_deconv_tiles(sp3, k3, s3, lay.cin, lay.cout,
-                                  backward=True)
+        plan = plan_uniform_tiles(sp3, k3, s3, lay.cin, lay.cout)
+        tplan = plan_uniform_tiles(sp3, k3, s3, lay.cin, lay.cout,
+                                   backward=True)
         vb = vmem_bytes(sp3, k3, s3, plan.block_ci, plan.block_co,
                         dtile=plan.dtile)
         vbb = vmem_bytes_bwd(sp3, k3, s3, tplan.block_ci, tplan.block_co,
@@ -103,7 +114,7 @@ def run() -> list[str]:
                        "step_vmem_bytes": vb,
                        "step_vmem_bytes_bwd": vbb}
 
-    _write_json(recs, plans)
+    _write_json(recs, plans, schedules)
     return [f"{r['name']},{r['us']:.0f},{r['detail']}" for r in recs]
 
 
@@ -137,11 +148,13 @@ def _split_path_rows(rng, rec) -> None:
     in_sp, k, s, ci, co = (24, 8, 8), (3, 3, 3), (2, 2, 2), 8, 8
     x = jnp.asarray(rng.randn(1, *in_sp, ci), jnp.float32)
     w = jnp.asarray(rng.randn(*k, ci, co), jnp.float32)
-    plan = plan_deconv_tiles(in_sp, k, s, ci, co, vmem_budget=budget)
+    plan = plan_uniform_tiles(in_sp, k, s, ci, co, vmem_budget=budget)
     assert plan.n_dtiles > 1, plan
 
+    eng = default_engine(method="pallas", interpret=True,
+                         max_tile_bytes=budget)
     fused = jax.jit(lambda x, w: deconv_ops._deconv_fwd_impl(
-        x, w, s, 0, None, None, True, max_tile_bytes=budget))
+        x, w, s, 0, eng))
     stitched = jax.jit(lambda x, w: _stitched_baseline(x, w, s, plan))
     np.testing.assert_allclose(np.asarray(fused(x, w)),
                                np.asarray(stitched(x, w)),
@@ -184,14 +197,16 @@ def _backward_rows(rng, rec) -> None:
     in_sp, k, s, ci, co = (24, 10, 10), (3, 3, 3), (2, 2, 2), 32, 32
     x = jnp.asarray(rng.randn(1, *in_sp, ci), jnp.float32)
     w = jnp.asarray(rng.randn(*k, ci, co) * 0.1, jnp.float32)
-    plan = plan_deconv_tiles(in_sp, k, s, ci, co, vmem_budget=budget,
-                             backward=True)
+    plan = plan_uniform_tiles(in_sp, k, s, ci, co, vmem_budget=budget,
+                              backward=True)
     assert plan.n_dtiles > 1, plan
     y = deconv_ops.deconv(x, w, s, 0, max_tile_bytes=budget)
     dy = jnp.ones_like(y)
 
+    eng = default_engine(method="pallas", interpret=True,
+                         max_tile_bytes=budget)
     pallas_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd(
-        s, 0, None, None, True, budget, None, (x, w), dy))
+        s, 0, eng, (x, w), dy))
     einsum_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd_einsum(
         s, 0, (x, w), dy))
     for a, b in zip(pallas_vjp(x, w, dy), einsum_vjp(x, w, dy)):
@@ -240,7 +255,7 @@ def _conv_rows(rng, rec) -> None:
         else:
             sp3 = tuple(i + 2 for i in in_sp)
             k3, s3 = k, (s,) * 3
-        plan = plan_conv_tiles(sp3, k3, s3, ci, co)
+        plan = plan_uniform_tiles(sp3, k3, s3, ci, co, mode="conv")
         rec(f"conv_{name}_pallas", _time(f_pallas, x, w), plan.describe())
         rec(f"conv_{name}_xla", _time(f_xla, x, w), "lax_conv_general")
 
@@ -266,7 +281,7 @@ def _network_rows(rec) -> None:
     # pairs with the encoder rows below (net_*_pallas vs net_*_xla).
     for method in ("pallas", "xla"):
         f = jax.jit(lambda p, x, m=method: D.discriminator_forward(
-            p, cfg, x, method=m))
+            p, cfg, x, engine=m))
         counts = count_prims(jax.make_jaxpr(f)(disc, x2).jaxpr, {},
                              into_pallas=False)
         n_pl = counts.get("pallas_call", 0)
@@ -298,7 +313,52 @@ def _network_rows(rec) -> None:
             f"pallas{n_pl}_convgd{n_cg}")
 
 
-def _write_json(recs, plans) -> None:
+def _compiled_rows(rng, rec) -> dict:
+    """Compiled-schedule rows: ``compile_network`` over a reduced DCGAN
+    generator and a V-Net encoder+decoder chain, one configured engine per
+    method — timing plus the schedule report's dispatch counters (returned
+    for the JSON payload).  Parity vs the XLA engine asserted at 1e-4."""
+    key = jax.random.PRNGKey(0)
+    gen = networks.deconv_stack("dcgan", 2, 4, [32, 16, 8, 4, 3])
+    vnet = networks.conv_stack("vnet", (8, 8, 8),
+                               [(1, 4), (4, 8), (8, 16)])
+    sp = vnet[-1].out_spatial
+    for i, (ci, co) in enumerate([(16, 8), (8, 4)]):
+        vnet.append(networks.UniformLayer(
+            name=f"vnet.up{i + 1}", in_spatial=sp, cin=ci, cout=co,
+            kernel=(3,) * 3, stride=(2,) * 3, padding=((0, 1),) * 3,
+            op="deconv"))
+        sp = vnet[-1].out_spatial
+
+    schedules = {}
+    for name, layers in (("dcgan_gen", gen), ("vnet", vnet)):
+        ws = init_network_weights(layers, key)
+        x = jnp.asarray(
+            rng.randn(1, *layers[0].in_spatial, layers[0].cin) * 0.3,
+            jnp.float32)
+        outs = {}
+        for method in ("pallas", "xla"):
+            engine = UniformEngine(method=method)
+            fn, report = compile_network(layers, engine)
+            f = jax.jit(fn)
+            outs[method] = np.asarray(f(ws, x))
+            counts = count_prims(jax.make_jaxpr(fn)(ws, x).jaxpr, {},
+                                 into_pallas=False)
+            n_pl = counts.get("pallas_call", 0)
+            n_cg = counts.get("conv_general_dilated", 0)
+            if method == "pallas":
+                assert n_cg == 0, counts
+                assert len(engine.plan_cache) == len(layers)
+                schedules[name] = report.to_json()
+            rec(f"net_{name}_compiled_{method}", _time(f, ws, x),
+                f"pallas{n_pl}_convgd{n_cg}_grid{report.grid_steps}"
+                f"_mxu{report.mxu_dispatches}")
+        np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                                   rtol=1e-4, atol=1e-4)
+    return schedules
+
+
+def _write_json(recs, plans, schedules) -> None:
     payload = {
         "bench": "kernel",
         "jax": jax.__version__,
@@ -306,6 +366,7 @@ def _write_json(recs, plans) -> None:
         "interpret": True,
         "rows": recs,
         "plans": plans,
+        "schedules": schedules,
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
 

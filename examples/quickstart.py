@@ -1,5 +1,6 @@
 """Quickstart: the paper's uniform 2D/3D engine in five minutes —
-deconvolutions AND forward strided convolutions on one Pallas grid.
+ONE configured engine, compiled schedules, deconvolutions AND forward
+strided convolutions on one Pallas grid.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,9 +10,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import conv_nd, deconv_macs, deconv_nd, insertion_sparsity
-from repro.kernels.conv import conv
-from repro.kernels.deconv import deconv
+from repro.core import (
+    UniformEngine,
+    compile_network,
+    deconv_macs,
+    deconv_nd,
+    init_network_weights,
+    insertion_sparsity,
+    networks,
+)
 
 rng = np.random.RandomState(0)
 
@@ -20,8 +27,7 @@ x = jnp.asarray(rng.randn(1, 8, 8, 8, 16), jnp.float32)   # [N,D,H,W,Ci]
 w = jnp.asarray(rng.randn(3, 3, 3, 16, 32), jnp.float32)  # [K,K,K,Ci,Co]
 
 outs = {m: deconv_nd(x, w, 2, 1, method=m)
-        for m in ("oom", "xla", "iom", "iom_phase")}
-outs["pallas"] = deconv(x, w, 2, 1)
+        for m in ("oom", "xla", "iom", "iom_phase", "pallas")}
 base = np.asarray(outs["oom"])
 for m, y in outs.items():
     err = np.abs(np.asarray(y) - base).max()
@@ -34,36 +40,52 @@ print(f"\n  MACs: OOM={oom:,}  IOM={iom:,}  -> {oom / iom:.1f}x fewer "
 print(f"  insertion sparsity seen by OOM: "
       f"{100 * insertion_sparsity((8, 8, 8), (3, 3, 3), (2, 2, 2)):.1f}%")
 
-print("\n=== 2D is the same engine (D=1; FIFO-D path statically off) ===")
+print("\n=== ONE configured engine — no method strings, no tuning kwargs ===")
+# The engine's configuration is decided once (method, precision, VMEM
+# budget, block overrides, interpret mode all live on the EngineConfig);
+# every subsequent call just names the geometry.  Its geometry-keyed cache
+# runs the tile planner once per layer shape — not once per call or
+# jit retrace.
+engine = UniformEngine(method="pallas")
 x2 = jnp.asarray(rng.randn(1, 8, 8, 16), jnp.float32)
 w2 = jnp.asarray(rng.randn(3, 3, 16, 32), jnp.float32)
-y2 = deconv(x2, w2, 2, 1)
+y2 = engine.deconv(x2, w2, 2, 1)          # 2D: same engine, D=1 path off
+yc = engine.conv(y2, jnp.swapaxes(w2, -2, -1), 2, 1)   # and BACK down
+print(f"  engine.deconv out={tuple(y2.shape)}  engine.conv out="
+      f"{tuple(yc.shape)}")
 ref2 = deconv_nd(x2, w2, 2, 1, method="oom")
-print(f"  pallas 2D out={tuple(y2.shape)}  "
-      f"max|err|={np.abs(np.asarray(y2) - np.asarray(ref2)).max():.2e}")
+print(f"  max|err vs OOM|={np.abs(np.asarray(y2) - np.asarray(ref2)).max():.2e}"
+      f"  cached plans={len(engine.plan_cache)}")
 
-print("\n=== the engine is BIDIRECTIONAL: forward convs on the same grid ===")
-# The deconv grid's adjoint body, promoted to a first-class strided conv
-# (repro.kernels.conv): same fused 4D grid, same planner, same phase-major
-# tap batching — so whole networks (GAN discriminator, V-Net encoder) run
-# on one engine.  Semantics match lax.conv_general_dilated.
-xc = jnp.asarray(rng.randn(1, 16, 16, 8), jnp.float32)
-wc = jnp.asarray(rng.randn(3, 3, 8, 16), jnp.float32)
-yc = conv(xc, wc, stride=2, padding=1)               # the Pallas subsystem
-yc_ref = conv_nd(xc, wc, 2, 1, method="xla")         # the engine it replaces
-print(f"  conv 2D s2 out={tuple(yc.shape)}  "
-      f"max|err vs lax|={np.abs(np.asarray(yc) - np.asarray(yc_ref)).max():.2e}")
-yc1 = conv(xc, wc, stride=1, padding=((0, 1), (1, 0)))  # (lo, hi) pads too
-print(f"  conv 2D s1 asymmetric-pad out={tuple(yc1.shape)}")
+print("\n=== compile_network: whole networks from per-layer schedules ===")
+# The software analogue of the paper's Table-style mapping: compile a
+# UniformLayer chain once, get (a) a jit-compatible callable running every
+# layer on the engine and (b) the per-layer schedule (tile plan, VMEM
+# bytes, MXU dispatches, insertion sparsity the engine never touches).
+layers = networks.deconv_stack("demo", 2, 4, [16, 8, 3])      # mini DCGAN tail
+apply, report = compile_network(layers, engine)
+ws = init_network_weights(layers, jax.random.PRNGKey(0))
+z = jnp.asarray(rng.randn(2, 4, 4, 16), jnp.float32)
+out = jax.jit(apply)(ws, z)
+print(f"  compiled forward out={tuple(out.shape)}")
+print("  " + report.describe().replace("\n", "\n  "))
+
+xla_apply, _ = compile_network(layers, UniformEngine(method="xla"))
+err = np.abs(np.asarray(out) - np.asarray(xla_apply(ws, z))).max()
+print(f"  max|err vs XLA engine|={err:.2e}")
 
 print("\n=== training runs fully on the uniform kernel ===")
 # The custom VJPs serve BOTH cotangents from the same fused Pallas grid as
 # the forwards — deconv's adjoint is a conv and vice versa, so the adjoint
-# loop closes on-engine: a train step never falls back to XLA einsums.
-g = jax.grad(lambda w: jnp.sum(deconv(x2, w2 * 0 + w, 2, 1) ** 2))(w2)
+# loop closes on-engine: a train step never falls back to XLA einsums, and
+# the backward tile plans live in the same engine cache.
+g = jax.grad(lambda w: jnp.sum(engine.deconv(x2, w, 2, 1) ** 2))(w2)
+gc = jax.grad(lambda w: jnp.sum(
+    engine.conv(x2, w2 * 0 + w, 2, 1) ** 2))(w2)
 print(f"  deconv dL/dw shape={tuple(g.shape)}  "
       f"|g|={float(jnp.abs(g).max()):.3f}")
-gc = jax.grad(lambda w: jnp.sum(conv(xc, wc * 0 + w, 2, 1) ** 2))(wc)
 print(f"  conv   dL/dw shape={tuple(gc.shape)}  "
       f"|g|={float(jnp.abs(gc).max()):.3f}")
+print(f"  engine cache now holds {len(engine.plan_cache)} plans "
+      f"(fwd + bwd per geometry)")
 print("\nquickstart OK")

@@ -1,8 +1,9 @@
 """3D example: V-Net segmenting synthetic spheres — the paper's volumetric
-benchmark.  Decoder deconvolutions run on the uniform IOM engine; with
-``--method pallas`` the encoder convs, skip-merge convs and the 1x1x1 head
-join them on the same fused Pallas grid (repro.kernels.conv), so the whole
-forward executes without a single ``conv_general_dilated`` dispatch.
+benchmark.  ``--method`` configures ONE ``UniformEngine`` for the whole
+model; with ``--method pallas`` the encoder convs, decoder deconvs,
+skip-merge convs and the 1x1x1 head all run on the same fused Pallas grid,
+so the forward executes without a single ``conv_general_dilated`` dispatch
+— each layer geometry planned once by the engine's cache.
 
     PYTHONPATH=src python examples/segment_vnet3d.py --steps 60
 """
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.engine import UniformEngine
 from repro.data import VolumeBatches
 from repro.launch import steps as ST
 from repro.models import dcnn as D
@@ -32,7 +34,8 @@ def main():
     params, _ = ST.real_params(cfg, jax.random.PRNGKey(0))
     opt_state = adamw_init(params, opt)
     data = VolumeBatches(cfg.dcnn_batch, D._vnet_spatial(cfg), prefetch=False)
-    step = jax.jit(ST.make_vnet_train_step(cfg, opt, method=args.method),
+    engine = UniformEngine(method=args.method)
+    step = jax.jit(ST.make_vnet_train_step(cfg, opt, engine=engine),
                    donate_argnums=(0, 1))
 
     for i in range(args.steps):
@@ -42,7 +45,7 @@ def main():
 
     # evaluate IoU on a fresh volume
     batch = data.make_batch(10_000)
-    logits = D.vnet_forward(params["vnet"], cfg, batch["vol"], args.method)
+    logits = D.vnet_forward(params["vnet"], cfg, batch["vol"], engine)
     pred = np.asarray(jnp.argmax(logits, -1))
     lab = np.asarray(batch["labels"])
     inter = np.logical_and(pred == 1, lab == 1).sum()

@@ -1,11 +1,10 @@
 """End-to-end driver: train the (reduced) DCGAN generator/discriminator for
 a few hundred steps through the fault-tolerant Trainer, with checkpointing
-and resume.  ``--method`` drives the WHOLE GAN step through the uniform
-engine: the generator's deconvolutions always route through the paper's
-IOM engine, and with ``--method pallas`` the discriminator's strided convs
-run on the same fused Pallas grid too (repro.kernels.conv) — a full
-generator+discriminator training step with zero ``conv_general_dilated``
-dispatches.
+and resume.  ``--method`` configures ONE ``UniformEngine`` that drives the
+WHOLE GAN step: with ``--method pallas`` the generator's deconvolutions
+AND the discriminator's strided convs run on the same fused Pallas grid —
+a full training step with zero ``conv_general_dilated`` dispatches, every
+layer scheduled once by the engine's plan cache.
 
     PYTHONPATH=src python examples/train_dcgan.py --steps 200
 (use --full for the paper-size generator — slow on CPU; --method pallas
@@ -17,6 +16,7 @@ import argparse
 import jax
 
 from repro.configs import get_config
+from repro.core.engine import UniformEngine
 from repro.data import DcnnBatches
 from repro.launch import steps as ST
 from repro.models import dcnn as D
@@ -43,7 +43,8 @@ def main():
     layers = D._scaled_layers(cfg)
     data = DcnnBatches(cfg.dcnn_batch, cfg.dcnn_z,
                        (*layers[-1].out_spatial, layers[-1].cout))
-    step = jax.jit(ST.make_gan_train_step(cfg, opt, method=args.method),
+    engine = UniformEngine(method=args.method)
+    step = jax.jit(ST.make_gan_train_step(cfg, opt, engine=engine),
                    donate_argnums=(0, 1))
     tr = Trainer(step, params, opt_state, data,
                  TrainLoopConfig(total_steps=args.steps,

@@ -68,7 +68,9 @@ class ModelConfig:
     dcnn_z: int = 100
     dcnn_batch: int = 64
     dcnn_reduced: bool = False        # smoke: 1/4 channels, small volumes
-    dcnn_method: str = "iom_phase"    # oom | xla | iom | iom_phase | pallas
+    dcnn_method: str = "iom_phase"    # EngineConfig.method the launcher's
+                                      # bundled UniformEngine is built with
+                                      # (oom | xla | iom | iom_phase | pallas)
     dcnn_spatial_shard: bool = False  # §Perf: shard the leading spatial dim
                                       # over the model axis (halo exchange)
     # attention

@@ -1,10 +1,14 @@
 # The paper's primary contribution: uniform 2D/3D deconvolution with
 # input-oriented mapping (IOM), adapted TPU-natively (polyphase + Pallas).
-# Since PR 3 the engine is bidirectional: ``conv_nd`` dispatches forward
-# strided convolutions onto the same fused Pallas grid (repro.core.engine),
-# so whole networks run on one engine.
+# Since PR 3 the engine is bidirectional (convs AND deconvs on one fused
+# Pallas grid); since PR 4 it is CONFIGURED ONCE: an EngineConfig +
+# UniformEngine replace per-call method strings and tuning kwargs, with a
+# geometry-keyed plan cache and compile_network producing per-layer
+# schedules (the paper's compile-time mapping flow).  deconv_nd/conv_nd
+# remain as thin compat wrappers over memoized default engines.
 from repro.core.functional import (  # noqa: F401
     METHODS,
+    PALLAS_KNOBS,
     canon_padding,
     deconv_macs,
     deconv_nd,
@@ -15,13 +19,23 @@ from repro.core.functional import (  # noqa: F401
     deconv_xla,
     insertion_sparsity,
     phase_kernels,
+    pop_pallas_knobs,
     valid_mac_fraction,
     zero_insert,
 )
 from repro.core.engine import (  # noqa: F401
     CONV_METHODS,
+    EngineConfig,
+    LayerSchedule,
+    ScheduleReport,
+    UniformEngine,
+    as_engine,
+    compile_network,
     conv_nd,
     conv_output_shape,
+    default_engine,
+    init_network_weights,
     uniform_conv_method,
 )
+from repro.core.networks import UniformLayer  # noqa: F401
 from repro.core import networks, sparsity, tiling, comparison  # noqa: F401

@@ -1,32 +1,69 @@
-"""Uniform engine dispatch: convolutions AND deconvolutions on one grid.
+"""One configured engine, compiled schedules — the uniform front door.
 
-The paper's headline is a *uniform* architecture, yet through PR 2 only the
-transposed convolutions ran on the Pallas engine — every discriminator
-conv, V-Net encoder/merge conv and the 1x1x1 head dispatched to
-``lax.conv_general_dilated``.  This module is the forward-conv sibling of
-``repro.core.functional.deconv_nd``: one ``conv_nd`` front-end whose
-``method="pallas"`` routes through ``repro.kernels.conv`` — the deconv
-grid's dx body promoted to a first-class strided convolution — so whole
-networks (GAN generator + discriminator, full V-Net) execute on a single
-accelerator engine, in the spirit of Bai et al. 2020's unified
-conv/deconv hardware.
+The paper's core claim is a *uniform architecture*: one configurable
+computation engine executes every conv and deconv layer of 2D and 3D DCNNs
+from a per-layer schedule decided at compile time (loop tiling + mapping
+fixed once, not re-derived per access).  This module is the software
+analogue:
 
-Semantics match ``lax.conv_general_dilated`` (channels-last, correlation
-convention, no kernel flip):
+  * ``EngineConfig`` — the engine's configuration, decided ONCE: method
+    (the deconv lowering; the conv lowering pairs automatically), numeric
+    precision, VMEM budget, optional channel-block overrides, interpret
+    mode.  No per-call tuning kwargs anywhere downstream.
+  * ``UniformEngine`` — the configured engine.  ``engine.conv(x, w, stride,
+    padding)`` and ``engine.deconv(x, w, stride, padding)`` run both
+    directions of the fused Pallas grid (or the XLA baselines), and an
+    internal geometry-keyed plan cache makes ``plan_uniform_tiles`` run
+    once per (mode, shape, kernel, stride, channels) — not once per op
+    invocation or jit retrace.
+  * ``compile_network(layers, engine)`` — the compile-time mapping flow:
+    takes a ``UniformLayer`` chain and returns (a) a jit-compatible
+    callable running every layer on the engine and (b) a ``ScheduleReport``
+    (per-layer tile plan, VMEM bytes, MXU dispatch count, sparsity) — the
+    software analogue of the paper's Table-style per-layer mapping.
+
+Semantics of ``engine.conv`` match ``lax.conv_general_dilated``
+(channels-last, correlation convention, no kernel flip):
 
     y[n, o, co] = sum_{k, ci} x[n, o*S + k - lo, ci] * w[k, ci, co]
 
-with per-dim output extent ``O = (I + lo + hi - K) // S + 1``.
+with per-dim output extent ``O = (I + lo + hi - K) // S + 1``; semantics of
+``engine.deconv`` are the paper's Eq. (1) transposed convolution with an
+optional border crop (see ``repro.core.functional``).
+
+``conv_nd`` / ``deconv_nd`` (and the raw ``repro.kernels.{conv,deconv}``
+ops) remain as thin compatibility wrappers over memoized default engines.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
 import jax
+import jax.numpy as jnp
 from jax import lax
 
-from repro.core.functional import _canon, canon_padding, dim_numbers
+from repro.core import networks as _networks
+from repro.core import tiling as _tiling
+from repro.core.functional import (
+    METHODS,
+    _canon,
+    canon_padding,
+    deconv_iom,
+    deconv_iom_phase,
+    deconv_oom,
+    deconv_xla,
+    dim_numbers,
+    insertion_sparsity,
+    pop_pallas_knobs,
+)
 
 CONV_METHODS = ("xla", "pallas")
+
+_XLA_DECONVS = {"oom": deconv_oom, "xla": deconv_xla, "iom": deconv_iom,
+                "iom_phase": deconv_iom_phase}
 
 
 def conv_output_shape(in_spatial, kernel, stride, padding=0):
@@ -40,44 +77,386 @@ def conv_output_shape(in_spatial, kernel, stride, padding=0):
                                               pads))
 
 
-def conv_nd(x: jax.Array, w: jax.Array, stride=1, padding=0,
-            method: str = "xla", **kw) -> jax.Array:
-    """Uniform 1D/2D/3D strided convolution — the engine's forward direction.
-
-    x: [N, *spatial, Cin] with spatial rank 1..3; w: [*K, Cin, Cout];
-    ``padding`` is a scalar, per-dim scalars, or per-dim ``(lo, hi)`` pairs.
-    ``method="xla"`` is the ``lax.conv_general_dilated`` baseline;
-    ``method="pallas"`` runs the strided conv on the same fused 4D Pallas
-    grid as the deconv engine (``repro.kernels.conv``), with a custom VJP
-    that keeps both cotangents on-engine too (dx is a deconv, dw the deconv
-    dw kernel).  Deconv METHODS names map via ``uniform_conv_method``.
-    """
-    if method == "xla":
-        rank = x.ndim - 2
-        pet = kw.pop("preferred_element_type", None)
-        # Pallas tuning knobs are meaningless for the XLA engine; accept and
-        # drop them so method-parameterized callers can toggle freely.
-        for knob in ("block_ci", "block_co", "interpret", "max_tile_bytes"):
-            kw.pop(knob, None)
-        if kw:
-            raise ValueError(f"unknown conv kwargs for method='xla': {kw}")
-        return lax.conv_general_dilated(
-            x, w, window_strides=_canon(stride, rank),
-            padding=list(canon_padding(padding, rank)),
-            dimension_numbers=dim_numbers(rank),
-            preferred_element_type=pet)
-    if method == "pallas":
-        from repro.kernels.conv import ops as _ops  # lazy: kernels layer
-        return _ops.conv(x, w, stride, padding, **kw)
-    raise ValueError(f"unknown method {method!r}; expected one of "
-                     f"{CONV_METHODS}")
-
-
 def uniform_conv_method(deconv_method: str) -> str:
-    """Map a deconv METHODS name onto the conv engine.
+    """Map a deconv METHODS name onto the conv side of the engine.
 
     ``"pallas"`` keeps the whole network on the Pallas grid; every
     XLA-lowered deconv flavour (oom/xla/iom/iom_phase) pairs with the XLA
     conv baseline.
     """
     return "pallas" if deconv_method == "pallas" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Engine configuration — decided once, reused everywhere.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The uniform engine's compile-time configuration.
+
+    ``method`` is the deconv lowering (one of ``METHODS``); the forward-conv
+    lowering pairs via ``uniform_conv_method``.  ``preferred_element_type``
+    sets the op output dtype (Pallas accumulates f32 in-kernel regardless;
+    the XLA deconv flavours default to f32 as before when unset).
+    ``max_tile_bytes`` overrides the planner's per-grid-step VMEM budget;
+    ``block_ci``/``block_co`` pin the channel blocks; ``interpret`` forces
+    Pallas interpret mode (None = auto: True off-TPU).
+    """
+    method: str = "xla"
+    preferred_element_type: Any = None
+    max_tile_bytes: int | None = None
+    block_ci: int | None = None
+    block_co: int | None = None
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected one "
+                             f"of {METHODS}")
+        if self.preferred_element_type is not None:
+            object.__setattr__(self, "preferred_element_type",
+                               jnp.dtype(self.preferred_element_type))
+
+    @property
+    def conv_method(self) -> str:
+        return uniform_conv_method(self.method)
+
+    @property
+    def vmem_budget(self) -> int:
+        return self.max_tile_bytes or _tiling.DECONV_VMEM_BUDGET
+
+
+class UniformEngine:
+    """The configured engine: both op directions + a compiled plan cache.
+
+        engine = UniformEngine(method="pallas")      # or UniformEngine(cfg)
+        y = engine.deconv(x, w, stride=2, padding=((0, 1), (0, 1)))
+        h = engine.conv(y, w2, stride=2, padding=1)
+
+    No per-call tuning kwargs: precision, VMEM budget, block overrides and
+    interpret mode all live in the ``EngineConfig``.  ``plan`` memoizes
+    ``repro.core.tiling.plan_uniform_tiles`` per layer geometry, so
+    repeated calls (and jit retraces) of the same layer reuse one schedule
+    — engines with different configs keep separate caches.
+    """
+
+    def __init__(self, config: EngineConfig | str | None = None, **overrides):
+        if config is None:
+            config = EngineConfig(**overrides)
+        elif isinstance(config, str):
+            config = EngineConfig(method=config, **overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"expected EngineConfig | method name, got "
+                            f"{config!r}")
+        self.config = config
+        self._plans: dict[tuple, _tiling.DeconvTilePlan] = {}
+
+    def __repr__(self):
+        return (f"UniformEngine({self.config!r}, "
+                f"cached_plans={len(self._plans)})")
+
+    # -- compile-time planning ---------------------------------------------
+
+    @property
+    def plan_cache(self) -> dict:
+        """Read-only view of the geometry-keyed schedule cache."""
+        return dict(self._plans)
+
+    def plan(self, mode: str, in_spatial, kernel, stride, cin: int, cout: int,
+             *, backward: bool = False,
+             in_dtype_bytes: int = 2) -> _tiling.DeconvTilePlan:
+        """The engine's ONLY path to the tile planner — geometry-memoized.
+
+        ``mode="conv"`` expects the PADDED conv input extent (the planner's
+        contract).  ``backward=True`` keys the training plan separately
+        (it budgets max(fwd, dx, dw) working sets).
+        """
+        key = (mode, tuple(in_spatial), tuple(kernel), tuple(stride),
+               int(cin), int(cout), bool(backward), int(in_dtype_bytes))
+        plan = self._plans.get(key)
+        if plan is None:
+            cfg = self.config
+            plan = self._plans[key] = _tiling.plan_uniform_tiles(
+                key[1], key[2], key[3], key[4], key[5], mode=mode,
+                vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
+                block_co=cfg.block_co, backward=backward,
+                in_dtype_bytes=in_dtype_bytes)
+        return plan
+
+    # -- the two op directions ---------------------------------------------
+
+    def deconv(self, x: jax.Array, w: jax.Array, stride,
+               padding=0) -> jax.Array:
+        """Transposed convolution on the engine (Eq. (1) + border crop)."""
+        cfg = self.config
+        if cfg.method == "pallas":
+            from repro.kernels.deconv import ops as _dops  # lazy: kernels
+            return _dops.deconv(x, w, stride, padding, engine=self)
+        pet = (cfg.preferred_element_type
+               if cfg.preferred_element_type is not None else jnp.float32)
+        return _XLA_DECONVS[cfg.method](x, w, stride, padding,
+                                        preferred_element_type=pet)
+
+    def conv(self, x: jax.Array, w: jax.Array, stride=1,
+             padding=0) -> jax.Array:
+        """Forward strided convolution on the engine."""
+        cfg = self.config
+        if cfg.conv_method == "pallas":
+            from repro.kernels.conv import ops as _cops  # lazy: kernels
+            return _cops.conv(x, w, stride, padding, engine=self)
+        rank = x.ndim - 2
+        pet = cfg.preferred_element_type
+        out_dtype = None
+        if pet is None and jnp.issubdtype(x.dtype, jnp.inexact):
+            # match the Pallas kernels' contract: accumulate in f32, emit
+            # the input dtype (bf16 inputs must not accumulate in bf16)
+            pet, out_dtype = jnp.float32, jnp.result_type(x, w)
+        y = lax.conv_general_dilated(
+            x, w, window_strides=_canon(stride, rank),
+            padding=list(canon_padding(padding, rank)),
+            dimension_numbers=dim_numbers(rank),
+            preferred_element_type=pet)
+        return y if out_dtype is None else y.astype(out_dtype)
+
+    def __call__(self, layer: _networks.UniformLayer, x: jax.Array,
+                 w: jax.Array) -> jax.Array:
+        """Run one ``UniformLayer`` (op-dispatched) on the engine."""
+        op = self.deconv if layer.op == "deconv" else self.conv
+        return op(x, w, layer.stride, layer.padding)
+
+
+# ---------------------------------------------------------------------------
+# Default engines — the compatibility substrate for method-string callers.
+# ---------------------------------------------------------------------------
+
+_DEFAULT_ENGINES: dict[EngineConfig, UniformEngine] = {}
+
+
+def default_engine(config: EngineConfig | None = None,
+                   **overrides) -> UniformEngine:
+    """Memoized engine per ``EngineConfig`` — so the compat wrappers
+    (``deconv_nd``/``conv_nd`` and the raw kernel ops) share one plan cache
+    per configuration instead of re-planning every call."""
+    if config is None:
+        config = EngineConfig(**overrides)
+    elif overrides:
+        config = dataclasses.replace(config, **overrides)
+    engine = _DEFAULT_ENGINES.get(config)
+    if engine is None:
+        engine = _DEFAULT_ENGINES[config] = UniformEngine(config)
+    return engine
+
+
+def as_engine(engine, default_method: str = "xla") -> UniformEngine:
+    """Coerce ``UniformEngine | EngineConfig | method-name | None`` to an
+    engine (None -> the memoized default for ``default_method``)."""
+    if engine is None:
+        return default_engine(method=default_method)
+    if isinstance(engine, UniformEngine):
+        return engine
+    if isinstance(engine, EngineConfig):
+        return default_engine(engine)
+    if isinstance(engine, str):
+        return default_engine(method=engine)
+    raise TypeError(f"expected UniformEngine | EngineConfig | method name, "
+                    f"got {engine!r}")
+
+
+def conv_nd(x: jax.Array, w: jax.Array, stride=1, padding=0,
+            method: str = "xla", **kw) -> jax.Array:
+    """Uniform 1D/2D/3D strided convolution — compat front-end.
+
+    Thin wrapper over a memoized default engine for ``method``; new code
+    should configure a ``UniformEngine`` once and call ``engine.conv``.
+    x: [N, *spatial, Cin] with spatial rank 1..3; w: [*K, Cin, Cout];
+    ``padding`` is a scalar, per-dim scalars, or per-dim ``(lo, hi)`` pairs.
+    """
+    if method not in CONV_METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of "
+                         f"{CONV_METHODS}")
+    pet = kw.pop("preferred_element_type", None)
+    knobs = pop_pallas_knobs(kw, method=method, op="conv_nd")
+    if method != "pallas":
+        knobs = {}      # meaningless for the XLA engine; accept and drop
+    engine = default_engine(method=method, preferred_element_type=pet,
+                            **knobs)
+    return engine.conv(x, w, stride, padding)
+
+
+# ---------------------------------------------------------------------------
+# Compiled schedules — the paper's per-layer mapping tables, as data.
+# ---------------------------------------------------------------------------
+
+def _lift_geometry(layer: _networks.UniformLayer):
+    """Mirror ``kernels.common.lift_3d``'s canonical-3D lifting on the
+    layer GEOMETRY (the large, tileable dim leading; W innermost)."""
+    sp, k, s = layer.in_spatial, layer.kernel, layer.stride
+    p = layer.padding
+    if layer.rank == 3:
+        return sp, k, s, p
+    if layer.rank == 2:
+        return ((sp[0], 1, sp[1]), (k[0], 1, k[1]), (s[0], 1, s[1]),
+                (p[0], (0, 0), p[1]))
+    return ((1, 1, sp[0]), (1, 1, k[0]), (1, 1, s[0]),
+            ((0, 0), (0, 0), p[0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSchedule:
+    """One row of the compiled schedule — the per-layer mapping decision."""
+    name: str
+    op: str                            # "deconv" | "conv"
+    in_spatial: tuple[int, ...]
+    out_spatial: tuple[int, ...]
+    cin: int
+    cout: int
+    kernel: tuple[int, ...]
+    stride: tuple[int, ...]
+    plan: _tiling.DeconvTilePlan       # the engine's cached tile plan
+    grid_steps: int                    # fused-grid steps for the forward
+    mxu_per_step: int                  # tap-batched matmuls per grid step
+    mxu_dispatches: int                # total MXU dispatches (forward)
+    vmem_bytes: int                    # modeled per-step working set
+    sparsity: float                    # zeros an OOM engine would read
+
+    def describe(self) -> str:
+        return (f"{self.name:<18s} {self.op:<6s} "
+                f"{'x'.join(map(str, self.in_spatial)):>11s}x{self.cin:<4d}-> "
+                f"{'x'.join(map(str, self.out_spatial)):>11s}x{self.cout:<4d} "
+                f"{self.plan.describe():<28s} grid{self.grid_steps:>5d} "
+                f"mxu{self.mxu_dispatches:>6d} zeros{self.sparsity:.0%}")
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "op": self.op,
+            "in_spatial": list(self.in_spatial),
+            "out_spatial": list(self.out_spatial),
+            "cin": self.cin, "cout": self.cout,
+            "plan": self.plan.describe(),
+            "grid_steps": self.grid_steps,
+            "mxu_per_step": self.mxu_per_step,
+            "mxu_dispatches": self.mxu_dispatches,
+            "vmem_bytes": self.vmem_bytes,
+            "sparsity": round(self.sparsity, 4),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleReport:
+    """The whole network's compiled schedule (batch-1 forward accounting)."""
+    engine: EngineConfig
+    layers: tuple[LayerSchedule, ...]
+    batch: int = 1
+
+    @property
+    def mxu_dispatches(self) -> int:
+        return sum(l.mxu_dispatches for l in self.layers)
+
+    @property
+    def grid_steps(self) -> int:
+        return sum(l.grid_steps for l in self.layers)
+
+    @property
+    def peak_vmem_bytes(self) -> int:
+        return max(l.vmem_bytes for l in self.layers)
+
+    @property
+    def unique_plans(self) -> int:
+        return len({l.plan for l in self.layers})
+
+    def describe(self) -> str:
+        head = (f"schedule[{self.engine.method}] batch={self.batch} "
+                f"layers={len(self.layers)} plans={self.unique_plans} "
+                f"grid={self.grid_steps} mxu={self.mxu_dispatches} "
+                f"peak_vmem={self.peak_vmem_bytes}")
+        return "\n".join([head] + ["  " + l.describe() for l in self.layers])
+
+    def to_json(self) -> dict:
+        return {
+            "method": self.engine.method,
+            "batch": self.batch,
+            "layers": [l.to_json() for l in self.layers],
+            "grid_steps": self.grid_steps,
+            "mxu_dispatches": self.mxu_dispatches,
+            "peak_vmem_bytes": self.peak_vmem_bytes,
+            "unique_plans": self.unique_plans,
+        }
+
+
+def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
+                    batch: int) -> LayerSchedule:
+    sp3, k3, s3, p3 = _lift_geometry(layer)
+    if layer.op == "conv":
+        plan_sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
+    else:
+        plan_sp3 = sp3
+    plan = engine.plan(layer.op, plan_sp3, k3, s3, layer.cin, layer.cout)
+    ci_blocks = -(-layer.cin // plan.block_ci)
+    co_blocks = -(-layer.cout // plan.block_co)
+    grid_steps = batch * co_blocks * plan.n_dtiles * ci_blocks
+    # per-phase tap batching: one wide matmul per NON-EMPTY output phase —
+    # prod(min(S, K)) of them (stride 1 collapses to a single dispatch)
+    mxu_per_step = math.prod(min(s, k) for s, k in zip(s3, k3))
+    sparsity = (insertion_sparsity(layer.in_spatial, layer.kernel,
+                                   layer.stride)
+                if layer.op == "deconv" else 0.0)
+    return LayerSchedule(
+        name=layer.name, op=layer.op, in_spatial=layer.in_spatial,
+        out_spatial=layer.out_spatial, cin=layer.cin, cout=layer.cout,
+        kernel=layer.kernel, stride=layer.stride, plan=plan,
+        grid_steps=grid_steps, mxu_per_step=mxu_per_step,
+        mxu_dispatches=grid_steps * mxu_per_step,
+        vmem_bytes=plan.step_vmem_bytes, sparsity=sparsity)
+
+
+def compile_network(layers: Sequence[_networks.UniformLayer],
+                    engine: UniformEngine | EngineConfig | str,
+                    *, batch: int = 1,
+                    ) -> tuple[Callable, ScheduleReport]:
+    """Compile a ``UniformLayer`` chain onto one configured engine.
+
+    Returns ``(apply, report)``: ``apply(ws, x)`` is a jit-compatible
+    callable running every layer on the engine in order (``ws`` is the
+    per-layer weight list, each ``[*K, Cin, Cout]``), and ``report`` is the
+    per-layer ``ScheduleReport`` — every tile plan it lists is resident in
+    the engine's cache, so executing ``apply`` (including under jit, and
+    across retraces) never re-runs the planner.
+
+    The chain must be geometrically consistent (layer i's output feeds
+    layer i+1); the schedule accounts a batch-``batch`` forward.
+    """
+    engine = engine if isinstance(engine, UniformEngine) else as_engine(engine)
+    layers = tuple(layers)
+    if not layers:
+        raise ValueError("compile_network needs at least one layer")
+    for prev, nxt in zip(layers, layers[1:]):
+        if prev.out_spatial != nxt.in_spatial or prev.cout != nxt.cin:
+            raise ValueError(
+                f"layer chain breaks at {prev.name} -> {nxt.name}: "
+                f"{prev.out_spatial}x{prev.cout} != "
+                f"{nxt.in_spatial}x{nxt.cin}")
+    report = ScheduleReport(
+        engine=engine.config, batch=batch,
+        layers=tuple(_schedule_layer(l, engine, batch) for l in layers))
+
+    def apply(ws, x):
+        if len(ws) != len(layers):
+            raise ValueError(f"expected {len(layers)} weight arrays, got "
+                             f"{len(ws)}")
+        h = x
+        for layer, w in zip(layers, ws):
+            h = engine(layer, h, w.astype(h.dtype))
+        return h
+
+    return apply, report
+
+
+def init_network_weights(layers: Sequence[_networks.UniformLayer], key,
+                         dtype=jnp.float32, scale: float = 0.05):
+    """Per-layer ``[*K, Cin, Cout]`` weights for a compiled network."""
+    keys = jax.random.split(key, len(layers))
+    return [scale * jax.random.normal(k, (*l.kernel, l.cin, l.cout), dtype)
+            for k, l in zip(keys, layers)]

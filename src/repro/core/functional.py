@@ -29,7 +29,7 @@ Four implementations, all bit-identical (tested):
     pallas     — the Pallas kernel (see repro.kernels.deconv), dispatched via
                  this module's ``deconv_nd`` for uniform access.  Any input
                  size runs as ONE fused pallas_call: the unified planner
-                 (repro.core.tiling.plan_deconv_tiles) blocks the leading
+                 (repro.core.tiling.plan_uniform_tiles) blocks the leading
                  spatial dim into grid tiles that exchange their overlap-add
                  halo in-kernel; each phase's valid taps are folded into one
                  wide MXU matmul (S^d dispatches per grid step, not K^d);
@@ -38,7 +38,7 @@ Four implementations, all bit-identical (tested):
                  the custom VJP runs dx (a stride-S gather-convolution of
                  dy) and dw (per-tap [bci, bco] contractions) as Pallas
                  kernels on the same fused grid, planned with
-                 ``plan_deconv_tiles(backward=True)``.
+                 ``plan_uniform_tiles(backward=True)``.
 """
 
 from __future__ import annotations
@@ -70,7 +70,7 @@ def canon_padding(padding, rank: int) -> tuple[tuple[int, int], ...]:
 
     Accepts a scalar (symmetric everywhere), a length-``rank`` sequence
     whose entries are scalars (symmetric per dim) or ``(lo, hi)`` pairs —
-    the ``DeconvLayer.crop`` convention, e.g. ``((0, 1),) * rank`` for the
+    the ``UniformLayer.padding`` convention, e.g. ``((0, 1),) * rank`` for the
     exact-doubling crop.  Entries may mix scalars and pairs.
     """
     if isinstance(padding, int):
@@ -292,31 +292,57 @@ def deconv_iom_phase(x: jax.Array, w: jax.Array, stride: Ints,
 
 METHODS = ("oom", "xla", "iom", "iom_phase", "pallas")
 
+# Engine tuning knobs that only the Pallas subsystem consumes.  The ONE
+# place both front-ends (``deconv_nd`` and ``repro.core.engine.conv_nd``)
+# split them off the call kwargs — XLA-lowered methods drop them so
+# method-parameterized callers can toggle freely, and anything left over is
+# an error naming the offending call site's method.
+PALLAS_KNOBS = ("block_ci", "block_co", "interpret", "max_tile_bytes")
+
+
+def pop_pallas_knobs(kw: dict, *, method: str, op: str) -> dict:
+    """Split the Pallas tuning knobs out of ``kw`` (mutating it).
+
+    Returns the knobs present; raises on any leftover kwarg, naming the
+    offending front-end and its method so mistyped knobs don't silently
+    vanish into a ``**kw`` sink.
+    """
+    knobs = {k: kw.pop(k) for k in PALLAS_KNOBS if k in kw}
+    if kw:
+        raise ValueError(
+            f"unknown {op} kwargs for method={method!r}: {sorted(kw)}; "
+            f"Pallas tuning knobs are {list(PALLAS_KNOBS)} (configure an "
+            f"EngineConfig instead of per-call kwargs)")
+    return knobs
+
 
 def deconv_nd(x: jax.Array, w: jax.Array, stride: Ints, padding: Ints | int = 0,
               method: str = "xla", **kw) -> jax.Array:
-    """Uniform 2D/3D (and 1D) deconvolution — the paper's single engine.
+    """Uniform 2D/3D (and 1D) deconvolution — compat front-end.
+
+    Thin wrapper over a memoized default ``repro.core.engine.UniformEngine``
+    for ``method``; new code should configure an engine once and call
+    ``engine.deconv(x, w, stride, padding)``.
 
     x: [N, *spatial, Cin] with spatial rank 1..3; w: [*K, Cin, Cout].
     2D is the degenerate 3D case (the paper gates FIFO-D off; here the depth
     loop statically collapses).  ``padding`` is the border crop applied on
     top of the Eq. (1) extent, as a scalar or per-dim ``(lo, hi)`` pairs —
     ``((0, 1),) * rank`` is the benchmark networks' exact-doubling crop
-    (``DeconvLayer.crop``).  The forward STRIDED convolution lives on the
-    same grid: see ``repro.core.engine.conv_nd``.
+    (``UniformLayer.padding``).  The forward STRIDED convolution lives on
+    the same engine: ``engine.conv`` / ``repro.core.engine.conv_nd``.
     """
-    if method == "oom":
-        return deconv_oom(x, w, stride, padding, **kw)
-    if method == "xla":
-        return deconv_xla(x, w, stride, padding, **kw)
-    if method == "iom":
-        return deconv_iom(x, w, stride, padding, **kw)
-    if method == "iom_phase":
-        return deconv_iom_phase(x, w, stride, padding, **kw)
-    if method == "pallas":
-        from repro.kernels.deconv import ops as _ops
-        return _ops.deconv(x, w, stride, padding, **kw)
-    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    from repro.core.engine import default_engine  # lazy: engine layers on us
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of "
+                         f"{METHODS}")
+    pet = kw.pop("preferred_element_type", None)
+    knobs = pop_pallas_knobs(kw, method=method, op="deconv_nd")
+    if method != "pallas":
+        knobs = {}      # meaningless for the XLA engine; accept and drop
+    engine = default_engine(method=method, preferred_element_type=pet,
+                            **knobs)
+    return engine.deconv(x, w, stride, padding)
 
 
 def deconv_macs(in_spatial: Ints, kernel: Ints, cin: int, cout: int,

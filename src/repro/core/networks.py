@@ -1,4 +1,12 @@
-"""The paper's four benchmark DCNNs (Section V), as layer lists.
+"""The paper's benchmark DCNNs (Section V), as uniform layer lists.
+
+Since PR 4 the layer spec itself is *uniform*: a single ``UniformLayer``
+describes both directions of the engine — ``op="deconv"`` (transposed
+convolution, ``padding`` is the Eq. (1) border crop) and ``op="conv"``
+(forward strided convolution, ``padding`` is the input (lo, hi) pad) — so
+``repro.core.engine.compile_network`` can schedule whole networks from one
+description, mirroring the paper's single computation engine executing
+every layer from a per-layer configuration.
 
 All deconvolution layers use uniform 3x3 / 3x3x3 filters with stride 2, as
 stated in the paper ("All the deconvolutional layers of the selected DCNNs
@@ -11,42 +19,88 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal, Sequence
+from typing import Sequence
+
+
+def _canon_pads(padding, rank: int) -> tuple[tuple[int, int], ...]:
+    if isinstance(padding, int):
+        return ((padding, padding),) * rank
+    out = []
+    for p in tuple(padding):
+        try:
+            pi = int(p)
+            out.append((pi, pi))
+        except TypeError:
+            lo, hi = p
+            out.append((int(lo), int(hi)))
+    assert len(out) == rank, (padding, rank)
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
-class DeconvLayer:
+class UniformLayer:
+    """One layer of the uniform engine — a conv OR a deconv.
+
+    ``padding`` holds per-dim ``(lo, hi)`` pairs whose meaning follows the
+    op: for ``op="deconv"`` it is the border CROP applied after the Eq. (1)
+    extent (the old ``DeconvLayer.crop``); for ``op="conv"`` it is the
+    input padding of the strided convolution.
+    """
     name: str
-    in_spatial: tuple[int, ...]      # input spatial extent (rank 2 or 3)
+    in_spatial: tuple[int, ...]      # input spatial extent (rank 1..3)
     cin: int
     cout: int
     kernel: tuple[int, ...]
     stride: tuple[int, ...]
-    # crop (lo, hi) per spatial dim applied after Eq.(1); (0,1) turns
-    # (I-1)*2+3 = 2I+1 into exactly 2I.
-    crop: tuple[tuple[int, int], ...]
+    padding: tuple[tuple[int, int], ...] = ()
+    op: str = "deconv"               # "deconv" | "conv"
+
+    def __post_init__(self):
+        if self.op not in ("deconv", "conv"):
+            raise ValueError(f"unknown op {self.op!r}; expected "
+                             f"'deconv' | 'conv'")
+        for f in ("in_spatial", "kernel", "stride"):
+            object.__setattr__(self, f, tuple(getattr(self, f)))
+        object.__setattr__(self, "padding",
+                           _canon_pads(self.padding or 0, self.rank))
 
     @property
     def rank(self) -> int:
         return len(self.in_spatial)
 
     @property
+    def crop(self) -> tuple[tuple[int, int], ...]:
+        """Compat alias for the deconv border-crop reading of ``padding``."""
+        return self.padding
+
+    @property
     def out_spatial(self) -> tuple[int, ...]:
-        return tuple((i - 1) * s + k - lo - hi
-                     for i, s, k, (lo, hi) in
-                     zip(self.in_spatial, self.stride, self.kernel, self.crop))
+        z = zip(self.in_spatial, self.stride, self.kernel, self.padding)
+        if self.op == "deconv":
+            return tuple((i - 1) * s + k - lo - hi for i, s, k, (lo, hi) in z)
+        return tuple((i + lo + hi - k) // s + 1 for i, s, k, (lo, hi) in z)
 
     @property
     def valid_macs(self) -> int:
-        """IOM MACs (every input activation x full kernel) — all valid."""
-        return (math.prod(self.in_spatial) * math.prod(self.kernel)
-                * self.cin * self.cout)
+        """MACs the engine actually executes — all valid under IOM.
+
+        Deconv: every input activation x the full kernel (paper Fig. 5);
+        conv: every output activation x the full kernel.
+        """
+        sp = self.in_spatial if self.op == "deconv" else self.out_spatial
+        return math.prod(sp) * math.prod(self.kernel) * self.cin * self.cout
 
     @property
     def oom_macs(self) -> int:
-        """MACs a dense conv executes over the zero-inserted input."""
+        """MACs a dense conv executes over the zero-inserted input.
+
+        For a forward conv there is no zero insertion, so OOM == valid.
+        """
+        if self.op == "conv":
+            return self.valid_macs
         full = tuple((i - 1) * s + k
-                     for i, s, k in zip(self.in_spatial, self.stride, self.kernel))
+                     for i, s, k in zip(self.in_spatial, self.stride,
+                                        self.kernel))
         return math.prod(full) * math.prod(self.kernel) * self.cin * self.cout
 
     @property
@@ -63,38 +117,68 @@ class DeconvLayer:
         return b * (inp + wgt + out)
 
 
-def _stack(name: str, rank: int, start: int, chans: Sequence[int]) -> list[DeconvLayer]:
+def DeconvLayer(name, in_spatial, cin, cout, kernel, stride, crop):
+    """Compat constructor: the pre-uniform deconv-only layer spec."""
+    return UniformLayer(name=name, in_spatial=tuple(in_spatial), cin=cin,
+                        cout=cout, kernel=tuple(kernel), stride=tuple(stride),
+                        padding=tuple(crop), op="deconv")
+
+
+def deconv_stack(name: str, rank: int, start: int,
+                 chans: Sequence[int]) -> list[UniformLayer]:
+    """A sequential stack of 3^d stride-2 exact-doubling deconvs — the GAN
+    generator shape (``conv_stack``'s sibling)."""
     layers = []
     sp = (start,) * rank
     k = (3,) * rank
     s = (2,) * rank
     crop = ((0, 1),) * rank
     for li in range(len(chans) - 1):
-        layers.append(DeconvLayer(
+        layers.append(UniformLayer(
             name=f"{name}.deconv{li + 1}", in_spatial=sp, cin=chans[li],
-            cout=chans[li + 1], kernel=k, stride=s, crop=crop))
+            cout=chans[li + 1], kernel=k, stride=s, padding=crop))
         sp = tuple(2 * v for v in sp)
+    return layers
+
+
+_stack = deconv_stack
+
+
+def conv_stack(name: str, in_spatial, chans: Sequence[tuple[int, int]],
+               first_stride: int = 1) -> list[UniformLayer]:
+    """A sequential stack of 3^d stride-2 convs (stride ``first_stride`` on
+    the first layer), symmetric padding 1 — the V-Net encoder / GAN
+    discriminator shape."""
+    rank = len(in_spatial)
+    layers, sp = [], tuple(in_spatial)
+    for i, (ci, co) in enumerate(chans):
+        s = (first_stride,) * rank if i == 0 else (2,) * rank
+        lay = UniformLayer(name=f"{name}.conv{i + 1}", in_spatial=sp, cin=ci,
+                           cout=co, kernel=(3,) * rank, stride=s,
+                           padding=((1, 1),) * rank, op="conv")
+        layers.append(lay)
+        sp = lay.out_spatial
     return layers
 
 
 # -- the paper's four benchmarks -------------------------------------------
 
-def dcgan() -> list[DeconvLayer]:
+def dcgan() -> list[UniformLayer]:
     """DCGAN generator (Radford et al.): 4x4x1024 -> 64x64x3, 4 deconvs."""
     return _stack("dcgan", 2, 4, [1024, 512, 256, 128, 3])
 
 
-def gp_gan() -> list[DeconvLayer]:
+def gp_gan() -> list[UniformLayer]:
     """GP-GAN blending generator decoder: 4x4x512 -> 64x64x3."""
     return _stack("gp_gan", 2, 4, [512, 256, 128, 64, 3])
 
 
-def gan3d() -> list[DeconvLayer]:
+def gan3d() -> list[UniformLayer]:
     """3D-GAN generator (Wu et al.): 4^3 x 512 -> 64^3 x 1."""
     return _stack("3d_gan", 3, 4, [512, 256, 128, 64, 1])
 
 
-def vnet_decoder() -> list[DeconvLayer]:
+def vnet_decoder() -> list[UniformLayer]:
     """V-Net decoder deconvs (Milletari et al.), 128x128x64 volume.
 
     Decoder stages upsample 8^3-equivalent features back up; spatial sizes
@@ -103,11 +187,19 @@ def vnet_decoder() -> list[DeconvLayer]:
     layers = []
     sp = (8, 8, 4)
     for li, (ci, co) in enumerate([(256, 256), (256, 128), (128, 64), (64, 32)]):
-        layers.append(DeconvLayer(
+        layers.append(UniformLayer(
             name=f"vnet.deconv{li + 1}", in_spatial=sp, cin=ci, cout=co,
-            kernel=(3, 3, 3), stride=(2, 2, 2), crop=((0, 1),) * 3))
+            kernel=(3, 3, 3), stride=(2, 2, 2), padding=((0, 1),) * 3))
         sp = tuple(2 * v for v in sp)
     return layers
+
+
+def vnet_encoder(in_spatial=(128, 128, 64)) -> list[UniformLayer]:
+    """V-Net encoder convs: 5 stages, stride 1 then 2x4, ending at the
+    (8, 8, 4) x 256 feature map the decoder deconvs consume — so
+    ``vnet_encoder() + vnet_decoder()`` chains as one uniform schedule."""
+    return conv_stack("vnet", in_spatial,
+                      [(1, 16), (16, 32), (32, 64), (64, 128), (128, 256)])
 
 
 BENCHMARKS = {
@@ -118,5 +210,5 @@ BENCHMARKS = {
 }
 
 
-def benchmark_layers(name: str) -> list[DeconvLayer]:
+def benchmark_layers(name: str) -> list[UniformLayer]:
     return BENCHMARKS[name]()

@@ -22,8 +22,12 @@ from repro.core import networks
 
 
 @dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """The paper's computation-engine configuration (Table II)."""
+class FpgaEngineConfig:
+    """The paper's FPGA computation-engine configuration (Table II).
+
+    (The TPU-side runtime configuration is ``repro.core.engine.EngineConfig``
+    — this dataclass models the paper's fixed PE-mesh blocking.)
+    """
     tm: int   # output-channel parallelism (PE groups)
     tn: int   # input-channel parallelism (PE planes per group)
     tz: int   # depth-direction PE planes (1 for 2D)
@@ -48,13 +52,13 @@ class EngineConfig:
 
 
 # Table II, verbatim.
-ENGINE_2D = EngineConfig(tm=2, tn=64, tz=1, tr=4, tc=4)
-ENGINE_3D = EngineConfig(tm=2, tn=16, tz=4, tr=4, tc=4)
+ENGINE_2D = FpgaEngineConfig(tm=2, tn=64, tz=1, tr=4, tc=4)
+ENGINE_3D = FpgaEngineConfig(tm=2, tn=16, tz=4, tr=4, tc=4)
 
 assert ENGINE_2D.total_pes == 2048 and ENGINE_3D.total_pes == 2048
 
 
-def engine_for(rank: int) -> EngineConfig:
+def engine_for(rank: int) -> FpgaEngineConfig:
     return ENGINE_3D if rank == 3 else ENGINE_2D
 
 
@@ -70,8 +74,8 @@ class LayerPerf:
     memory_bound: bool
 
 
-def model_layer(layer: networks.DeconvLayer, engine: EngineConfig | None = None,
-                ) -> LayerPerf:
+def model_layer(layer: networks.UniformLayer,
+                engine: FpgaEngineConfig | None = None) -> LayerPerf:
     """Double-buffered roofline model of one deconv layer on the engine.
 
     Compute time: IOM executes exactly ``valid_macs``; the engine retires
@@ -259,25 +263,6 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
                           vmem_budget=vmem_budget)
 
 
-def plan_deconv_tiles(in_spatial, kernel, stride, cin, cout,
-                      **kw) -> DeconvTilePlan:
-    """Deconv-mode facade over ``plan_uniform_tiles`` (the original API)."""
-    return plan_uniform_tiles(in_spatial, kernel, stride, cin, cout,
-                              mode="deconv", **kw)
-
-
-def plan_conv_tiles(in_spatial, kernel, stride, cin, cout,
-                    **kw) -> DeconvTilePlan:
-    """Conv-mode facade: ``in_spatial`` is the PADDED conv input extent.
-
-    The returned plan's ``dtile`` counts conv OUTPUT rows (the quantity the
-    conv grid tiles) and ``block_ci``/``block_co`` keep their conv sense
-    (ci contracted, co produced).
-    """
-    return plan_uniform_tiles(in_spatial, kernel, stride, cin, cout,
-                              mode="conv", **kw)
-
-
 # -- TPU mapping -------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -298,15 +283,15 @@ def tpu_blocking(layer_cin: int, layer_cout: int, in_spatial, kernel, stride,
                  lane: int = 128) -> TpuBlocking:
     """Pick (block_ci, block_co) for a whole-input-resident grid step.
 
-    Thin facade over the unified planner (``plan_deconv_tiles`` with the
+    Thin facade over the unified planner (``plan_uniform_tiles`` with the
     spatial split disabled — channels-only shrink), so there is exactly ONE
     VMEM budget model; ``acc_bytes``/``lane`` are retained for signature
     compatibility (the planner accumulates in f32 and caps blocks at the
     128-wide MXU lane).
     """
     del acc_bytes, lane  # the unified planner owns these decisions
-    plan = plan_deconv_tiles(in_spatial, kernel, stride, layer_cin,
-                             layer_cout, vmem_budget=vmem_budget,
-                             allow_split=False)
+    plan = plan_uniform_tiles(in_spatial, kernel, stride, layer_cin,
+                              layer_cout, mode="deconv",
+                              vmem_budget=vmem_budget, allow_split=False)
     return TpuBlocking(block_ci=plan.block_ci, block_co=plan.block_co,
                        vmem_limit_bytes=vmem_budget)

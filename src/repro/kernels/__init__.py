@@ -4,5 +4,7 @@
 #             grid's adjoint body promoted out of its backward-only role)
 #   common.py — the shared polyphase/tap geometry and host-side lifting
 # Both subsystems run the same fused 4D grid and share one VMEM planner
-# (repro.core.tiling.plan_uniform_tiles); whole networks dispatch through
-# repro.core.functional.deconv_nd and repro.core.engine.conv_nd.
+# (repro.core.tiling.plan_uniform_tiles) through the geometry-keyed cache
+# of a configured repro.core.engine.UniformEngine; whole networks dispatch
+# through engine.conv/engine.deconv (deconv_nd/conv_nd are the compat
+# front-ends over memoized default engines).

@@ -1,6 +1,5 @@
 from repro.core.tiling import (  # noqa: F401
     DeconvTilePlan,
-    plan_conv_tiles,
     plan_uniform_tiles,
 )
 from repro.kernels.conv.ops import conv  # noqa: F401

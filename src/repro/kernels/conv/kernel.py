@@ -33,7 +33,7 @@ The caller (``kernels.conv.ops``) zero-pads the input's leading dim to
 ``n_dtiles * dtile * S_d`` rows with ``n_dtiles * dtile`` at least
 ``O_d + ceil(K_d/S_d) - 1`` (output rows plus halo slack), which keeps every
 real tap in-slab and makes the final carry-out structurally zero; the
-blocking decision comes from ``repro.core.tiling.plan_conv_tiles``.
+blocking decision comes from ``repro.core.tiling.plan_uniform_tiles(mode="conv")``.
 """
 
 from __future__ import annotations

@@ -15,9 +15,11 @@ uniform engine:
   * dw reuses ``deconv_dw_pallas_3d`` with the (x, dy) roles swapped —
     conv's stride-1-indexed array is dy where deconv's was x.
 
-One ``plan_conv_tiles`` decision (the shared VMEM model of
+Since PR 4 every call runs against a ``repro.core.engine.UniformEngine``:
+one cached ``engine.plan("conv", ...)`` decision (the shared VMEM model of
 ``repro.core.tiling.plan_uniform_tiles``) budgets all three
-``pallas_call``s of a training step, exactly as the deconv op does.
+``pallas_call``s of a training step, exactly as the deconv op does — and
+the geometry-keyed cache plans each layer shape once, not per invocation.
 """
 
 from __future__ import annotations
@@ -27,16 +29,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiling as _tiling
+from repro.core import engine as _engine
 from repro.core.engine import conv_output_shape
 from repro.core.functional import _canon, canon_padding
 from repro.kernels import common as _common
 from repro.kernels.conv import kernel as _ck
 from repro.kernels.deconv import kernel as _dk
 from repro.kernels.deconv import ops as _dops
-
-# default VMEM budget the planner targets per grid step
-_VMEM_BUDGET = _tiling.DECONV_VMEM_BUDGET
 
 _default_interpret = _common.default_interpret
 
@@ -100,8 +99,10 @@ def _conv_core(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
         dtile=dtile, interpret=interpret, out_dtype=out_dtype)
 
 
-def _conv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
-                   max_tile_bytes=None, out_dtype=None):
+def _conv_fwd_impl(x, w, stride, padding, engine):
+    cfg = engine.config
+    interpret = (cfg.interpret if cfg.interpret is not None
+                 else _default_interpret())
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
@@ -112,42 +113,40 @@ def _conv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
     co = w3.shape[-1]
     out3 = conv_output_shape(x3.shape[1:4], kernel3, stride3)
 
-    plan = _tiling.plan_conv_tiles(
-        x3.shape[1:4], kernel3, stride3, x3.shape[-1], co,
-        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
-        block_ci=block_ci, block_co=block_co)
+    plan = engine.plan("conv", x3.shape[1:4], kernel3, stride3,
+                       x3.shape[-1], co)
+    out_dtype = (cfg.preferred_element_type
+                 if cfg.preferred_element_type is not None else x.dtype)
     y3 = _conv_core(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
-                    interpret, plan.dtile, plan.n_dtiles,
-                    out_dtype or x.dtype)
+                    interpret, plan.dtile, plan.n_dtiles, out_dtype)
     y3 = y3[:, :out3[0], :, :, :co]
     return jnp.squeeze(y3, axis=squeeze) if squeeze else y3
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
-def _conv(x, w, stride, padding, block_ci, block_co, interpret,
-          max_tile_bytes, out_dtype):
-    return _conv_fwd_impl(x, w, stride, padding, block_ci, block_co,
-                          interpret, max_tile_bytes, out_dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _conv(x, w, stride, padding, engine):
+    return _conv_fwd_impl(x, w, stride, padding, engine)
 
 
-def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
-         max_tile_bytes, out_dtype):
-    return _conv(x, w, stride, padding, block_ci, block_co, interpret,
-                 max_tile_bytes, out_dtype), (x, w)
+def _fwd(x, w, stride, padding, engine):
+    return _conv(x, w, stride, padding, engine), (x, w)
 
 
-def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
-         out_dtype, res, dy):
+def _bwd(stride, padding, engine, res, dy):
     """Training backward, fully on the uniform Pallas grid.
 
     Conv's adjoint is a deconv, so both cotangents reuse the DECONV
     subsystem's kernels with the channel roles swapped: ``dx`` is the
     deconv-forward kernel run on dy (windowed back through the (lo, hi)
     padding), ``dw`` the deconv dw kernel with dy playing the
-    stride-1-indexed role.  One ``plan_conv_tiles(backward=True)`` decision
-    budgets both working sets alongside the forward's.
+    stride-1-indexed role.  One cached ``engine.plan("conv", ...,
+    backward=True)`` decision budgets both working sets alongside the
+    forward's.
     """
     x, w = res
+    cfg = engine.config
+    interpret = (cfg.interpret if cfg.interpret is not None
+                 else _default_interpret())
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
@@ -160,10 +159,8 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
                   for i, (lo, hi) in zip(x3.shape[1:4], pads3))
     out3 = conv_output_shape(in_p3, kernel3, stride3)
 
-    plan = _tiling.plan_conv_tiles(
-        in_p3, kernel3, stride3, ci, co,
-        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
-        block_ci=block_ci, block_co=block_co, backward=True)
+    plan = engine.plan("conv", in_p3, kernel3, stride3, ci, co,
+                       backward=True)
 
     # dx: deconv of dy on the same grid.  _core_call's (block_ci, block_co)
     # are ITS input/output channel blocks — dy carries conv's Cout and the
@@ -207,25 +204,30 @@ def conv(x: jax.Array, w: jax.Array, stride=1, padding=0, *,
          block_ci: int | None = None, block_co: int | None = None,
          interpret: bool | None = None,
          max_tile_bytes: int | None = None,
-         preferred_element_type=None) -> jax.Array:
+         preferred_element_type=None,
+         engine=None) -> jax.Array:
     """Public op: uniform 1D/2D/3D strided convolution via the Pallas kernel.
 
     x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; semantics match
     ``lax.conv_general_dilated`` (correlation, channels-last): per-dim
     output extent ``(I + lo + hi - K) // S + 1``.  ``padding`` is a scalar,
-    per-dim scalars, or per-dim ``(lo, hi)`` pairs.  ``interpret`` defaults
-    to True off-TPU (CPU validation) and False on TPU.  ``max_tile_bytes``
-    overrides the planner's per-grid-step VMEM budget (small values force
-    the multi-tile fused grid — used by tests and benchmarks).
-    ``preferred_element_type`` sets the output dtype (accumulation is
-    always f32 in-kernel).
+    per-dim scalars, or per-dim ``(lo, hi)`` pairs.
+
+    The tuning keywords are compatibility sugar: they resolve to a memoized
+    ``repro.core.engine.default_engine`` whose ``EngineConfig`` carries
+    them, so repeated calls share one plan cache.  Passing ``engine=``
+    directly (what ``UniformEngine.conv`` does) is the configured path —
+    mixing it with per-call knobs is an error.
     """
+    if engine is None:
+        engine = _engine.default_engine(
+            method="pallas", block_ci=block_ci, block_co=block_co,
+            interpret=interpret, max_tile_bytes=max_tile_bytes,
+            preferred_element_type=preferred_element_type)
+    elif any(v is not None for v in (block_ci, block_co, interpret,
+                                     max_tile_bytes, preferred_element_type)):
+        raise ValueError("per-call tuning kwargs and an explicit engine are "
+                         "mutually exclusive; set them on the EngineConfig")
     rank = x.ndim - 2
-    stride_t = _canon(stride, rank)
-    pads_t = canon_padding(padding, rank)
-    out_dtype = (jnp.dtype(preferred_element_type)
-                 if preferred_element_type is not None else None)
-    if interpret is None:
-        interpret = _default_interpret()
-    return _conv(x, w, stride_t, pads_t, block_ci, block_co, interpret,
-                 max_tile_bytes, out_dtype)
+    return _conv(x, w, _canon(stride, rank), canon_padding(padding, rank),
+                 engine)

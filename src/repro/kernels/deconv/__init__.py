@@ -1,8 +1,11 @@
+# Public surface of the Pallas deconv subsystem.  Planning is owned by
+# repro.core.tiling.plan_uniform_tiles via the engine's geometry-keyed
+# cache (the old choose_blocks shim is gone).
 from repro.core.tiling import (  # noqa: F401
     DeconvTilePlan,
-    plan_deconv_tiles,
+    plan_uniform_tiles,
 )
-from repro.kernels.deconv.ops import deconv, choose_blocks  # noqa: F401
+from repro.kernels.deconv.ops import deconv  # noqa: F401
 from repro.kernels.deconv.ref import (  # noqa: F401
     deconv_loop_oracle,
     deconv_reference,

@@ -47,7 +47,7 @@ Maps the paper's PE mesh onto the TPU memory hierarchy with a fused 4D grid
 The caller (``ops.py``) zero-pads the leading dim to ``n_dtiles * dtile``
 with at least ``ceil(K_d/S_d) - 1`` rows of slack, which makes the final
 tile's carry-out provably zero; the blocking decision itself comes from the
-unified planner in ``repro.core.tiling.plan_deconv_tiles``.
+unified planner in ``repro.core.tiling.plan_uniform_tiles``.
 """
 
 from __future__ import annotations

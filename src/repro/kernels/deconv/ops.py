@@ -5,18 +5,21 @@ channel padding to block multiples, the phase-major weight gather (each
 phase's valid taps contiguous, feeding the kernel's tap-batched matmuls),
 leading-dim zero-padding to the planner's tile grid,
 border cropping — symmetric or per-dim ``(lo, hi)`` pairs, the
-``DeconvLayer.crop`` convention — and a custom VJP that runs BOTH
+``UniformLayer.padding`` convention — and a custom VJP that runs BOTH
 cotangents on the same uniform Pallas grid as the forward (deconv's
 adjoint is a strided convolution — the engine's first-class forward conv,
 see ``repro.kernels.conv``): ``dx`` is a stride-S gather-convolution of
 ``dy`` and ``dw`` a set of per-tap [bci, bco] contractions reduced across
 the sequential grid dims — training steps never leave the paper's engine.
 
-Oversized inputs are NOT split here: the unified planner
-(``repro.core.tiling.plan_deconv_tiles``) jointly picks
-``(dtile, block_ci, block_co)`` and a single ``pallas_call`` runs the fused
-4D grid with in-kernel halo overlap-add (see ``kernel.py``) — there is no
-Python-level tile loop or ``dynamic_update_slice`` stitching left.
+Since PR 4 every call runs against a ``repro.core.engine.UniformEngine``:
+the engine's ``EngineConfig`` carries what used to be per-call tuning
+kwargs (blocks, VMEM budget, interpret, output dtype) and its
+geometry-keyed cache means the unified planner
+(``repro.core.tiling.plan_uniform_tiles``) runs once per layer geometry,
+not once per op invocation.  The fused 4D grid with in-kernel halo
+overlap-add (see ``kernel.py``) still serves any input size as ONE
+``pallas_call``.
 """
 
 from __future__ import annotations
@@ -27,32 +30,15 @@ import itertools
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiling as _tiling
+from repro.core import engine as _engine
 from repro.core.functional import _canon, canon_padding, deconv_output_shape
 from repro.kernels import common as _common
 from repro.kernels.deconv import kernel as _k
-
-# default VMEM budget the planner targets per grid step
-_VMEM_BUDGET = _tiling.DECONV_VMEM_BUDGET
 
 # host-side canonicalisation shared with kernels.conv.ops
 _pad_axis_to = _common.pad_axis_to
 _lift_3d = _common.lift_3d
 _default_interpret = _common.default_interpret
-
-
-def choose_blocks(in_spatial, kernel, stride, ci, co,
-                  vmem_budget: int = _VMEM_BUDGET) -> tuple[int, int]:
-    """Largest MXU-aligned channel blocks whose working set fits VMEM.
-
-    Compat shim over the unified planner with the spatial split disabled
-    (channels-only shrink); new code should call
-    ``repro.core.tiling.plan_deconv_tiles`` directly.
-    """
-    plan = _tiling.plan_deconv_tiles(in_spatial, kernel, stride, ci, co,
-                                     vmem_budget=vmem_budget,
-                                     allow_split=False)
-    return plan.block_ci, plan.block_co
 
 
 def _phase_major(w3, kernel3, stride3):
@@ -94,8 +80,15 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
     return y[:, :out3[0], :, :, :co]
 
 
-def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
-                     max_tile_bytes=None, out_dtype=None):
+def _resolve(engine):
+    cfg = engine.config
+    interpret = (cfg.interpret if cfg.interpret is not None
+                 else _default_interpret())
+    return cfg, interpret
+
+
+def _deconv_fwd_impl(x, w, stride, padding, engine):
+    cfg, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
@@ -103,13 +96,11 @@ def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
     kernel3 = w3.shape[:3]
     in_sp3 = x3.shape[1:4]
 
-    plan = _tiling.plan_deconv_tiles(
-        in_sp3, kernel3, stride3, x3.shape[-1], w3.shape[-1],
-        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
-        block_ci=block_ci, block_co=block_co)
+    plan = engine.plan("deconv", in_sp3, kernel3, stride3,
+                       x3.shape[-1], w3.shape[-1])
     y3 = _core_call(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
                     interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles,
-                    out_dtype=out_dtype)
+                    out_dtype=cfg.preferred_element_type)
 
     # un-lift and crop ((lo, hi) per dim — asymmetric crops supported)
     y = jnp.squeeze(y3, axis=squeeze) if squeeze else y3
@@ -122,17 +113,13 @@ def _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co, interpret,
     return y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
-def _deconv(x, w, stride, padding, block_ci, block_co, interpret,
-            max_tile_bytes, out_dtype):
-    return _deconv_fwd_impl(x, w, stride, padding, block_ci, block_co,
-                            interpret, max_tile_bytes, out_dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _deconv(x, w, stride, padding, engine):
+    return _deconv_fwd_impl(x, w, stride, padding, engine)
 
 
-def _fwd(x, w, stride, padding, block_ci, block_co, interpret,
-         max_tile_bytes, out_dtype):
-    return _deconv(x, w, stride, padding, block_ci, block_co, interpret,
-                   max_tile_bytes, out_dtype), (x, w)
+def _fwd(x, w, stride, padding, engine):
+    return _deconv(x, w, stride, padding, engine), (x, w)
 
 
 def _bwd_einsum(stride, padding, res, dy):
@@ -168,8 +155,7 @@ def _bwd_einsum(stride, padding, res, dy):
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
-def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
-         out_dtype, res, dy):
+def _bwd(stride, padding, engine, res, dy):
     """Training backward on the uniform Pallas grid.
 
     Deconv's adjoint is a strided convolution, so both cotangents reuse the
@@ -177,11 +163,12 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
     gather-convolution of ``dy`` against the tap weights (phases collapsed
     to one, reversed d-tile iteration), ``dw`` a per-tap [bci, bco]
     contraction accumulated across the sequential grid dims in VMEM.  One
-    ``plan_deconv_tiles(backward=True)`` decision budgets the working sets
-    of both kernels; inputs stay in their storage dtype (accumulation is
-    f32 in-kernel — no full-array HBM upcast).
+    cached ``engine.plan(..., backward=True)`` decision budgets the working
+    sets of both kernels; inputs stay in their storage dtype (accumulation
+    is f32 in-kernel — no full-array HBM upcast).
     """
     x, w = res
+    _, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
@@ -195,10 +182,8 @@ def _bwd(stride, padding, block_ci, block_co, interpret, max_tile_bytes,
     kernel3 = w3.shape[:3]
     ci, co = x3.shape[-1], w3.shape[-1]
 
-    plan = _tiling.plan_deconv_tiles(
-        x3.shape[1:4], kernel3, stride3, ci, co,
-        vmem_budget=max_tile_bytes or _VMEM_BUDGET,
-        block_ci=block_ci, block_co=block_co, backward=True)
+    plan = engine.plan("deconv", x3.shape[1:4], kernel3, stride3, ci, co,
+                       backward=True)
 
     # pad channels to the blocks and leading dims to the tile grid: x to
     # n_dtiles*dtile rows, dy to the matching output extent (the kernels'
@@ -234,26 +219,31 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
            block_ci: int | None = None, block_co: int | None = None,
            interpret: bool | None = None,
            max_tile_bytes: int | None = None,
-           preferred_element_type=None) -> jax.Array:
+           preferred_element_type=None,
+           engine=None) -> jax.Array:
     """Public op: uniform 1D/2D/3D IOM deconvolution via the Pallas kernel.
 
     x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; returns channels-last output
     of extent (I-1)*S + K - lo - hi per dim.  ``padding`` is a scalar,
-    per-dim scalars, or per-dim ``(lo, hi)`` pairs (the ``DeconvLayer.crop``
-    convention — ``((0, 1),) * rank`` crops to exact doubling).
-    ``interpret`` defaults to True off-TPU (CPU validation) and False on
-    TPU.  ``max_tile_bytes`` overrides the planner's per-grid-step VMEM
-    budget (small values force the multi-tile fused grid even on small
-    inputs — used by tests and benchmarks).  ``preferred_element_type``
-    sets the output dtype (accumulation is always f32 in-kernel, so e.g.
-    bf16 inputs can emit f32 without a second rounding).
+    per-dim scalars, or per-dim ``(lo, hi)`` pairs (the
+    ``UniformLayer.padding`` convention — ``((0, 1),) * rank`` crops to
+    exact doubling).
+
+    The tuning keywords are compatibility sugar: they resolve to a memoized
+    ``repro.core.engine.default_engine`` whose ``EngineConfig`` carries
+    them, so repeated calls share one plan cache.  Passing ``engine=``
+    directly (what ``UniformEngine.deconv`` does) is the configured path —
+    mixing it with per-call knobs is an error.
     """
+    if engine is None:
+        engine = _engine.default_engine(
+            method="pallas", block_ci=block_ci, block_co=block_co,
+            interpret=interpret, max_tile_bytes=max_tile_bytes,
+            preferred_element_type=preferred_element_type)
+    elif any(v is not None for v in (block_ci, block_co, interpret,
+                                     max_tile_bytes, preferred_element_type)):
+        raise ValueError("per-call tuning kwargs and an explicit engine are "
+                         "mutually exclusive; set them on the EngineConfig")
     rank = x.ndim - 2
-    stride_t = _canon(stride, rank)
-    pads_t = canon_padding(padding, rank)
-    out_dtype = (jnp.dtype(preferred_element_type)
-                 if preferred_element_type is not None else None)
-    if interpret is None:
-        interpret = _default_interpret()
-    return _deconv(x, w, stride_t, pads_t, block_ci, block_co, interpret,
-                   max_tile_bytes, out_dtype)
+    return _deconv(x, w, _canon(stride, rank), canon_padding(padding, rank),
+                   engine)

@@ -178,20 +178,24 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig):
     return train_step
 
 
-def make_gan_train_step(cfg: ModelConfig, opt: AdamWConfig,
-                        method: str = "iom_phase"):
+def make_gan_train_step(cfg: ModelConfig, opt: AdamWConfig, engine=None):
+    """``engine`` is a ``UniformEngine`` (or an ``EngineConfig`` / method
+    name, coerced via ``as_engine``) driving every conv and deconv of the
+    GAN step — configured once, shared by both halves."""
+    engine = D._engine(engine)
+
     def train_step(params, opt_state, batch):
         gen_p, disc_p = params["gen"], params["disc"]
         gen_s, disc_s = opt_state
 
         def g_loss_fn(gp):
             gl, _, _ = D.gan_losses(gp, disc_p, cfg, batch["z"],
-                                    batch["real"], method)
+                                    batch["real"], engine)
             return gl
 
         def d_loss_fn(dp):
             _, dl, _ = D.gan_losses(gen_p, dp, cfg, batch["z"],
-                                    batch["real"], method)
+                                    batch["real"], engine)
             return dl
 
         gl, g_grads = jax.value_and_grad(g_loss_fn)(gen_p)
@@ -203,11 +207,12 @@ def make_gan_train_step(cfg: ModelConfig, opt: AdamWConfig,
     return train_step
 
 
-def make_vnet_train_step(cfg: ModelConfig, opt: AdamWConfig,
-                         method: str = "iom_phase"):
+def make_vnet_train_step(cfg: ModelConfig, opt: AdamWConfig, engine=None):
+    engine = D._engine(engine)
+
     def train_step(params, opt_state, batch):
         def loss_fn(p):
-            logits = D.vnet_forward(p["vnet"], cfg, batch["vol"], method)
+            logits = D.vnet_forward(p["vnet"], cfg, batch["vol"], engine)
             return D.dice_loss(logits, batch["labels"])
         loss, grads = jax.value_and_grad(loss_fn)(params)
         new_p, new_s = adamw_update(grads, opt_state, params, opt)
@@ -255,7 +260,7 @@ def _dcnn_bundle(cfg: ModelConfig, mesh, opt: AdamWConfig) -> Bundle:
                                              jnp.float32),
                  "labels": jax.ShapeDtypeStruct((cfg.dcnn_batch, *sp),
                                                 jnp.int32)}
-        step = make_vnet_train_step(cfg, opt, cfg.dcnn_method)
+        step = make_vnet_train_step(cfg, opt, engine=cfg.dcnn_method)
         os_shapes = jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes)
         os_shard = opt_shardings(mesh, os_shapes, p_logical, cfg.fsdp)
     else:
@@ -266,7 +271,7 @@ def _dcnn_bundle(cfg: ModelConfig, mesh, opt: AdamWConfig) -> Bundle:
                  "real": jax.ShapeDtypeStruct(
                      (cfg.dcnn_batch, *out_sp, layers[-1].cout),
                      jnp.float32)}
-        step = make_gan_train_step(cfg, opt, cfg.dcnn_method)
+        step = make_gan_train_step(cfg, opt, engine=cfg.dcnn_method)
         os_shapes = (jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes["gen"]),
                      jax.eval_shape(functools.partial(adamw_init, opt=opt), p_shapes["disc"]))
         os_shard = (opt_shardings(mesh, os_shapes[0], p_logical["gen"],

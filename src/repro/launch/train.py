@@ -65,7 +65,7 @@ def main():
             if cfg.dcnn == "v_net":
                 data = VolumeBatches(cfg.dcnn_batch, D._vnet_spatial(cfg))
                 step_fn = ST.make_vnet_train_step(cfg, opt,
-                                                  args.deconv_method)
+                                                  engine=args.deconv_method)
                 opt_state = adamw_init(params, opt)
             else:
                 layers = D._scaled_layers(cfg)
@@ -73,7 +73,7 @@ def main():
                                    (*layers[-1].out_spatial,
                                     layers[-1].cout))
                 step_fn = ST.make_gan_train_step(cfg, opt,
-                                                 args.deconv_method)
+                                                 engine=args.deconv_method)
                 opt_state = (adamw_init(params["gen"], opt),
                              adamw_init(params["disc"], opt))
         else:

@@ -1,17 +1,19 @@
 """The paper's four benchmark DCNNs as trainable JAX models.
 
-WHOLE networks on the uniform 2D/3D engine: the generators (DCGAN / GP-GAN
-/ 3D-GAN) and the V-Net decoder route their transposed convolutions through
-``repro.core.deconv_nd``, and — since PR 3 — every forward convolution (the
-discriminator stacks, the V-Net encoder/merge convs and its 1x1x1 head)
-routes through the sibling ``repro.core.conv_nd`` dispatch.  With
-``method="pallas"`` a full GAN loss step or V-Net forward therefore
-executes every conv AND deconv on the same fused Pallas grid — zero
-``lax.conv_general_dilated`` dispatches; any other method pairs the
-XLA-lowered deconv flavour with the XLA conv baseline
-(``repro.core.engine.uniform_conv_method``).  The crop convention matches
-``networks.DeconvLayer`` ((0,1) per dim: exact spatial doubling), applied
-INSIDE the deconv op via its ``(lo, hi)`` padding.
+WHOLE networks on ONE configured engine: every forward runs against a
+``repro.core.engine.UniformEngine`` — the generators' (DCGAN / GP-GAN /
+3D-GAN) transposed convolutions, the discriminator's strided convs, the
+V-Net encoder/merge convs and its 1x1x1 head all dispatch through
+``engine.deconv``/``engine.conv``.  No method strings or Pallas tuning
+kwargs thread through this module: the engine's ``EngineConfig`` was
+decided once by the caller, and its geometry-keyed plan cache schedules
+each layer shape exactly once.  With ``UniformEngine(method="pallas")`` a
+full GAN loss step or V-Net forward executes every conv AND deconv on the
+same fused Pallas grid — zero ``lax.conv_general_dilated`` dispatches; any
+other method pairs the XLA-lowered deconv flavour with the XLA conv
+baseline.  The crop convention matches ``networks.UniformLayer`` ((0,1)
+per dim: exact spatial doubling), applied INSIDE the deconv op via its
+``(lo, hi)`` padding.
 """
 
 from __future__ import annotations
@@ -22,12 +24,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import conv_nd, deconv_nd, networks, uniform_conv_method
+from repro.core import networks
+from repro.core.engine import UniformEngine, as_engine
 from repro.models import layers as L
 from repro.sharding.partition import constrain
 
+# The models' historical default lowering (the TPU-native polyphase IOM).
+DEFAULT_METHOD = "iom_phase"
 
-def _scaled_layers(cfg: ModelConfig) -> list[networks.DeconvLayer]:
+
+def _engine(engine) -> UniformEngine:
+    return as_engine(engine, default_method=DEFAULT_METHOD)
+
+
+def _scaled_layers(cfg: ModelConfig) -> list[networks.UniformLayer]:
     layers = networks.benchmark_layers(cfg.dcnn)
     if not cfg.dcnn_reduced:
         return layers
@@ -64,8 +74,9 @@ def init_generator(cfg: ModelConfig, key):
     return params
 
 
-def generator_forward(params, cfg: ModelConfig, z, method: str = "iom_phase"):
+def generator_forward(params, cfg: ModelConfig, z, engine=None):
     """z [B, dz] -> image/volume [B, *spatial, C_out] in (-1, 1)."""
+    engine = _engine(engine)
     layers = _scaled_layers(cfg)
     first = layers[0]
     h = jnp.einsum("bz,zp->bp", z, params["proj"].astype(z.dtype))
@@ -76,8 +87,7 @@ def generator_forward(params, cfg: ModelConfig, z, method: str = "iom_phase"):
     for i, l in enumerate(layers):
         p = params["deconvs"][i]
         # crop (0,1) — exact doubling — applied inside the op
-        h = deconv_nd(h, p["w"].astype(h.dtype), l.stride, l.crop,
-                      method=method)
+        h = engine.deconv(h, p["w"].astype(h.dtype), l.stride, l.padding)
         h = h.astype(z.dtype) + p["b"].astype(z.dtype)
         h = jnp.tanh(h) if i == len(layers) - 1 else jax.nn.relu(h)
         h = constrain(h, "batch", sp0, *([None] * l.rank))
@@ -102,16 +112,15 @@ def init_discriminator(cfg: ModelConfig, key):
                                  scale=0.02)}
 
 
-def discriminator_forward(params, cfg: ModelConfig, x,
-                          method: str = "iom_phase"):
-    """Strided-conv stack on the uniform engine (``method="pallas"`` runs
-    every conv on the same Pallas grid as the generator's deconvs)."""
+def discriminator_forward(params, cfg: ModelConfig, x, engine=None):
+    """Strided-conv stack on the uniform engine (a ``method="pallas"``
+    engine runs every conv on the same Pallas grid as the generator's
+    deconvs)."""
+    engine = _engine(engine)
     rank = x.ndim - 2
-    conv_method = uniform_conv_method(method)
     h = x
     for c in params["convs"]:
-        h = conv_nd(h, c["w"].astype(h.dtype), 2, 1, method=conv_method,
-                    preferred_element_type=jnp.float32).astype(x.dtype)
+        h = engine.conv(h, c["w"].astype(h.dtype), 2, 1).astype(x.dtype)
         h = jax.nn.leaky_relu(h, 0.2)
         h = constrain(h, "batch", *([None] * (rank + 1)))
     h = jnp.mean(h, axis=tuple(range(1, rank + 1)))       # GAP
@@ -158,20 +167,19 @@ def init_vnet(cfg: ModelConfig, key):
     return {"enc": enc, "dec": dec, "head": head}
 
 
-def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
+def vnet_forward(params, cfg: ModelConfig, vol, engine=None):
     """vol [B, H, W, D, 1] -> logits [B, H, W, D, 2].
 
     Encoder convs, decoder deconvs, skip-merge convs and the 1x1x1 head all
-    dispatch through the uniform engine (``method="pallas"`` keeps the
-    whole forward on the Pallas grid)."""
-    conv_method = uniform_conv_method(method)
+    dispatch through ONE configured engine (a ``method="pallas"`` engine
+    keeps the whole forward on the Pallas grid)."""
+    engine = _engine(engine)
     h = vol
     skips = []
     for i, c in enumerate(params["enc"]):
         stride = (1,) * 3 if i == 0 else (2,) * 3
-        h = conv_nd(h, c["w"].astype(h.dtype), stride, 1,
-                    method=conv_method,
-                    preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = engine.conv(h, c["w"].astype(h.dtype), stride,
+                        1).astype(vol.dtype)
         h = jax.nn.relu(h)
         h = constrain(h, "batch", None, None, None, None)
         skips.append(h)
@@ -179,8 +187,7 @@ def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
     for c, skip in zip(params["dec"], reversed(skips)):
         # crop (0,1) — exact doubling — inside the op; the slice guard only
         # engages for odd-sized skips
-        h = deconv_nd(h, c["up_w"].astype(h.dtype), 2, ((0, 1),) * 3,
-                      method=method)
+        h = engine.deconv(h, c["up_w"].astype(h.dtype), 2, ((0, 1),) * 3)
         if h.shape[1:-1] != skip.shape[1:-1]:
             idx = (slice(None),) + tuple(slice(0, s)
                                          for s in skip.shape[1:-1]) \
@@ -188,14 +195,11 @@ def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
             h = h[idx]
         h = jax.nn.relu(h.astype(vol.dtype))
         h = jnp.concatenate([h, skip], axis=-1)
-        h = conv_nd(h, c["merge_w"].astype(h.dtype), 1, 1,
-                    method=conv_method,
-                    preferred_element_type=jnp.float32).astype(vol.dtype)
+        h = engine.conv(h, c["merge_w"].astype(h.dtype), 1,
+                        1).astype(vol.dtype)
         h = jax.nn.relu(h)
         h = constrain(h, "batch", None, None, None, None)
-    logits = conv_nd(h, params["head"].astype(h.dtype), 1, 0,
-                     method=conv_method,
-                     preferred_element_type=jnp.float32)
+    logits = engine.conv(h, params["head"].astype(h.dtype), 1, 0)
     return logits
 
 
@@ -204,14 +208,15 @@ def vnet_forward(params, cfg: ModelConfig, vol, method: str = "iom_phase"):
 # ---------------------------------------------------------------------------
 
 def gan_losses(gen_params, disc_params, cfg: ModelConfig, z, real,
-               method: str = "iom_phase"):
+               engine=None):
     """Non-saturating GAN losses (generator & discriminator).
 
-    ``method`` drives BOTH halves: the generator's deconvs and the
-    discriminator's convs share the uniform engine."""
-    fake = generator_forward(gen_params, cfg, z, method)
-    d_fake = discriminator_forward(disc_params, cfg, fake, method)
-    d_real = discriminator_forward(disc_params, cfg, real, method)
+    One engine drives BOTH halves: the generator's deconvs and the
+    discriminator's convs share its configuration and plan cache."""
+    engine = _engine(engine)
+    fake = generator_forward(gen_params, cfg, z, engine)
+    d_fake = discriminator_forward(disc_params, cfg, fake, engine)
+    d_real = discriminator_forward(disc_params, cfg, real, engine)
 
     def bce(logit, target):
         return jnp.mean(jnp.maximum(logit, 0) - logit * target

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.core.jaxpr_utils import count_prims as _count_prims
 from repro.core.jaxpr_utils import pallas_eqns as _pallas_eqns
 from repro.core import conv_nd, conv_output_shape
-from repro.core.tiling import plan_conv_tiles
+from repro.core.tiling import plan_uniform_tiles
 from repro.kernels.conv import conv, conv_reference
 from repro.kernels.conv.kernel import vmem_bytes as conv_vmem_bytes
 from repro.kernels.conv.ref import conv_loop_oracle
@@ -104,8 +104,8 @@ def test_conv_multitile_is_single_pallas_call(rng):
     ONE pallas_call with no stitching, and matches the oracle."""
     x = jnp.asarray(rng.randn(1, 33, 8, 3), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 3, 5), jnp.float32)
-    plan = plan_conv_tiles((35, 1, 10), (3, 1, 3), (2, 1, 2), 3, 5,
-                           vmem_budget=4 * 1024)
+    plan = plan_uniform_tiles((35, 1, 10), (3, 1, 3), (2, 1, 2), 3, 5,
+                              mode="conv", vmem_budget=4 * 1024)
     assert plan.n_dtiles > 1
     got = conv(x, w, 2, 1, max_tile_bytes=4 * 1024)
     np.testing.assert_allclose(np.asarray(got),
@@ -159,9 +159,9 @@ def test_conv_matmuls_are_tap_batched(rng, rank, K, S):
     assert dots == math.prod(S), (dots, math.prod(S), math.prod(K))
 
 
-def test_plan_conv_tiles_respects_budget():
-    plan = plan_conv_tiles((66, 16, 16), (3, 3, 3), (2, 2, 2), 128, 256,
-                           vmem_budget=1 << 20)
+def test_plan_conv_mode_respects_budget():
+    plan = plan_uniform_tiles((66, 16, 16), (3, 3, 3), (2, 2, 2), 128, 256,
+                              mode="conv", vmem_budget=1 << 20)
     assert plan.step_vmem_bytes <= 1 << 20 or (
         plan.dtile == 1 and plan.block_ci == 8 and plan.block_co == 8)
     out_sp = conv_output_shape((66, 16, 16), 3, 2)
@@ -171,8 +171,9 @@ def test_plan_conv_tiles_respects_budget():
                            dtile=plan.dtile) <= plan.step_vmem_bytes
     # the training plan budgets max(fwd, dx-as-deconv, dw) — it may choose
     # SMALLER blocks than the forward plan, but must still meet the budget
-    train = plan_conv_tiles((66, 16, 16), (3, 3, 3), (2, 2, 2), 128, 256,
-                            vmem_budget=1 << 20, backward=True)
+    train = plan_uniform_tiles((66, 16, 16), (3, 3, 3), (2, 2, 2), 128, 256,
+                               mode="conv", vmem_budget=1 << 20,
+                               backward=True)
     assert train.step_vmem_bytes <= 1 << 20 or (
         train.dtile == 1 and train.block_ci == 8 and train.block_co == 8)
     assert train.n_dtiles * train.dtile >= out_sp[0] + 1

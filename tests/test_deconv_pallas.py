@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.jaxpr_utils import count_prims as _count_prims
 from repro.core.jaxpr_utils import pallas_eqns as _pallas_eqns
-from repro.core.tiling import plan_deconv_tiles
+from repro.core.tiling import plan_uniform_tiles
 from repro.kernels.deconv import deconv, deconv_reference
 from repro.kernels.deconv import ops as deconv_ops
 from repro.kernels.deconv.kernel import vmem_bytes
@@ -73,7 +73,7 @@ def test_fused_multitile_3d(rng):
     in-kernel halo overlap-add must reproduce the oracle exactly."""
     x = jnp.asarray(rng.randn(1, 16, 8, 8, 4), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 3, 4, 4), jnp.float32)
-    plan = plan_deconv_tiles((16, 8, 8), (3, 3, 3), (2, 2, 2), 4, 4,
+    plan = plan_uniform_tiles((16, 8, 8), (3, 3, 3), (2, 2, 2), 4, 4,
                              vmem_budget=64 * 1024)
     assert plan.n_dtiles > 1
     ref = deconv_reference(x, w, 2, 1)
@@ -87,7 +87,7 @@ def test_fused_multitile_2d(rng):
     the grid tiles — the multi-tile path engages for 2D too."""
     x = jnp.asarray(rng.randn(1, 32, 8, 3), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 3, 5), jnp.float32)
-    plan = plan_deconv_tiles((32, 1, 8), (3, 1, 3), (2, 1, 2), 3, 5,
+    plan = plan_uniform_tiles((32, 1, 8), (3, 1, 3), (2, 1, 2), 3, 5,
                              vmem_budget=16 * 1024)
     assert plan.n_dtiles > 1
     got = deconv(x, w, 2, 0, max_tile_bytes=16 * 1024)
@@ -164,19 +164,23 @@ def test_split_is_single_pallas_call(rng):
 
 
 def test_planner_respects_budget_and_explicit_blocks():
-    plan = plan_deconv_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
+    plan = plan_uniform_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
                              vmem_budget=1 << 20)
     assert plan.step_vmem_bytes <= 1 << 20 or (
         plan.dtile == 1 and plan.block_ci == 8 and plan.block_co == 8)
     assert plan.n_dtiles * plan.dtile >= 64 + 1   # covers data + halo slack
-    pinned = plan_deconv_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
+    pinned = plan_uniform_tiles((64, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
                                vmem_budget=1 << 20, block_ci=32, block_co=16)
     assert (pinned.block_ci, pinned.block_co) == (32, 16)
 
 
 def test_block_choice_respects_vmem():
-    bci, bco = deconv_ops.choose_blocks((16, 16, 16), (3, 3, 3), (2, 2, 2),
-                                        256, 256, vmem_budget=4 << 20)
+    """The old choose_blocks behaviour (channels-only shrink) is the
+    planner's allow_split=False mode — one entry point, one VMEM model."""
+    plan = plan_uniform_tiles((16, 16, 16), (3, 3, 3), (2, 2, 2), 256, 256,
+                              vmem_budget=4 << 20, allow_split=False)
+    bci, bco = plan.block_ci, plan.block_co
+    assert plan.n_dtiles == 1
     assert vmem_bytes((16, 16, 16), (3, 3, 3), (2, 2, 2), bci, bco) <= 4 << 20
     assert bci >= 8 and bco >= 8
 

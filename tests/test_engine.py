@@ -1,0 +1,316 @@
+"""The configured-engine API: EngineConfig/UniformEngine, the
+geometry-keyed plan cache (planner runs once per layer geometry, not per
+call or retrace; engines with different budgets don't share entries), the
+compat front-ends' shared Pallas-knob filter, and compile_network — the
+acceptance criteria: DCGAN and a V-Net chain compiled onto one engine run
+forward with zero ``conv_general_dilated`` equations, numerics matching
+the XLA engine to 1e-4, and a schedule report listing one cached plan per
+layer."""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    EngineConfig,
+    UniformEngine,
+    compile_network,
+    conv_nd,
+    deconv_nd,
+    default_engine,
+    init_network_weights,
+    networks,
+)
+from repro.core import tiling
+from repro.core.jaxpr_utils import count_prims, pallas_eqns
+from repro.kernels.conv import conv
+from repro.kernels.deconv import deconv, deconv_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _spy_planner(monkeypatch):
+    calls = []
+    real = tiling.plan_uniform_tiles
+
+    def spy(*a, **k):
+        calls.append((a, tuple(sorted(k.items()))))
+        return real(*a, **k)
+
+    monkeypatch.setattr(tiling, "plan_uniform_tiles", spy)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# The plan cache
+# ---------------------------------------------------------------------------
+
+def test_planner_runs_once_per_geometry(rng, monkeypatch):
+    """plan_uniform_tiles is invoked at most once per unique layer geometry
+    across repeated engine.conv/engine.deconv calls AND jit retraces."""
+    calls = _spy_planner(monkeypatch)
+    eng = UniformEngine(method="pallas")
+    x = jnp.asarray(rng.randn(1, 6, 6, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 4, 4), jnp.float32)
+
+    eng.deconv(x, w, 2, 1)
+    eng.deconv(x, w, 2, 1)                       # repeated call
+    jax.jit(lambda x, w: eng.deconv(x, w, 2, 1))(x, w)
+    jax.jit(lambda x, w: eng.deconv(x, w, 2, 1))(x, w)   # fresh jit: retrace
+    assert len(calls) == 1, calls
+
+    # batch size is not part of the layer geometry: a retrace at a new
+    # batch reuses the plan
+    xb = jnp.asarray(rng.randn(3, 6, 6, 4), jnp.float32)
+    eng.deconv(xb, w, 2, 1)
+    assert len(calls) == 1, calls
+
+    # the conv direction is its own geometry (one more planner run)...
+    eng.conv(x, w, 2, 1)
+    eng.conv(x, w, 2, 1)
+    assert len(calls) == 2, calls
+
+    # ...and the training plan one more (backward=True keys separately),
+    # however many times we re-take gradients
+    jax.grad(lambda w: jnp.sum(eng.deconv(x, w, 2, 1)))(w)
+    jax.grad(lambda w: jnp.sum(eng.deconv(x, w, 2, 1)))(w)
+    assert len(calls) == 3, calls
+
+    # a genuinely new geometry plans exactly once more
+    x2 = jnp.asarray(rng.randn(1, 9, 9, 4), jnp.float32)
+    eng.deconv(x2, w, 2, 1)
+    assert len(calls) == 4, calls
+    assert len(eng.plan_cache) == 4
+
+
+def test_engines_with_different_budgets_do_not_share_plans(rng, monkeypatch):
+    calls = _spy_planner(monkeypatch)
+    e_big = UniformEngine(method="pallas")
+    e_small = UniformEngine(method="pallas", max_tile_bytes=16 * 1024)
+    x = jnp.asarray(rng.randn(1, 32, 8, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 5), jnp.float32)
+
+    y_big = e_big.deconv(x, w, 2, 0)
+    y_small = e_small.deconv(x, w, 2, 0)         # same geometry, new engine
+    assert len(calls) == 2, calls                # each engine planned once
+    np.testing.assert_allclose(np.asarray(y_big), np.asarray(y_small),
+                               rtol=1e-4, atol=1e-4)
+
+    (p_big,), (p_small,) = (e_big.plan_cache.values(),
+                            e_small.plan_cache.values())
+    assert p_big.n_dtiles == 1                   # fits the default budget
+    assert p_small.n_dtiles > 1                  # the small budget splits
+    assert p_big.vmem_budget != p_small.vmem_budget
+
+
+def test_compat_wrappers_share_one_default_engine_per_config(rng):
+    """deconv()/conv() tuning kwargs resolve to memoized default engines,
+    so repeated calls reuse one plan cache instead of re-planning."""
+    eng = default_engine(method="pallas")
+    before = len(eng.plan_cache)
+    x = jnp.asarray(rng.randn(1, 7, 7, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4), jnp.float32)
+    deconv(x, w, 2, 0)
+    conv(x, w, 2, 1)
+    grown = len(eng.plan_cache) - before
+    assert grown == 2                            # both ops landed in ONE cache
+    assert default_engine(method="pallas") is eng
+
+
+# ---------------------------------------------------------------------------
+# Configuration surface
+# ---------------------------------------------------------------------------
+
+def test_engine_config_validates_method():
+    with pytest.raises(ValueError, match="bogus"):
+        UniformEngine(method="bogus")
+    assert UniformEngine("pallas").config.method == "pallas"
+    cfg = EngineConfig(method="pallas", preferred_element_type=jnp.float32)
+    assert cfg.preferred_element_type == jnp.dtype(jnp.float32)
+    assert cfg.conv_method == "pallas"
+    assert EngineConfig(method="iom_phase").conv_method == "xla"
+
+
+def test_unknown_kwargs_name_the_method(rng):
+    """The shared Pallas-knob filter: knobs are dropped for XLA methods,
+    anything else errors naming the offending front-end's method."""
+    x = jnp.asarray(rng.randn(1, 5, 5, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4), jnp.float32)
+    # knobs silently dropped on the XLA engines (method toggling stays easy)
+    deconv_nd(x, w, 2, 0, method="iom_phase", block_ci=8,
+              max_tile_bytes=123)
+    conv_nd(x, w, 2, 1, method="xla", interpret=True)
+    with pytest.raises(ValueError, match="iom_phase"):
+        deconv_nd(x, w, 2, 0, method="iom_phase", bogus_knob=1)
+    with pytest.raises(ValueError, match="pallas"):
+        conv_nd(x, w, 2, 1, method="pallas", bogus_knob=1)
+
+
+def test_explicit_engine_excludes_per_call_knobs(rng):
+    x = jnp.asarray(rng.randn(1, 5, 5, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4), jnp.float32)
+    eng = UniformEngine(method="pallas")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        deconv(x, w, 2, 0, engine=eng, block_ci=8)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        conv(x, w, 2, 1, engine=eng, max_tile_bytes=1 << 16)
+
+
+def test_uniform_layer_validates_op():
+    with pytest.raises(ValueError, match="transposed"):
+        networks.UniformLayer(name="l", in_spatial=(4, 4), cin=2, cout=2,
+                              kernel=(3, 3), stride=(2, 2), padding=1,
+                              op="transposed")
+
+
+def test_xla_conv_accumulates_f32_for_bf16(rng):
+    """Both engine directions share one precision contract: with no
+    preferred_element_type configured, bf16 inputs accumulate in f32 (the
+    XLA conv path must not silently accumulate in bf16) and emit bf16."""
+    x = jnp.asarray(rng.randn(1, 8, 8, 16), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(3, 3, 16, 8) * 0.2, jnp.bfloat16)
+    xla = UniformEngine(method="xla")
+    pallas = UniformEngine(method="pallas")
+    y = xla.conv(x, w, 2, 1)
+    assert y.dtype == jnp.bfloat16                # output dtype preserved
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(pallas.conv(x, w, 2, 1),
+                                              np.float32),
+        rtol=3e-2, atol=3e-2)
+    # an explicit precision still wins
+    assert UniformEngine(
+        method="xla",
+        preferred_element_type=jnp.float32).conv(x, w, 2, 1).dtype \
+        == jnp.float32
+
+
+def test_engine_config_drives_the_op(rng):
+    """No per-call kwargs needed: the config's budget forces the multi-tile
+    grid and its precision sets the output dtype."""
+    x = jnp.asarray(rng.randn(1, 16, 8, 8, 4), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(3, 3, 3, 4, 4) * 0.2, jnp.bfloat16)
+    eng = UniformEngine(method="pallas", max_tile_bytes=64 * 1024,
+                        preferred_element_type=jnp.float32)
+    y = eng.deconv(x, w, 2, 1)
+    assert y.dtype == jnp.float32
+    (plan,) = eng.plan_cache.values()
+    assert plan.n_dtiles > 1
+    ref = deconv_reference(x.astype(jnp.float32), w.astype(jnp.float32),
+                           2, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# compile_network — the acceptance criteria
+# ---------------------------------------------------------------------------
+
+def _reduced(layers, div=64):
+    out = []
+    for l in layers:
+        cin = max(4, l.cin // div)
+        cout = l.cout if l.cout <= 4 else max(4, l.cout // div)
+        out.append(dc.replace(l, cin=cin, cout=cout))
+    # re-chain the channel counts (cout of i feeds cin of i+1)
+    for i in range(1, len(out)):
+        out[i] = dc.replace(out[i], cin=out[i - 1].cout)
+    return out
+
+
+def test_compile_network_dcgan_schedule_and_structure():
+    """compile_network(networks.dcgan(), UniformEngine(method='pallas')):
+    full-size schedule, one cached plan per layer, and a traced forward
+    with zero conv_general_dilated equations."""
+    layers = networks.dcgan()
+    eng = UniformEngine(method="pallas")
+    apply_fn, report = compile_network(layers, eng)
+    assert len(report.layers) == 4
+    assert report.unique_plans == 4              # one cached plan per layer
+    assert len(eng.plan_cache) == 4
+    for row, lay in zip(report.layers, layers):
+        assert row.plan.step_vmem_bytes <= eng.config.vmem_budget
+        assert row.mxu_per_step == 4             # 2D stride 2: S^2 dispatches
+        assert row.sparsity > 0.5                # zeros the engine skips
+        assert row.out_spatial == lay.out_spatial
+    assert "dcgan.deconv1" in report.describe()
+
+    ws = [jnp.zeros((*l.kernel, l.cin, l.cout), jnp.float32) for l in layers]
+    x = jnp.zeros((1, *layers[0].in_spatial, layers[0].cin), jnp.float32)
+    jaxpr = jax.make_jaxpr(apply_fn)(ws, x)
+    counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
+    assert counts.get("conv_general_dilated", 0) == 0, counts
+    assert counts.get("pallas_call") == 4, counts
+    assert len(eng.plan_cache) == 4              # tracing didn't re-plan
+
+
+def test_compile_network_vnet_chain_structure():
+    """The V-Net equivalent: encoder convs + decoder deconvs chain as ONE
+    uniform schedule; every layer is a pallas_call, zero XLA convs."""
+    layers = networks.vnet_encoder() + networks.vnet_decoder()
+    eng = UniformEngine(method="pallas")
+    apply_fn, report = compile_network(layers, eng)
+    assert [r.op for r in report.layers] == ["conv"] * 5 + ["deconv"] * 4
+    assert report.unique_plans == 9
+    ws = [jnp.zeros((*l.kernel, l.cin, l.cout), jnp.float32) for l in layers]
+    x = jnp.zeros((1, *layers[0].in_spatial, layers[0].cin), jnp.float32)
+    jaxpr = jax.make_jaxpr(apply_fn)(ws, x)
+    counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
+    assert counts.get("conv_general_dilated", 0) == 0, counts
+    assert counts.get("pallas_call") == 9, counts
+
+
+def test_compile_network_numerics_match_xla_engine(rng):
+    """Reduced-channel DCGAN + V-Net-style chains EXECUTE on both engines
+    with numerics agreeing to the acceptance tolerance (1e-4)."""
+    small_vnet = (networks.conv_stack("vnet", (8, 8, 8),
+                                     [(1, 4), (4, 8), (8, 16)])
+                  + [networks.UniformLayer(
+                      name=f"vnet.up{i + 1}", in_spatial=sp, cin=ci, cout=co,
+                      kernel=(3,) * 3, stride=(2,) * 3,
+                      padding=((0, 1),) * 3, op="deconv")
+                     for i, (sp, ci, co) in enumerate(
+                         [((2, 2, 2), 16, 8), ((4, 4, 4), 8, 4)])])
+    for layers in (_reduced(networks.dcgan()), small_vnet):
+        pallas_fn, report = compile_network(layers,
+                                            UniformEngine(method="pallas"))
+        xla_fn, _ = compile_network(layers, UniformEngine(method="xla"))
+        ws = init_network_weights(layers, KEY)
+        x = jnp.asarray(
+            rng.randn(2, *layers[0].in_spatial, layers[0].cin) * 0.3,
+            jnp.float32)
+        got = jax.jit(pallas_fn)(ws, x)
+        ref = xla_fn(ws, x)
+        assert got.shape == ref.shape
+        assert got.shape[1:-1] == (*layers[-1].out_spatial,)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        assert report.unique_plans == len(layers)
+
+
+def test_compile_network_rejects_broken_chains():
+    layers = networks.dcgan()
+    broken = [layers[0], dc.replace(layers[2], cin=7)]
+    with pytest.raises(ValueError, match="chain breaks"):
+        compile_network(broken, UniformEngine(method="xla"))
+
+
+def test_schedule_report_dispatches_match_traced_kernel(rng):
+    """The report's MXU accounting is the kernel's reality: per-step
+    dispatch count equals the dot_generals in the traced kernel body."""
+    layers = networks.deconv_stack("t", 2, 4, [4, 6])
+    apply_fn, report = compile_network(layers, UniformEngine(method="pallas"))
+    ws = init_network_weights(layers, KEY)
+    x = jnp.asarray(rng.randn(1, 4, 4, 4), jnp.float32)
+    jaxpr = jax.make_jaxpr(apply_fn)(ws, x)
+    (call,) = pallas_eqns(jaxpr.jaxpr)
+    dots = count_prims(call.params["jaxpr"], {}).get("dot_general", 0)
+    assert dots == report.layers[0].mxu_per_step == 4
+    assert report.layers[0].mxu_dispatches == (
+        report.layers[0].grid_steps * dots)
+    js = report.to_json()
+    assert js["layers"][0]["mxu_per_step"] == 4
+    assert js["unique_plans"] == 1

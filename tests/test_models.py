@@ -104,14 +104,14 @@ def test_dcnn_smoke(arch):
     if cfg.dcnn == "v_net":
         params, _ = split_params(D.init_vnet(cfg, KEY))
         vol = jnp.full((2, *D._vnet_spatial(cfg), 1), 0.1, jnp.float32)
-        logits = D.vnet_forward(params, cfg, vol, method="pallas")
+        logits = D.vnet_forward(params, cfg, vol, engine="pallas")
         assert logits.shape == (2, *D._vnet_spatial(cfg), 2)
         assert np.isfinite(np.asarray(logits)).all()
     else:
         gp, _ = split_params(D.init_generator(cfg, KEY))
         z = jax.random.normal(KEY, (2, cfg.dcnn_z))
         for method in ("iom_phase", "pallas"):
-            img = D.generator_forward(gp, cfg, z, method=method)
+            img = D.generator_forward(gp, cfg, z, engine=method)
             assert np.isfinite(np.asarray(img)).all()
             assert np.abs(np.asarray(img)).max() <= 1.0 + 1e-6
 
@@ -120,7 +120,7 @@ def test_dcnn_generator_methods_agree():
     cfg = get_config("dcgan").reduced()
     gp, _ = split_params(D.init_generator(cfg, KEY))
     z = jax.random.normal(KEY, (2, cfg.dcnn_z))
-    imgs = {m: np.asarray(D.generator_forward(gp, cfg, z, method=m))
+    imgs = {m: np.asarray(D.generator_forward(gp, cfg, z, engine=m))
             for m in ("oom", "xla", "iom", "iom_phase", "pallas")}
     base = imgs["oom"]
     for m, im in imgs.items():

@@ -32,7 +32,7 @@ def test_dcgan_gan_training_improves(tmp_path):
                        (*layers[-1].out_spatial, layers[-1].cout),
                        prefetch=False)
 
-    step = jax.jit(ST.make_gan_train_step(cfg, opt, method="iom_phase"))
+    step = jax.jit(ST.make_gan_train_step(cfg, opt, engine="iom_phase"))
     z0 = jnp.zeros((2, cfg.dcnn_z))
     img0 = np.asarray(D.generator_forward(params["gen"], cfg, z0))
     g_losses = []
@@ -50,7 +50,7 @@ def test_vnet_training_reduces_loss():
     params, _ = ST.real_params(cfg, KEY)
     opt_state = adamw_init(params, opt)
     data = VolumeBatches(2, D._vnet_spatial(cfg), prefetch=False)
-    step = jax.jit(ST.make_vnet_train_step(cfg, opt, method="iom_phase"))
+    step = jax.jit(ST.make_vnet_train_step(cfg, opt, engine="iom_phase"))
     losses = []
     batch = data.make_batch(0)
     for i in range(12):
@@ -125,7 +125,7 @@ def test_generator_iom_equals_oom_full_model():
     cfg = get_config("gan3d").reduced()
     params, _ = ST.real_params(cfg, KEY)
     z = jax.random.normal(KEY, (2, cfg.dcnn_z))
-    a = np.asarray(D.generator_forward(params["gen"], cfg, z, method="oom"))
+    a = np.asarray(D.generator_forward(params["gen"], cfg, z, engine="oom"))
     b = np.asarray(D.generator_forward(params["gen"], cfg, z,
-                                       method="pallas"))
+                                       engine="pallas"))
     np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

@@ -1,8 +1,9 @@
-"""Whole networks on ONE engine — the PR's acceptance criteria made
+"""Whole networks on ONE configured engine — the acceptance criteria made
 structural: a jitted DCGAN GAN-loss train step and a V-Net forward
-(reduced configs, interpret mode) execute every convolution AND
-deconvolution via ``pallas_call``, with zero ``conv_general_dilated``
-equations anywhere in the traced jaxpr."""
+(reduced configs, interpret mode) built from a ``UniformEngine`` execute
+every convolution AND deconvolution via ``pallas_call``, with zero
+``conv_general_dilated`` equations anywhere in the traced jaxpr — and no
+method strings threading through the model code."""
 
 import numpy as np
 
@@ -10,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.engine import UniformEngine
 from repro.core.jaxpr_utils import count_prims
 from repro.launch import steps as ST
 from repro.models import dcnn as D
@@ -39,7 +41,8 @@ def test_gan_step_all_convs_on_pallas():
     generator deconvs, discriminator convs and all their cotangents are
     pallas_calls — no conv_general_dilated anywhere."""
     cfg, params, opt, opt_state, batch = _gan_fixtures()
-    step = ST.make_gan_train_step(cfg, opt, method="pallas")
+    step = ST.make_gan_train_step(cfg, opt,
+                                  engine=UniformEngine(method="pallas"))
 
     jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
     counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
@@ -61,7 +64,7 @@ def test_gan_step_xla_method_unchanged():
     """Non-pallas methods keep the XLA conv baseline (the engine dispatch
     must not silently reroute them)."""
     cfg, params, opt, opt_state, batch = _gan_fixtures()
-    step = ST.make_gan_train_step(cfg, opt, method="iom_phase")
+    step = ST.make_gan_train_step(cfg, opt, engine="iom_phase")
     jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
     counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
     assert counts.get("conv_general_dilated", 0) > 0, counts
@@ -77,14 +80,14 @@ def test_vnet_forward_all_convs_on_pallas():
     vol = jnp.full((1, *D._vnet_spatial(cfg), 1), 0.1, jnp.float32)
 
     jaxpr = jax.make_jaxpr(
-        lambda p, v: D.vnet_forward(p, cfg, v, method="pallas"))(params, vol)
+        lambda p, v: D.vnet_forward(p, cfg, v, engine="pallas"))(params, vol)
     counts = count_prims(jaxpr.jaxpr, {}, into_pallas=False)
     assert counts.get("conv_general_dilated", 0) == 0, counts
     assert counts.get("dot_general", 0) == 0, counts
     assert counts.get("pallas_call") == 14, counts
 
     logits = jax.jit(
-        lambda p, v: D.vnet_forward(p, cfg, v, method="pallas"))(params, vol)
+        lambda p, v: D.vnet_forward(p, cfg, v, engine="pallas"))(params, vol)
     assert logits.shape == (1, *D._vnet_spatial(cfg), 2)
     assert np.isfinite(np.asarray(logits)).all()
 
@@ -96,8 +99,8 @@ def test_vnet_pallas_matches_xla_method():
     rng = np.random.RandomState(0)
     vol = jnp.asarray(rng.randn(1, *D._vnet_spatial(cfg), 1) * 0.1,
                       jnp.float32)
-    ref = D.vnet_forward(params, cfg, vol, method="iom_phase")
-    got = D.vnet_forward(params, cfg, vol, method="pallas")
+    ref = D.vnet_forward(params, cfg, vol, engine="iom_phase")
+    got = D.vnet_forward(params, cfg, vol, engine="pallas")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-3, atol=1e-3)
 
@@ -109,7 +112,7 @@ def test_discriminator_pallas_matches_xla():
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(2, *layers[-1].out_spatial, layers[-1].cout),
                     jnp.float32)
-    ref = D.discriminator_forward(params, cfg, x, method="iom_phase")
-    got = D.discriminator_forward(params, cfg, x, method="pallas")
+    ref = D.discriminator_forward(params, cfg, x, engine="iom_phase")
+    got = D.discriminator_forward(params, cfg, x, engine="pallas")
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-3, atol=1e-3)
