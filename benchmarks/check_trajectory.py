@@ -1,0 +1,103 @@
+"""Perf-trajectory gate: BENCH_kernel.json vs the committed baseline.
+
+CI used to rewrite ``BENCH_kernel.json`` on every run and remember nothing;
+this script gives the trajectory teeth.  It compares the key interpret-mode
+rows of a fresh bench run against ``BENCH_baseline.json`` (committed at the
+repo root) and fails on a >2x regression.
+
+Absolute wall times differ across machines, so the gate is on the
+machine-normalized ratio: each key ``*_pallas`` row is divided by its
+``*_xla`` sibling measured in the SAME run, and the gate trips when
+
+    (cur_pallas / cur_xla)  >  threshold * (base_pallas / base_xla)
+
+i.e. the Pallas engine got >2x slower *relative to the XLA engine on the
+same host*.  Missing rows fail outright (a silently dropped row is a
+regression too).  Absolute timings are printed for the human trajectory.
+
+    PYTHONPATH=src python benchmarks/check_trajectory.py \
+        [--current BENCH_kernel.json] [--baseline BENCH_baseline.json] \
+        [--threshold 2.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# the rows the trajectory is anchored on: the compiled whole-network
+# schedules and the heaviest single-kernel conv row
+KEY_PATTERNS = ("net_*_compiled_pallas", "conv_3d_s2_pallas")
+
+# rows under this baseline time are timer noise, not signal — report only
+MIN_GATED_US = 20.0
+
+
+def _rows(payload: dict) -> dict[str, float]:
+    return {r["name"]: float(r["us"]) for r in payload["rows"]}
+
+
+def check(current: dict, baseline: dict, threshold: float) -> list[str]:
+    """Returns a list of failure messages (empty = gate passes)."""
+    cur, base = _rows(current), _rows(baseline)
+    failures = []
+    gated = sorted(
+        name for name in base
+        if any(fnmatch.fnmatch(name, p) for p in KEY_PATTERNS))
+    if not gated:
+        return ["baseline contains no gated rows — regenerate "
+                "BENCH_baseline.json from benchmarks/kernel_bench.py"]
+    for name in gated:
+        if name not in cur:
+            failures.append(f"{name}: row missing from current bench")
+            continue
+        sibling = name.replace("_pallas", "_xla")
+        if sibling in cur and sibling in base:
+            cur_ratio = cur[name] / cur[sibling]
+            base_ratio = base[name] / base[sibling]
+            rel = cur_ratio / base_ratio
+            line = (f"{name:<32s} {base[name]:>9.1f}us -> {cur[name]:>9.1f}us"
+                    f"  vs_xla {base_ratio:5.2f} -> {cur_ratio:5.2f}"
+                    f"  (x{rel:.2f})")
+        else:
+            # no xla sibling: fall back to the absolute ratio
+            rel = cur[name] / max(base[name], 1e-9)
+            line = (f"{name:<32s} {base[name]:>9.1f}us -> {cur[name]:>9.1f}us"
+                    f"  (x{rel:.2f}, absolute)")
+        gate = base[name] >= MIN_GATED_US
+        print(("GATED " if gate else "info  ") + line)
+        if gate and rel > threshold:
+            failures.append(f"{name}: {rel:.2f}x slower than baseline "
+                            f"(threshold {threshold}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=str(ROOT / "BENCH_kernel.json"))
+    ap.add_argument("--baseline", default=str(ROOT / "BENCH_baseline.json"))
+    ap.add_argument("--threshold", type=float, default=2.0)
+    args = ap.parse_args()
+
+    current = json.loads(Path(args.current).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    print(f"trajectory: current jax {current.get('jax')} vs baseline jax "
+          f"{baseline.get('jax')} (threshold {args.threshold}x, "
+          f"relative-to-xla)")
+    failures = check(current, baseline, args.threshold)
+    if failures:
+        print("\nPERF TRAJECTORY GATE FAILED:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print("\nperf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    EngineConfig,
     UniformEngine,
     compile_network,
     conv_nd,
@@ -84,6 +85,7 @@ def run() -> list[str]:
     _conv_rows(rng, rec)
     _network_rows(rec)
     schedules = _compiled_rows(rng, rec)
+    schedules["dcgan_gen_sharded"] = _sharded_rows(rng, rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
     # (forward plan and the backward-budgeted training plan).  The lift
@@ -313,13 +315,13 @@ def _network_rows(rec) -> None:
             f"pallas{n_pl}_convgd{n_cg}")
 
 
-def _compiled_rows(rng, rec) -> dict:
-    """Compiled-schedule rows: ``compile_network`` over a reduced DCGAN
-    generator and a V-Net encoder+decoder chain, one configured engine per
-    method — timing plus the schedule report's dispatch counters (returned
-    for the JSON payload).  Parity vs the XLA engine asserted at 1e-4."""
-    key = jax.random.PRNGKey(0)
-    gen = networks.deconv_stack("dcgan", 2, 4, [32, 16, 8, 4, 3])
+def _bench_gen_chain():
+    """The bench's reduced DCGAN generator chain — shared by the compiled
+    rows and the sharded row so they stay the same network."""
+    return networks.deconv_stack("dcgan", 2, 4, [32, 16, 8, 4, 3])
+
+
+def _bench_vnet_chain():
     vnet = networks.conv_stack("vnet", (8, 8, 8),
                                [(1, 4), (4, 8), (8, 16)])
     sp = vnet[-1].out_spatial
@@ -329,9 +331,19 @@ def _compiled_rows(rng, rec) -> dict:
             kernel=(3,) * 3, stride=(2,) * 3, padding=((0, 1),) * 3,
             op="deconv"))
         sp = vnet[-1].out_spatial
+    return vnet
+
+
+def _compiled_rows(rng, rec) -> dict:
+    """Compiled-schedule rows: ``compile_network`` over a reduced DCGAN
+    generator and a V-Net encoder+decoder chain, one configured engine per
+    method — timing plus the schedule report's dispatch counters (returned
+    for the JSON payload).  Parity vs the XLA engine asserted at 1e-4."""
+    key = jax.random.PRNGKey(0)
 
     schedules = {}
-    for name, layers in (("dcgan_gen", gen), ("vnet", vnet)):
+    for name, layers in (("dcgan_gen", _bench_gen_chain()),
+                         ("vnet", _bench_vnet_chain())):
         ws = init_network_weights(layers, key)
         x = jnp.asarray(
             rng.randn(1, *layers[0].in_spatial, layers[0].cin) * 0.3,
@@ -356,6 +368,34 @@ def _compiled_rows(rng, rec) -> dict:
         np.testing.assert_allclose(outs["pallas"], outs["xla"],
                                    rtol=1e-4, atol=1e-4)
     return schedules
+
+
+def _sharded_rows(rng, rec) -> dict:
+    """Mesh-aware compiled schedule: the same reduced DCGAN generator chain
+    through a ``shard_map``-wrapped ``compile_network`` on the host mesh
+    (a (1, 1) mesh on single-device CI — still the full shard_map path;
+    more under ``--xla_force_host_platform_device_count``).  Parity vs the
+    unsharded engine asserted at 1e-4; the schedule (with its per-device
+    plans and collective accounting) lands in the JSON payload."""
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    dp = mesh.shape["data"]
+    gen = _bench_gen_chain()
+    ws = init_network_weights(gen, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.randn(dp, *gen[0].in_spatial, gen[0].cin) * 0.3,
+                    jnp.float32)
+    base_fn, _ = compile_network(gen, UniformEngine(method="pallas"))
+    sh_fn, report = compile_network(
+        gen, UniformEngine(EngineConfig(method="pallas", mesh=mesh)),
+        batch=dp)
+    f = jax.jit(sh_fn)
+    np.testing.assert_allclose(np.asarray(f(ws, x)),
+                               np.asarray(base_fn(ws, x)),
+                               rtol=1e-4, atol=1e-4)
+    rec("net_dcgan_gen_sharded_pallas", _time(f, ws, x),
+        f"dp{report.data_parallel}_coll{report.collective_bytes}B")
+    return report.to_json()
 
 
 def _write_json(recs, plans, schedules) -> None:

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    EngineConfig,
+    MeshPolicy,
     UniformEngine,
     compile_network,
     deconv_macs,
@@ -88,4 +90,40 @@ print(f"  conv   dL/dw shape={tuple(gc.shape)}  "
       f"|g|={float(jnp.abs(gc).max()):.3f}")
 print(f"  engine cache now holds {len(engine.plan_cache)} plans "
       f"(fwd + bwd per geometry)")
+
+print("\n=== scale it out: the same schedule on a device mesh ===")
+# Give the EngineConfig a mesh and compile_network emits a shard_map-wrapped
+# callable: batch shards over the "data" axis, channels optionally shard
+# Megatron-style over the "model" axis (Cout on one layer, Cin+psum on the
+# next), and the report's rows become PER-DEVICE — local tile plans,
+# per-device VMEM bytes, and the collective payloads the partition costs.
+# On one CPU this builds a (1, 1) mesh; run under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 to watch it scale.
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh()                            # (n_devices, 1)
+sharded = UniformEngine(EngineConfig(
+    method="pallas", mesh=mesh,
+    policy=MeshPolicy(batch_axis="data", model_axis="model")))
+dp = mesh.shape["data"]
+apply_s, report_s = compile_network(layers, sharded, batch=dp)
+zs = jnp.asarray(rng.randn(dp, 4, 4, 16), jnp.float32)
+out_s = jax.jit(apply_s)(ws, zs)
+ref_s = apply(ws, zs)                              # the unsharded engine
+err = np.abs(np.asarray(out_s) - np.asarray(ref_s)).max()
+print(f"  {dp}-way data parallel out={tuple(out_s.shape)}  "
+      f"max|err vs unsharded|={err:.2e}")
+print(f"  per-device batch={report_s.per_device_batch}  "
+      f"collective payload/fwd={report_s.collective_bytes}B")
+print("  " + report_s.describe().replace("\n", "\n  "))
+
+print("\n=== training scales the same way: the explicit dp trainer ===")
+# repro.launch.steps.make_dp_gan_train_step / make_dp_vnet_train_step wrap
+# the SAME engine in runtime.dp_trainer's shard_map layout: per-device
+# grads from the local batch shard, int8 gradient all-reduce with error
+# feedback (4x fewer wire bytes at equal converged loss), replicated AdamW.
+# See examples/train_dcgan.py --dp and examples/segment_vnet3d.py --dp.
+print(f"  host mesh {dict(mesh.shape)} ready; drivers: train_dcgan --dp, "
+      f"segment_vnet3d --dp")
+
 print("\nquickstart OK")

@@ -8,7 +8,11 @@ layer scheduled once by the engine's plan cache.
 
     PYTHONPATH=src python examples/train_dcgan.py --steps 200
 (use --full for the paper-size generator — slow on CPU; --method pallas
-runs every conv AND deconv on the Pallas engine)
+runs every conv AND deconv on the Pallas engine; --dp trains data-parallel
+over every host device via the shard_map trainer with int8-compressed
+gradient all-reduce — run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the mesh path on
+one machine)
 """
 
 import argparse
@@ -19,6 +23,7 @@ from repro.configs import get_config
 from repro.core.engine import UniformEngine
 from repro.data import DcnnBatches
 from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
 from repro.models import dcnn as D
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import Trainer, TrainLoopConfig
@@ -30,12 +35,19 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--method", default="iom_phase",
                     choices=["oom", "xla", "iom", "iom_phase", "pallas"])
+    ap.add_argument("--dp", action="store_true",
+                    help="explicit data-parallel trainer over the host mesh")
+    ap.add_argument("--no-dp-compress", action="store_true")
     ap.add_argument("--checkpoint-dir", default="checkpoints/dcgan")
     args = ap.parse_args()
 
     cfg = get_config("dcgan")
     if not args.full:
         cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    n_data = mesh.shape["data"]
+    if args.dp:
+        cfg = ST.round_batch_to_mesh(cfg, n_data)
     opt = AdamWConfig(lr=2e-4, b1=0.5, weight_decay=0.0)
     params, _ = ST.real_params(cfg, jax.random.PRNGKey(0))
     opt_state = (adamw_init(params["gen"], opt),
@@ -44,8 +56,21 @@ def main():
     data = DcnnBatches(cfg.dcnn_batch, cfg.dcnn_z,
                        (*layers[-1].out_spatial, layers[-1].cout))
     engine = UniformEngine(method=args.method)
-    step = jax.jit(ST.make_gan_train_step(cfg, opt, engine=engine),
-                   donate_argnums=(0, 1))
+    if args.dp:
+        dp_step = ST.make_dp_gan_train_step(
+            cfg, opt, mesh, engine=engine,
+            compress=not args.no_dp_compress)
+        step, err = ST.fold_dp_step(dp_step, n_data, params)
+        opt_state = (opt_state, err)
+        # the dp opt state carries the error-feedback residual: keep its
+        # checkpoints apart from non-dp runs (different tree structure)
+        args.checkpoint_dir += "-dp"
+        print(f"dp trainer: {n_data}-way data parallel, "
+              f"{'int8' if not args.no_dp_compress else 'f32'} all-reduce, "
+              f"global batch {cfg.dcnn_batch}")
+    else:
+        step = jax.jit(ST.make_gan_train_step(cfg, opt, engine=engine),
+                       donate_argnums=(0, 1))
     tr = Trainer(step, params, opt_state, data,
                  TrainLoopConfig(total_steps=args.steps,
                                  checkpoint_every=max(args.steps // 4, 1),

@@ -27,6 +27,7 @@ from repro.core.engine import (  # noqa: F401
     CONV_METHODS,
     EngineConfig,
     LayerSchedule,
+    MeshPolicy,
     ScheduleReport,
     UniformEngine,
     as_engine,

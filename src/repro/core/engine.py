@@ -44,6 +44,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import networks as _networks
 from repro.core import tiling as _tiling
@@ -92,6 +93,25 @@ def uniform_conv_method(deconv_method: str) -> str:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class MeshPolicy:
+    """How ``compile_network`` partitions a network over the engine's mesh.
+
+    ``batch_axis`` shards the batch dim of every activation (pure data
+    parallelism).  ``model_axis``, when set, additionally shards channels
+    Megatron-style: a layer whose ``Cout`` divides the axis computes a
+    channel shard of its output, the NEXT layer contracts its sharded
+    ``Cin`` and ``psum``s the partial outputs (pairs alternate down the
+    chain; a trailing channel-sharded output is ``all_gather``ed).  Layers
+    whose channels do not divide the axis — or would fall below
+    ``min_channel_block`` per device — stay replicated, exactly like real
+    tensor-parallel deployments replicate awkward layers.
+    """
+    batch_axis: str = "data"
+    model_axis: str | None = None
+    min_channel_block: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """The uniform engine's compile-time configuration.
 
@@ -102,6 +122,14 @@ class EngineConfig:
     ``max_tile_bytes`` overrides the planner's per-grid-step VMEM budget;
     ``block_ci``/``block_co`` pin the channel blocks; ``interpret`` forces
     Pallas interpret mode (None = auto: True off-TPU).
+
+    ``mesh`` (optional) makes the engine mesh-aware: ``compile_network``
+    then emits a ``shard_map``-wrapped callable partitioned per ``policy``
+    (batch over the data axis; optionally Cout/Cin over the model axis),
+    and its ``ScheduleReport`` carries per-device tile plans, per-device
+    VMEM bytes and collective byte counts.  ``engine.conv``/``engine.deconv``
+    called directly keep single-device semantics — the mesh only governs
+    compiled schedules.
     """
     method: str = "xla"
     preferred_element_type: Any = None
@@ -109,6 +137,8 @@ class EngineConfig:
     block_ci: int | None = None
     block_co: int | None = None
     interpret: bool | None = None
+    mesh: Mesh | None = None
+    policy: MeshPolicy = MeshPolicy()
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -117,6 +147,22 @@ class EngineConfig:
         if self.preferred_element_type is not None:
             object.__setattr__(self, "preferred_element_type",
                                jnp.dtype(self.preferred_element_type))
+        if self.policy.model_axis == self.policy.batch_axis:
+            raise ValueError(
+                f"model_axis and batch_axis are both "
+                f"{self.policy.batch_axis!r}: channel partials would psum "
+                f"across different batch shards")
+        if self.mesh is not None:
+            names = self.mesh.axis_names
+            if self.policy.batch_axis not in names:
+                raise ValueError(
+                    f"batch_axis {self.policy.batch_axis!r} not in mesh "
+                    f"axes {names}")
+            if (self.policy.model_axis is not None
+                    and self.policy.model_axis not in names):
+                raise ValueError(
+                    f"model_axis {self.policy.model_axis!r} not in mesh "
+                    f"axes {names}")
 
     @property
     def conv_method(self) -> str:
@@ -321,13 +367,29 @@ class LayerSchedule:
     mxu_dispatches: int                # total MXU dispatches (forward)
     vmem_bytes: int                    # modeled per-step working set
     sparsity: float                    # zeros an OOM engine would read
+    # mesh-aware accounting (equal to the globals on a single device): the
+    # plan/grid/vmem numbers above are PER-DEVICE — computed from the local
+    # channel blocks and per-device batch that one shard actually runs.
+    local_cin: int = 0
+    local_cout: int = 0
+    collective: str | None = None      # "psum" | "all_gather" | None
+    collective_bytes: int = 0          # per-device payload entering it
+
+    def __post_init__(self):
+        if not self.local_cin:
+            object.__setattr__(self, "local_cin", self.cin)
+        if not self.local_cout:
+            object.__setattr__(self, "local_cout", self.cout)
 
     def describe(self) -> str:
+        coll = (f" {self.collective}{self.collective_bytes}B"
+                if self.collective else "")
         return (f"{self.name:<18s} {self.op:<6s} "
                 f"{'x'.join(map(str, self.in_spatial)):>11s}x{self.cin:<4d}-> "
                 f"{'x'.join(map(str, self.out_spatial)):>11s}x{self.cout:<4d} "
                 f"{self.plan.describe():<28s} grid{self.grid_steps:>5d} "
-                f"mxu{self.mxu_dispatches:>6d} zeros{self.sparsity:.0%}")
+                f"mxu{self.mxu_dispatches:>6d} zeros{self.sparsity:.0%}"
+                f"{coll}")
 
     def to_json(self) -> dict:
         return {
@@ -335,21 +397,34 @@ class LayerSchedule:
             "in_spatial": list(self.in_spatial),
             "out_spatial": list(self.out_spatial),
             "cin": self.cin, "cout": self.cout,
+            "local_cin": self.local_cin, "local_cout": self.local_cout,
             "plan": self.plan.describe(),
             "grid_steps": self.grid_steps,
             "mxu_per_step": self.mxu_per_step,
             "mxu_dispatches": self.mxu_dispatches,
             "vmem_bytes": self.vmem_bytes,
             "sparsity": round(self.sparsity, 4),
+            "collective": self.collective,
+            "collective_bytes": self.collective_bytes,
         }
 
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleReport:
-    """The whole network's compiled schedule (batch-1 forward accounting)."""
+    """The whole network's compiled schedule (batch-1 forward accounting).
+
+    With a mesh-aware engine the per-layer rows are PER-DEVICE (local tile
+    plans, per-device VMEM working sets, per-device grid steps at the
+    per-device batch) plus the partition's collective accounting — halo
+    exchange stays inside a device's VMEM carry (spatial dims are never
+    partitioned across devices), so the cross-device traffic is exactly the
+    channel-partition ``psum``/``all_gather`` payloads listed per layer.
+    """
     engine: EngineConfig
     layers: tuple[LayerSchedule, ...]
     batch: int = 1
+    data_parallel: int = 1             # batch-axis mesh extent
+    model_parallel: int = 1            # model-axis mesh extent (1 = off)
 
     @property
     def mxu_dispatches(self) -> int:
@@ -367,11 +442,23 @@ class ScheduleReport:
     def unique_plans(self) -> int:
         return len({l.plan for l in self.layers})
 
+    @property
+    def collective_bytes(self) -> int:
+        """Per-device payload bytes entering collectives, per forward."""
+        return sum(l.collective_bytes for l in self.layers)
+
+    @property
+    def per_device_batch(self) -> int:
+        return self.batch // self.data_parallel
+
     def describe(self) -> str:
         head = (f"schedule[{self.engine.method}] batch={self.batch} "
                 f"layers={len(self.layers)} plans={self.unique_plans} "
                 f"grid={self.grid_steps} mxu={self.mxu_dispatches} "
                 f"peak_vmem={self.peak_vmem_bytes}")
+        if self.data_parallel * self.model_parallel > 1:
+            head += (f" mesh=dp{self.data_parallel}xmp{self.model_parallel} "
+                     f"coll_bytes={self.collective_bytes}")
         return "\n".join([head] + ["  " + l.describe() for l in self.layers])
 
     def to_json(self) -> dict:
@@ -383,19 +470,28 @@ class ScheduleReport:
             "mxu_dispatches": self.mxu_dispatches,
             "peak_vmem_bytes": self.peak_vmem_bytes,
             "unique_plans": self.unique_plans,
+            "data_parallel": self.data_parallel,
+            "model_parallel": self.model_parallel,
+            "collective_bytes": self.collective_bytes,
         }
 
 
 def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
-                    batch: int) -> LayerSchedule:
+                    batch: int, *, local_cin: int | None = None,
+                    local_cout: int | None = None,
+                    collective: str | None = None,
+                    collective_bytes: int = 0) -> LayerSchedule:
+    cin = local_cin or layer.cin
+    cout = local_cout or layer.cout
     sp3, k3, s3, p3 = _lift_geometry(layer)
     if layer.op == "conv":
         plan_sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
     else:
         plan_sp3 = sp3
-    plan = engine.plan(layer.op, plan_sp3, k3, s3, layer.cin, layer.cout)
-    ci_blocks = -(-layer.cin // plan.block_ci)
-    co_blocks = -(-layer.cout // plan.block_co)
+    # the plan one device actually runs: local channel counts under a mesh
+    plan = engine.plan(layer.op, plan_sp3, k3, s3, cin, cout)
+    ci_blocks = -(-cin // plan.block_ci)
+    co_blocks = -(-cout // plan.block_co)
     grid_steps = batch * co_blocks * plan.n_dtiles * ci_blocks
     # per-phase tap batching: one wide matmul per NON-EMPTY output phase —
     # prod(min(S, K)) of them (stride 1 collapses to a single dispatch)
@@ -409,7 +505,123 @@ def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
         kernel=layer.kernel, stride=layer.stride, plan=plan,
         grid_steps=grid_steps, mxu_per_step=mxu_per_step,
         mxu_dispatches=grid_steps * mxu_per_step,
-        vmem_bytes=plan.step_vmem_bytes, sparsity=sparsity)
+        vmem_bytes=plan.step_vmem_bytes, sparsity=sparsity,
+        local_cin=cin, local_cout=cout, collective=collective,
+        collective_bytes=collective_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Mesh partitioning — batch over "data", optionally Cout/Cin over "model".
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _LayerPartition:
+    """One layer's placement: its weight PartitionSpec, the channel extents
+    one device holds, and the collective (if any) that follows the layer."""
+    w_spec: P
+    local_cin: int
+    local_cout: int
+    collective: str | None             # "psum" | "all_gather" | None
+
+
+def _partition_layers(layers, policy: MeshPolicy,
+                      model_size: int) -> list[_LayerPartition]:
+    """Megatron-style alternation down the chain: shard a layer's Cout when
+    it divides the model axis, contract the NEXT layer's (then-sharded) Cin
+    and psum its partial outputs; a trailing channel-sharded output is
+    all_gathered so the compiled callable always returns full channels."""
+    parts = []
+    act_sharded = False
+    for i, l in enumerate(layers):
+        cin_l, cout_l, coll = l.cin, l.cout, None
+        spec = [None] * (l.rank + 2)
+        if act_sharded:
+            # input channels arrive sharded: each device contracts its Cin
+            # block into FULL-Cout partial sums, reduced right after
+            spec[l.rank] = policy.model_axis
+            cin_l = l.cin // model_size
+            coll = "psum"
+            act_sharded = False
+        elif (model_size > 1 and l.cout % model_size == 0
+              and l.cout // model_size >= policy.min_channel_block):
+            spec[l.rank + 1] = policy.model_axis
+            cout_l = l.cout // model_size
+            act_sharded = True
+            if i == len(layers) - 1:
+                coll = "all_gather"
+        parts.append(_LayerPartition(
+            w_spec=P(*spec), local_cin=cin_l,
+            local_cout=cout_l, collective=coll))
+    return parts
+
+
+def _collective_bytes(layer, part: _LayerPartition, per_dev_batch: int,
+                      act_bytes: int) -> int:
+    """Per-device payload entering the layer's collective — the same
+    quantity the jaxpr's psum/all_gather operand carries."""
+    if part.collective is None:
+        return 0
+    chans = (layer.cout if part.collective == "psum" else part.local_cout)
+    return act_bytes * per_dev_batch * math.prod(layer.out_spatial) * chans
+
+
+def _compile_sharded(layers, engine: UniformEngine, batch: int):
+    """The mesh-aware compile path: a ``shard_map``-wrapped callable (batch
+    over the data axis, channels optionally over the model axis) plus the
+    per-device schedule report."""
+    from repro.sharding.compat import shard_map_norep
+
+    cfg = engine.config
+    mesh, policy = cfg.mesh, cfg.policy
+    dp = mesh.shape[policy.batch_axis]
+    mp = mesh.shape[policy.model_axis] if policy.model_axis else 1
+    if batch % dp:
+        raise ValueError(
+            f"compile batch {batch} does not divide the {dp}-way "
+            f"{policy.batch_axis!r} mesh axis")
+    parts = _partition_layers(layers, policy, mp)
+    per_dev_batch = batch // dp
+    # activation bytes entering the collectives: the configured element
+    # type, else the f32 the engines default to for inexact inputs
+    act_bytes = (cfg.preferred_element_type.itemsize
+                 if cfg.preferred_element_type is not None else 4)
+    report = ScheduleReport(
+        engine=cfg, batch=batch, data_parallel=dp, model_parallel=mp,
+        layers=tuple(
+            _schedule_layer(l, engine, per_dev_batch,
+                            local_cin=pt.local_cin, local_cout=pt.local_cout,
+                            collective=pt.collective,
+                            collective_bytes=_collective_bytes(
+                                l, pt, per_dev_batch, act_bytes))
+            for l, pt in zip(layers, parts)))
+
+    def local_apply(ws, x):
+        h = x
+        for layer, w, part in zip(layers, ws, parts):
+            h = engine(layer, h, w.astype(h.dtype))
+            if part.collective == "psum":
+                h = lax.psum(h, policy.model_axis)
+            elif part.collective == "all_gather":
+                h = lax.all_gather(h, policy.model_axis, axis=h.ndim - 1,
+                                   tiled=True)
+        return h
+
+    sharded = shard_map_norep(
+        local_apply, mesh=mesh,
+        in_specs=([pt.w_spec for pt in parts], P(policy.batch_axis)),
+        out_specs=P(policy.batch_axis))
+
+    def apply(ws, x):
+        if len(ws) != len(layers):
+            raise ValueError(f"expected {len(layers)} weight arrays, got "
+                             f"{len(ws)}")
+        if x.shape[0] % dp:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide the {dp}-way "
+                f"{policy.batch_axis!r} mesh axis")
+        return sharded(list(ws), x)
+
+    return apply, report
 
 
 def compile_network(layers: Sequence[_networks.UniformLayer],
@@ -425,6 +637,12 @@ def compile_network(layers: Sequence[_networks.UniformLayer],
     the engine's cache, so executing ``apply`` (including under jit, and
     across retraces) never re-runs the planner.
 
+    With a mesh-aware engine (``EngineConfig(mesh=..., policy=...)``) the
+    callable is ``shard_map``-wrapped: ``apply`` still takes FULL (global)
+    weights and batch — the wrapper splits them per the partition — and the
+    report's rows become per-device (local tile plans, per-device VMEM
+    bytes, collective payload counts).  Outputs match the unsharded engine.
+
     The chain must be geometrically consistent (layer i's output feeds
     layer i+1); the schedule accounts a batch-``batch`` forward.
     """
@@ -438,6 +656,8 @@ def compile_network(layers: Sequence[_networks.UniformLayer],
                 f"layer chain breaks at {prev.name} -> {nxt.name}: "
                 f"{prev.out_spatial}x{prev.cout} != "
                 f"{nxt.in_spatial}x{nxt.cin}")
+    if engine.config.mesh is not None:
+        return _compile_sharded(layers, engine, batch)
     report = ScheduleReport(
         engine=engine.config, batch=batch,
         layers=tuple(_schedule_layer(l, engine, batch) for l in layers))

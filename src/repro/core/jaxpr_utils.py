@@ -39,6 +39,20 @@ def count_prims(jaxpr, counts=None, into_pallas=True):
     return counts
 
 
+def named_eqns(jaxpr, names, out=None):
+    """Collect every eqn whose primitive name is in ``names`` (recursive —
+    e.g. ``psum``/``all_gather`` inside a shard_map body, for checking a
+    mesh schedule's collective accounting against the traced reality)."""
+    out = [] if out is None else out
+    names = frozenset(names)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            out.append(eqn)
+        for sub in _sub_jaxprs(eqn):
+            named_eqns(sub, names, out)
+    return out
+
+
 def pallas_eqns(jaxpr, out=None):
     """Collect every ``pallas_call`` eqn (its kernel body is
     ``eqn.params["jaxpr"]``)."""

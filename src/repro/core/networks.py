@@ -117,6 +117,21 @@ class UniformLayer:
         return b * (inp + wgt + out)
 
 
+def scale_channels(layers: Sequence[UniformLayer], div: int = 8,
+                   floor: int = 4) -> list[UniformLayer]:
+    """Shrink a chain's channels by ``div`` (floored, heads <= ``floor``
+    kept) and re-chain so layer i's Cout still feeds layer i+1's Cin — the
+    shared reduced-config rule (smoke tests, benches, ``dcnn_reduced``)."""
+    out = []
+    for l in layers:
+        cin = max(floor, l.cin // div)
+        cout = l.cout if l.cout <= floor else max(floor, l.cout // div)
+        out.append(dataclasses.replace(l, cin=cin, cout=cout))
+    for i in range(1, len(out)):
+        out[i] = dataclasses.replace(out[i], cin=out[i - 1].cout)
+    return out
+
+
 def DeconvLayer(name, in_spatial, cin, cout, kernel, stride, crop):
     """Compat constructor: the pre-uniform deconv-only layer spec."""
     return UniformLayer(name=name, in_spatial=tuple(in_spatial), cin=cin,

@@ -15,8 +15,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Whatever this host has (tests / examples): (n_dev/model, model)."""
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """Whatever this host has (tests / examples): (n_dev/model, model).
+    Pass ``data`` to pin the data axis explicitly (e.g. a 4-way sub-mesh on
+    an 8-device ``--xla_force_host_platform_device_count`` host)."""
     n = len(jax.devices())
-    data = max(1, n // model)
+    if data is None:
+        data = max(1, n // model)
     return make_mesh((data, model), ("data", "model"))

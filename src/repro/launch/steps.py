@@ -220,6 +220,101 @@ def make_vnet_train_step(cfg: ModelConfig, opt: AdamWConfig, engine=None):
     return train_step
 
 
+# -- explicit data-parallel DCNN steps (runtime.dp_trainer) ------------------
+
+def make_dp_gan_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh,
+                           engine=None, compress: bool = True):
+    """Explicit data-parallel GAN step on the uniform engine: each device
+    runs the whole GAN loss on its batch shard (with ``engine="pallas"``
+    that is zero ``conv_general_dilated`` per device), gradients all-reduce
+    through ``runtime.dp_trainer`` (int8 wire format + error feedback when
+    ``compress``), AdamW updates replicated.  The error state comes from
+    ``dp_trainer.init_error_state({"gen": ..., "disc": ...}, n_data)``.
+    """
+    from repro.runtime import dp_trainer as DP
+    engine = D._engine(engine)
+
+    def local_step(params, opt_state, err, batch):
+        err = DP.unstack_error(err)
+        gen_p, disc_p = params["gen"], params["disc"]
+        gen_s, disc_s = opt_state
+
+        def g_loss_fn(gp):
+            gl, _, _ = D.gan_losses(gp, disc_p, cfg, batch["z"],
+                                    batch["real"], engine)
+            return gl
+
+        def d_loss_fn(dp):
+            _, dl, _ = D.gan_losses(gen_p, dp, cfg, batch["z"],
+                                    batch["real"], engine)
+            return dl
+
+        gl, g_grads = jax.value_and_grad(g_loss_fn)(gen_p)
+        dl, d_grads = jax.value_and_grad(d_loss_fn)(disc_p)
+        gl = jax.lax.pmean(gl, "data")
+        dl = jax.lax.pmean(dl, "data")
+        grads, err = DP.reduce_grads({"gen": g_grads, "disc": d_grads}, err,
+                                     "data", compress)
+        new_gen, gen_s = adamw_update(grads["gen"], gen_s, gen_p, opt)
+        new_disc, disc_s = adamw_update(grads["disc"], disc_s, disc_p, opt)
+        return ({"gen": new_gen, "disc": new_disc}, (gen_s, disc_s),
+                DP.stack_error(err), {"g_loss": gl, "d_loss": dl})
+
+    return DP.make_dp_step(local_step, mesh)
+
+
+def make_dp_vnet_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh,
+                            engine=None, compress: bool = True):
+    """V-Net sibling of ``make_dp_gan_train_step``: per-device dice+CE
+    grads from the local volume shard, int8-compressed DP all-reduce."""
+    from repro.runtime import dp_trainer as DP
+    engine = D._engine(engine)
+
+    def local_step(params, opt_state, err, batch):
+        err = DP.unstack_error(err)
+
+        def loss_fn(p):
+            logits = D.vnet_forward(p["vnet"], cfg, batch["vol"], engine)
+            return D.dice_loss(logits, batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        loss = jax.lax.pmean(loss, "data")
+        grads, err = DP.reduce_grads(grads, err, "data", compress)
+        new_p, new_s = adamw_update(grads, opt_state, params, opt)
+        return new_p, new_s, DP.stack_error(err), {"loss": loss}
+
+    return DP.make_dp_step(local_step, mesh)
+
+
+def round_batch_to_mesh(cfg: ModelConfig, n_data: int) -> ModelConfig:
+    """Round ``dcnn_batch`` up to a multiple of the data-axis extent so the
+    dp trainer gives every device an equal shard (the drivers' shared
+    policy)."""
+    if cfg.dcnn_batch % n_data == 0:
+        return cfg
+    return dataclasses.replace(
+        cfg, dcnn_batch=-(-cfg.dcnn_batch // n_data) * n_data)
+
+
+def fold_dp_step(dp_step, n_data: int, params):
+    """Adapt a dp step to the Trainer's 3-arg contract by folding the
+    error-feedback state into the optimizer state:
+    ``step(params, (opt_state, err), batch) -> (params, (opt_state, err),
+    metrics)``.  Returns ``(step_fn, err_state)``."""
+    from repro.runtime import dp_trainer as DP
+    err0 = DP.init_error_state(params, n_data)
+
+    def step(params, state, batch):
+        opt_state, err = state
+        params, opt_state, err, metrics = dp_step(params, opt_state, err,
+                                                  batch)
+        if not isinstance(metrics, dict):
+            metrics = {"loss": metrics}
+        return params, (opt_state, err), metrics
+
+    return step, err0
+
+
 def make_serve_step(cfg: ModelConfig, kind: str):
     if kind == "prefill":
         def prefill_step(params, batch):

@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--deconv-method", default="iom_phase")
+    ap.add_argument("--dp", action="store_true",
+                    help="dcnn archs: explicit data-parallel shard_map "
+                         "trainer (int8-compressed gradient all-reduce)")
+    ap.add_argument("--no-dp-compress", action="store_true",
+                    help="with --dp: plain f32 gradient all-reduce")
     args = ap.parse_args()
 
     if os.environ.get("TPU_PERF", "0") == "1":
@@ -59,23 +64,47 @@ def main():
     mesh = make_host_mesh(model=args.model_parallel)
     opt = AdamWConfig(lr=args.lr, state_bits=cfg.opt_state_bits)
 
+    use_dp = args.dp and cfg.family == "dcnn"
+    n_data = mesh.shape["data"]
+    if use_dp:
+        cfg = ST.round_batch_to_mesh(cfg, n_data)
+        # the dp opt state carries the error-feedback residual: keep its
+        # checkpoints apart from non-dp runs (different tree structure)
+        args.checkpoint_dir += "-dp"
+
     with mesh:
         params, logical = ST.real_params(cfg, jax.random.PRNGKey(0))
         if cfg.family == "dcnn":
+            compress = not args.no_dp_compress
             if cfg.dcnn == "v_net":
                 data = VolumeBatches(cfg.dcnn_batch, D._vnet_spatial(cfg))
-                step_fn = ST.make_vnet_train_step(cfg, opt,
-                                                  engine=args.deconv_method)
-                opt_state = adamw_init(params, opt)
+                if use_dp:
+                    dp_step = ST.make_dp_vnet_train_step(
+                        cfg, opt, mesh, engine=args.deconv_method,
+                        compress=compress)
+                    step_fn, err = ST.fold_dp_step(dp_step, n_data, params)
+                    opt_state = (adamw_init(params, opt), err)
+                else:
+                    step_fn = ST.make_vnet_train_step(
+                        cfg, opt, engine=args.deconv_method)
+                    opt_state = adamw_init(params, opt)
             else:
                 layers = D._scaled_layers(cfg)
                 data = DcnnBatches(cfg.dcnn_batch, cfg.dcnn_z,
                                    (*layers[-1].out_spatial,
                                     layers[-1].cout))
-                step_fn = ST.make_gan_train_step(cfg, opt,
-                                                 engine=args.deconv_method)
-                opt_state = (adamw_init(params["gen"], opt),
-                             adamw_init(params["disc"], opt))
+                if use_dp:
+                    dp_step = ST.make_dp_gan_train_step(
+                        cfg, opt, mesh, engine=args.deconv_method,
+                        compress=compress)
+                    step_fn, err = ST.fold_dp_step(dp_step, n_data, params)
+                    opt_state = ((adamw_init(params["gen"], opt),
+                                  adamw_init(params["disc"], opt)), err)
+                else:
+                    step_fn = ST.make_gan_train_step(
+                        cfg, opt, engine=args.deconv_method)
+                    opt_state = (adamw_init(params["gen"], opt),
+                                 adamw_init(params["disc"], opt))
         else:
             def extra_fn(step, b, s):
                 extra = {}
@@ -92,7 +121,9 @@ def main():
             step_fn = ST.make_train_step(cfg, opt)
             opt_state = adamw_init(params, opt)
 
-        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        # the dp steps come back pre-jitted from dp_trainer.make_dp_step
+        jitted = (step_fn if use_dp
+                  else jax.jit(step_fn, donate_argnums=(0, 1)))
         trainer = Trainer(jitted, params, opt_state, data,
                           TrainLoopConfig(
                               total_steps=args.steps,

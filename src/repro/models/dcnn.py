@@ -27,7 +27,7 @@ from repro.configs.base import ModelConfig
 from repro.core import networks
 from repro.core.engine import UniformEngine, as_engine
 from repro.models import layers as L
-from repro.sharding.partition import constrain
+from repro.sharding.partition import constrain, conv_weight_axes
 
 # The models' historical default lowering (the TPU-native polyphase IOM).
 DEFAULT_METHOD = "iom_phase"
@@ -39,15 +39,7 @@ def _engine(engine) -> UniformEngine:
 
 def _scaled_layers(cfg: ModelConfig) -> list[networks.UniformLayer]:
     layers = networks.benchmark_layers(cfg.dcnn)
-    if not cfg.dcnn_reduced:
-        return layers
-    import dataclasses as dc
-    out = []
-    for l in layers:
-        cin = max(4, l.cin // 8)
-        cout = l.cout if l.cout <= 4 else max(4, l.cout // 8)
-        out.append(dc.replace(l, cin=cin, cout=cout))
-    return out
+    return networks.scale_channels(layers) if cfg.dcnn_reduced else layers
 
 
 # ---------------------------------------------------------------------------
@@ -67,8 +59,7 @@ def init_generator(cfg: ModelConfig, key):
     for i, l in enumerate(layers):
         params["deconvs"].append({
             "w": L.dense_init(ks[i + 1], (*l.kernel, l.cin, l.cout),
-                              tuple([None] * l.rank + [None, "model"]),
-                              scale=0.02),
+                              conv_weight_axes(l.rank), scale=0.02),
             "b": L.zeros_init((l.cout,), ("model",)),
         })
     return params
@@ -104,8 +95,7 @@ def init_discriminator(cfg: ModelConfig, key):
     for i in range(len(chans) - 1):
         convs.append({
             "w": L.dense_init(ks[i], (*(3,) * rank, chans[i], chans[i + 1]),
-                              tuple([None] * rank + [None, "model"]),
-                              scale=0.02)})
+                              conv_weight_axes(rank), scale=0.02)})
     head_in = chans[-1]
     return {"convs": convs,
             "head": L.dense_init(ks[-1], (head_in, 1), (None, None),
@@ -148,21 +138,25 @@ def init_vnet(cfg: ModelConfig, key):
     enc_spec = _vnet_chans(cfg)
     n = len(enc_spec)
     ks = jax.random.split(key, 4 * n + 2)
+    # V-Net replicates its weights (channel counts are skip-tied, so the
+    # dp trainer is its scaling story); the axes still route through the
+    # shared conv-weight annotation
+    axes = conv_weight_axes(3, cout=None)
     enc = []
     for i, (ci, co) in enumerate(enc_spec):
         enc.append({"w": L.dense_init(ks[i], (3, 3, 3, ci, co),
-                                      (None,) * 5, scale=0.05)})
+                                      axes, scale=0.05)})
     dec = []
     # decoder mirrors: deconv from co -> ci (skip concat) -> conv merge
     for i, (ci, co) in enumerate(reversed(enc_spec[1:])):
         j = n + 2 * i
         dec.append({
-            "up_w": L.dense_init(ks[j], (3, 3, 3, co, ci), (None,) * 5,
+            "up_w": L.dense_init(ks[j], (3, 3, 3, co, ci), axes,
                                  scale=0.05),
             "merge_w": L.dense_init(ks[j + 1], (3, 3, 3, 2 * ci, ci),
-                                    (None,) * 5, scale=0.05),
+                                    axes, scale=0.05),
         })
-    head = L.dense_init(ks[-1], (1, 1, 1, enc_spec[0][1], 2), (None,) * 5,
+    head = L.dense_init(ks[-1], (1, 1, 1, enc_spec[0][1], 2), axes,
                         scale=0.05)
     return {"enc": enc, "dec": dec, "head": head}
 

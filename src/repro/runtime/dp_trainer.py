@@ -7,6 +7,12 @@ demonstrates the wire-format saving measured in benchmarks: gradient
 all-reduce bytes drop 4x (f32 -> int8) at equal converged loss (error
 feedback removes the quantisation bias).
 
+Since PR 5 the DCNN train steps route through here too: every explicit-DP
+local step (the LM regression below, the GAN and V-Net steps built in
+``repro.launch.steps``) reduces its gradients with ``reduce_grads`` and is
+wrapped by ``make_dp_step`` — one spec layout (params/opt replicated,
+error state and batch sharded over "data") for every model family.
+
 The error-feedback residual is inherently PER-DEVICE state: it is stored
 with a leading [n_data] axis sharded over the data mesh axis.
 """
@@ -21,12 +27,51 @@ from jax.sharding import PartitionSpec as P
 
 from repro.optim import AdamWConfig, adamw_update
 from repro.optim.compress import psum_int8_tree
-from repro.sharding import compat
+from repro.sharding.compat import shard_map_norep
 
 
 def init_error_state(params, n_data: int):
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros((n_data, *p.shape), jnp.float32), params)
+
+
+def reduce_grads(grads, err, axis_name: str = "data", compress: bool = True):
+    """Mean-all-reduce a gradient tree over ``axis_name`` — int8 on the
+    wire with error feedback when ``compress``, plain f32 pmean otherwise.
+    Returns ``(reduced_grads, new_error_state)`` (the error state passes
+    through untouched on the uncompressed path)."""
+    if compress:
+        return psum_int8_tree(grads, axis_name, err)
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g, axis_name), grads), err
+
+
+def make_dp_step(local_step: Callable, mesh, *, axis_name: str = "data"):
+    """Wrap an explicit-DP local step with the trainer's spec layout.
+
+    ``local_step(params, opt_state, err, batch)`` runs per device on its
+    batch shard (err arrives with the leading per-device axis already
+    indexed away — see ``unstack_error``/``stack_error``) and returns
+    ``(params, opt_state, err, metrics)``.  Params and opt state are
+    replicated, err and batch shard over ``axis_name``, metrics replicate.
+    Returns the jitted step (opt state + err donated).
+    """
+    rep, dp = P(), P(axis_name)
+    shard_step = shard_map_norep(
+        local_step, mesh=mesh,
+        in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep))
+    return jax.jit(shard_step, donate_argnums=(1, 2))
+
+
+def unstack_error(err):
+    """Inside the local step: drop the sharded leading [n_data] axis (each
+    device sees its own length-1 slice)."""
+    return jax.tree_util.tree_map(lambda e: e[0], err)
+
+
+def stack_error(err):
+    """Inverse of ``unstack_error`` for the local step's output."""
+    return jax.tree_util.tree_map(lambda e: e[None], err)
 
 
 def make_dp_train_step(loss_fn: Callable, opt: AdamWConfig, mesh,
@@ -36,28 +81,11 @@ def make_dp_train_step(loss_fn: Callable, opt: AdamWConfig, mesh,
     replicated, batch and err_state sharded over 'data'."""
 
     def local_step(params, opt_state, err, batch):
-        err = jax.tree_util.tree_map(lambda e: e[0], err)
+        err = unstack_error(err)
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         loss = jax.lax.pmean(loss, "data")
-        if compress:
-            grads, err = psum_int8_tree(grads, "data", err)
-        else:
-            grads = jax.tree_util.tree_map(
-                lambda g: jax.lax.pmean(g, "data"), grads)
+        grads, err = reduce_grads(grads, err, "data", compress)
         new_params, new_opt = adamw_update(grads, opt_state, params, opt)
-        err = jax.tree_util.tree_map(lambda e: e[None], err)
-        return new_params, new_opt, err, loss
+        return new_params, new_opt, stack_error(err), loss
 
-    rep = P()
-    dp = P("data")
-    try:
-        shard_step = compat.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
-            check_vma=False)
-    except TypeError:  # older jax: check_rep
-        shard_step = compat.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(rep, rep, dp, dp), out_specs=(rep, rep, dp, rep),
-            check_rep=False)
-    return jax.jit(shard_step, donate_argnums=(1, 2))
+    return make_dp_step(local_step, mesh)

@@ -19,6 +19,20 @@ else:
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across the kwarg rename:
+    ``check_vma`` (newer JAX) vs ``check_rep`` (0.4.x).  Every explicit-SPMD
+    region in this repo (dp trainer, vocab-parallel CE, the mesh-aware
+    compiled schedules) wants the check off — int8 collectives and Pallas
+    bodies confuse the replication checker."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax 0.4.x spells it check_rep
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
 def supports_axis_types() -> bool:
     return hasattr(jax.sharding, "AxisType")
 

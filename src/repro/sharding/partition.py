@@ -103,10 +103,37 @@ def param_shardings(mesh: Mesh, values, logical, fsdp_enabled: bool = True):
                                   is_leaf=is_logical_leaf)
 
 
+def conv_weight_axes(rank: int, *, cin: str | None = None,
+                     cout: str | None = "model") -> tuple[str | None, ...]:
+    """Logical axes for a conv/deconv weight ``[*K, Cin, Cout]``: spatial
+    taps replicated, channel dims carrying the given logical names (the
+    divisibility check in ``logical_to_spec`` falls back to replicated, so
+    annotating small heads is safe)."""
+    return (None,) * rank + (cin, cout)
+
+
+def _in_manual_region(mesh) -> bool:
+    """True when tracing inside shard_map/pmap over any of ``mesh``'s axes —
+    there the axes are manual (each device already holds its shard) and a
+    NamedSharding constraint over them is inexpressible (the failure only
+    surfaces at lowering, so it must be detected at trace time)."""
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        return any(env.axis_exists(a) for a in mesh.axis_names)
+    except (ImportError, AttributeError):
+        # probe API moved (private jax surface): fail open as "not manual";
+        # wrong only for constrain-under-shard_map-under-`with mesh:`,
+        # which the jax-current CI cell would surface at lowering
+        return False
+
+
 def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
-    """with_sharding_constraint using logical names; no-op without a mesh."""
+    """with_sharding_constraint using logical names; no-op without a mesh
+    (and inside shard_map regions — the explicit dp trainers trace model
+    forwards under an open ``with mesh:``)."""
     mesh = get_abstract_mesh_or_none()
-    if mesh is None:
+    if mesh is None or _in_manual_region(mesh):
         return x
     spec = logical_to_spec(mesh, logical, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -210,15 +210,8 @@ def test_engine_config_drives_the_op(rng):
 # ---------------------------------------------------------------------------
 
 def _reduced(layers, div=64):
-    out = []
-    for l in layers:
-        cin = max(4, l.cin // div)
-        cout = l.cout if l.cout <= 4 else max(4, l.cout // div)
-        out.append(dc.replace(l, cin=cin, cout=cout))
-    # re-chain the channel counts (cout of i feeds cin of i+1)
-    for i in range(1, len(out)):
-        out[i] = dc.replace(out[i], cin=out[i - 1].cout)
-    return out
+    # the shared reduced-config rule (also drives cfg.dcnn_reduced)
+    return networks.scale_channels(layers, div)
 
 
 def test_compile_network_dcgan_schedule_and_structure():
