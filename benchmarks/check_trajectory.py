@@ -31,8 +31,10 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 
 # the rows the trajectory is anchored on: the compiled whole-network
-# schedules and the heaviest single-kernel conv row
-KEY_PATTERNS = ("net_*_compiled_pallas", "conv_3d_s2_pallas")
+# schedules (chains AND the DAG graphs with fused epilogues) and the
+# heaviest single-kernel conv row
+KEY_PATTERNS = ("net_*_compiled_pallas", "net_*_graph_pallas",
+                "conv_3d_s2_pallas")
 
 # rows under this baseline time are timer noise, not signal — report only
 MIN_GATED_US = 20.0

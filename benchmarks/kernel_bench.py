@@ -85,6 +85,7 @@ def run() -> list[str]:
     _conv_rows(rng, rec)
     _network_rows(rec)
     schedules = _compiled_rows(rng, rec)
+    schedules.update(_graph_rows(rng, rec))
     schedules["dcgan_gen_sharded"] = _sharded_rows(rng, rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
@@ -156,7 +157,7 @@ def _split_path_rows(rng, rec) -> None:
     eng = default_engine(method="pallas", interpret=True,
                          max_tile_bytes=budget)
     fused = jax.jit(lambda x, w: deconv_ops._deconv_fwd_impl(
-        x, w, s, 0, eng))
+        x, w, None, s, 0, 1, 1, "none", 0.2, eng))
     stitched = jax.jit(lambda x, w: _stitched_baseline(x, w, s, plan))
     np.testing.assert_allclose(np.asarray(fused(x, w)),
                                np.asarray(stitched(x, w)),
@@ -208,7 +209,7 @@ def _backward_rows(rng, rec) -> None:
     eng = default_engine(method="pallas", interpret=True,
                          max_tile_bytes=budget)
     pallas_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd(
-        s, 0, eng, (x, w), dy))
+        s, 0, 1, 1, "none", 0.2, eng, (x, w, None, None), dy)[:2])
     einsum_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd_einsum(
         s, 0, (x, w), dy))
     for a, b in zip(pallas_vjp(x, w, dy), einsum_vjp(x, w, dy)):
@@ -363,6 +364,51 @@ def _compiled_rows(rng, rec) -> dict:
                 assert len(engine.plan_cache) == len(layers)
                 schedules[name] = report.to_json()
             rec(f"net_{name}_compiled_{method}", _time(f, ws, x),
+                f"pallas{n_pl}_convgd{n_cg}_grid{report.grid_steps}"
+                f"_mxu{report.mxu_dispatches}")
+        np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                                   rtol=1e-4, atol=1e-4)
+    return schedules
+
+
+def _graph_rows(rng, rec) -> dict:
+    """DAG-schedule rows: ``compile_network`` over the generator chain with
+    FUSED epilogues (bias+relu, tanh head) and a full V-Net graph with its
+    skip concats — per-method timing, jaxpr dispatch counters (the pallas
+    runs must trace zero conv_general_dilated AND zero outside-kernel
+    activations), parity at 1e-4, schedules in the JSON payload."""
+    key = jax.random.PRNGKey(0)
+
+    gen = _bench_gen_chain()
+    gen = [dc.replace(l, epilogue=networks.Epilogue(
+               bias=True,
+               activation="tanh" if i == len(gen) - 1 else "relu"))
+           for i, l in enumerate(gen)]
+    graphs = {
+        "dcgan_gen_graph": networks.chain_graph(gen),
+        "vnet_full_graph": networks.vnet_graph(
+            in_spatial=(8, 8, 8), chans=(2, 4, 8), cin=1, num_classes=2),
+    }
+    schedules = {}
+    for name, graph in graphs.items():
+        ws = init_network_weights(graph, key)
+        sp, ci = graph.in_shape
+        x = jnp.asarray(rng.randn(1, *sp, ci) * 0.3, jnp.float32)
+        outs = {}
+        for method in ("pallas", "xla"):
+            fn, report = compile_network(graph, UniformEngine(method=method))
+            f = jax.jit(fn)
+            outs[method] = np.asarray(f(ws, x))
+            counts = count_prims(jax.make_jaxpr(fn)(ws, x).jaxpr, {},
+                                 into_pallas=False)
+            n_pl = counts.get("pallas_call", 0)
+            n_cg = counts.get("conv_general_dilated", 0)
+            if method == "pallas":
+                assert n_cg == 0, counts
+                assert counts.get("tanh", 0) == 0, counts   # fused epilogue
+                assert counts.get("max", 0) == 0, counts
+                schedules[name] = report.to_json()
+            rec(f"net_{name}_{method}", _time(f, ws, x),
                 f"pallas{n_pl}_convgd{n_cg}_grid{report.grid_steps}"
                 f"_mxu{report.mxu_dispatches}")
         np.testing.assert_allclose(outs["pallas"], outs["xla"],

@@ -76,6 +76,35 @@ xla_apply, _ = compile_network(layers, UniformEngine(method="xla"))
 err = np.abs(np.asarray(out) - np.asarray(xla_apply(ws, z))).max()
 print(f"  max|err vs XLA engine|={err:.2e}")
 
+print("\n=== UniformGraph: whole DAGs — V-Net with REAL skip merges ===")
+# Chains stop at encoders; real networks branch.  A UniformGraph's nodes
+# are layers or concat/add merges, scheduled topologically: vnet_graph
+# builds the full encoder/decoder with its skip concatenations, each
+# layer's relu fused into the kernel epilogue.  compile_network takes the
+# graph directly — merge nodes get zero-cost report rows, and the layer
+# rows carry the groups/dilation/epilogue columns.
+vgraph = networks.vnet_graph(in_spatial=(8, 8, 8), chans=(2, 4, 8), cin=1)
+vapply, vreport = compile_network(vgraph, engine)
+vws = init_network_weights(vgraph, jax.random.PRNGKey(1))
+vol = jnp.asarray(rng.randn(1, 8, 8, 8, 1) * 0.3, jnp.float32)
+logits = jax.jit(vapply)(vws, vol)
+print(f"  V-Net graph: {len(vgraph.layers)} layers + "
+      f"{sum(1 for r in vreport.layers if r.plan is None)} skip merges, "
+      f"logits={tuple(logits.shape)}")
+print("  " + vreport.describe().replace("\n", "\n  "))
+
+# Layers also take groups (depthwise = groups==cin), per-dim dilation and
+# a fused Epilogue(bias, activation) — same engine, same kernels:
+dw = networks.UniformLayer(
+    name="dw", in_spatial=(16, 16), cin=8, cout=8, kernel=(3, 3),
+    stride=(1, 1), padding=((2, 2),) * 2, op="conv", groups=8,
+    dilation=(2, 2), epilogue=networks.Epilogue(bias=True,
+                                                activation="relu"))
+dapply, dreport = compile_network(networks.chain_graph([dw]), engine)
+dws = init_network_weights(networks.chain_graph([dw]), jax.random.PRNGKey(2))
+print("  depthwise dilated row: "
+      + dreport.describe().splitlines()[-1].strip())
+
 print("\n=== training runs fully on the uniform kernel ===")
 # The custom VJPs serve BOTH cotangents from the same fused Pallas grid as
 # the forwards — deconv's adjoint is a conv and vice versa, so the adjoint

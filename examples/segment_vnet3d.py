@@ -45,6 +45,10 @@ def main():
     opt_state = adamw_init(params, opt)
     data = VolumeBatches(cfg.dcnn_batch, D._vnet_spatial(cfg), prefetch=False)
     engine = UniformEngine(method=args.method)
+    # the whole V-Net is ONE compiled graph on the engine — print its DAG
+    # schedule (encoder/decoder layers, skip-concat merge rows, fused
+    # epilogues) before training starts
+    print(D.vnet_schedule(cfg, engine, batch=cfg.dcnn_batch).describe())
     if args.dp:
         dp_step = ST.make_dp_vnet_train_step(
             cfg, opt, mesh, engine=engine, compress=not args.no_dp_compress)

@@ -56,6 +56,9 @@ def main():
     data = DcnnBatches(cfg.dcnn_batch, cfg.dcnn_z,
                        (*layers[-1].out_spatial, layers[-1].cout))
     engine = UniformEngine(method=args.method)
+    # both GAN halves run as compiled graphs on this one engine — print the
+    # generator's DAG schedule (fused bias+relu/tanh epilogues) up front
+    print(D.generator_schedule(cfg, engine, batch=cfg.dcnn_batch).describe())
     if args.dp:
         dp_step = ST.make_dp_gan_train_step(
             cfg, opt, mesh, engine=engine,

@@ -48,6 +48,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import networks as _networks
 from repro.core import tiling as _tiling
+from repro.kernels import common as _kcommon
 from repro.core.functional import (
     METHODS,
     _canon,
@@ -67,15 +68,17 @@ _XLA_DECONVS = {"oom": deconv_oom, "xla": deconv_xla, "iom": deconv_iom,
                 "iom_phase": deconv_iom_phase}
 
 
-def conv_output_shape(in_spatial, kernel, stride, padding=0):
-    """Per-dim conv output extent ``O = (I + lo + hi - K) // S + 1``."""
+def conv_output_shape(in_spatial, kernel, stride, padding=0, dilation=1):
+    """Per-dim conv output extent ``O = (I + lo + hi - K_eff) // S + 1``
+    with the dilated footprint ``K_eff = (K - 1) * dilation + 1``."""
     rank = len(in_spatial)
     kernel = _canon(kernel, rank)
     stride = _canon(stride, rank)
+    dilation = _canon(1 if dilation is None else dilation, rank)
     pads = canon_padding(padding, rank)
-    return tuple((i + lo + hi - k) // s + 1
-                 for i, k, s, (lo, hi) in zip(in_spatial, kernel, stride,
-                                              pads))
+    return tuple((i + lo + hi - ((k - 1) * d + 1)) // s + 1
+                 for i, k, s, d, (lo, hi) in zip(in_spatial, kernel, stride,
+                                                 dilation, pads))
 
 
 def uniform_conv_method(deconv_method: str) -> str:
@@ -212,47 +215,79 @@ class UniformEngine:
         return dict(self._plans)
 
     def plan(self, mode: str, in_spatial, kernel, stride, cin: int, cout: int,
-             *, backward: bool = False,
+             *, groups: int = 1, dilation=None, backward: bool = False,
              in_dtype_bytes: int = 2) -> _tiling.DeconvTilePlan:
         """The engine's ONLY path to the tile planner — geometry-memoized.
 
         ``mode="conv"`` expects the PADDED conv input extent (the planner's
         contract).  ``backward=True`` keys the training plan separately
-        (it budgets max(fwd, dx, dw) working sets).
+        (it budgets max(fwd, dx, dw) working sets).  ``groups`` shrinks the
+        per-group channel extents the blocks must cover; ``dilation``
+        widens the halo/footprint budgets.
         """
+        dilation = (tuple(dilation) if dilation is not None
+                    else (1,) * len(tuple(in_spatial)))
         key = (mode, tuple(in_spatial), tuple(kernel), tuple(stride),
-               int(cin), int(cout), bool(backward), int(in_dtype_bytes))
+               int(cin), int(cout), int(groups), dilation,
+               bool(backward), int(in_dtype_bytes))
         plan = self._plans.get(key)
         if plan is None:
             cfg = self.config
             plan = self._plans[key] = _tiling.plan_uniform_tiles(
                 key[1], key[2], key[3], key[4], key[5], mode=mode,
                 vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
-                block_co=cfg.block_co, backward=backward,
-                in_dtype_bytes=in_dtype_bytes)
+                block_co=cfg.block_co, groups=groups, dilation=dilation,
+                backward=backward, in_dtype_bytes=in_dtype_bytes)
         return plan
 
     # -- the two op directions ---------------------------------------------
 
-    def deconv(self, x: jax.Array, w: jax.Array, stride,
-               padding=0) -> jax.Array:
-        """Transposed convolution on the engine (Eq. (1) + border crop)."""
+    def deconv(self, x: jax.Array, w: jax.Array, stride, padding=0, *,
+               dilation=1, groups: int = 1, bias: jax.Array | None = None,
+               activation: str = "none", alpha: float = 0.2) -> jax.Array:
+        """Transposed convolution on the engine (Eq. (1) + border crop).
+
+        ``groups``/``dilation`` follow the lax grouping/dilation
+        conventions (``w`` is ``[*K, Cin/groups, Cout]``);
+        ``bias``/``activation`` are the fused epilogue.  On the Pallas
+        engine the epilogue runs inside the kernel flush; the XLA-lowered
+        flavours apply it on the op output (and route grouped/dilated
+        geometries through the generalized ``deconv_xla``, the only XLA
+        flavour that lowers them).
+        """
         cfg = self.config
         if cfg.method == "pallas":
             from repro.kernels.deconv import ops as _dops  # lazy: kernels
-            return _dops.deconv(x, w, stride, padding, engine=self)
+            return _dops.deconv(x, w, stride, padding, dilation=dilation,
+                                groups=groups, bias=bias,
+                                activation=activation, alpha=alpha,
+                                engine=self)
         pet = (cfg.preferred_element_type
                if cfg.preferred_element_type is not None else jnp.float32)
-        return _XLA_DECONVS[cfg.method](x, w, stride, padding,
-                                        preferred_element_type=pet)
+        rank = x.ndim - 2
+        dil = _kcommon.canon_dilation(dilation, rank)
+        if groups == 1 and all(d == 1 for d in dil):
+            y = _XLA_DECONVS[cfg.method](x, w, stride, padding,
+                                         preferred_element_type=pet)
+        else:
+            y = deconv_xla(x, w, stride, padding, dilation=dil,
+                           groups=groups, preferred_element_type=pet)
+        if bias is not None or activation != "none":
+            y = _kcommon.apply_epilogue(y, bias, activation, alpha)
+        return y
 
-    def conv(self, x: jax.Array, w: jax.Array, stride=1,
-             padding=0) -> jax.Array:
-        """Forward strided convolution on the engine."""
+    def conv(self, x: jax.Array, w: jax.Array, stride=1, padding=0, *,
+             dilation=1, groups: int = 1, bias: jax.Array | None = None,
+             activation: str = "none", alpha: float = 0.2) -> jax.Array:
+        """Forward strided convolution on the engine (same epilogue and
+        grouping/dilation conventions as ``deconv``)."""
         cfg = self.config
         if cfg.conv_method == "pallas":
             from repro.kernels.conv import ops as _cops  # lazy: kernels
-            return _cops.conv(x, w, stride, padding, engine=self)
+            return _cops.conv(x, w, stride, padding, dilation=dilation,
+                              groups=groups, bias=bias,
+                              activation=activation, alpha=alpha,
+                              engine=self)
         rank = x.ndim - 2
         pet = cfg.preferred_element_type
         out_dtype = None
@@ -263,15 +298,25 @@ class UniformEngine:
         y = lax.conv_general_dilated(
             x, w, window_strides=_canon(stride, rank),
             padding=list(canon_padding(padding, rank)),
+            rhs_dilation=_kcommon.canon_dilation(dilation, rank),
+            feature_group_count=groups,
             dimension_numbers=dim_numbers(rank),
             preferred_element_type=pet)
+        if bias is not None or activation != "none":
+            # epilogue on the accumulator dtype, THEN the storage cast —
+            # matching the Pallas kernels' in-flush ordering
+            y = _kcommon.apply_epilogue(y, bias, activation, alpha)
         return y if out_dtype is None else y.astype(out_dtype)
 
     def __call__(self, layer: _networks.UniformLayer, x: jax.Array,
-                 w: jax.Array) -> jax.Array:
-        """Run one ``UniformLayer`` (op-dispatched) on the engine."""
+                 w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+        """Run one ``UniformLayer`` (op-dispatched, epilogue fused) on the
+        engine."""
         op = self.deconv if layer.op == "deconv" else self.conv
-        return op(x, w, layer.stride, layer.padding)
+        epi = layer.epilogue
+        return op(x, w, layer.stride, layer.padding,
+                  dilation=layer.dilation, groups=layer.groups, bias=b,
+                  activation=epi.activation, alpha=epi.alpha)
 
 
 # ---------------------------------------------------------------------------
@@ -352,16 +397,21 @@ def _lift_geometry(layer: _networks.UniformLayer):
 
 @dataclasses.dataclass(frozen=True)
 class LayerSchedule:
-    """One row of the compiled schedule — the per-layer mapping decision."""
+    """One row of the compiled schedule — the per-layer mapping decision.
+
+    Merge nodes of a DAG schedule get rows too (``op`` is the merge kind,
+    ``plan`` is None, zero grid/MXU accounting): the report then lists
+    every node the compiled callable executes, in schedule order.
+    """
     name: str
-    op: str                            # "deconv" | "conv"
+    op: str                            # "deconv" | "conv" | "concat" | "add"
     in_spatial: tuple[int, ...]
     out_spatial: tuple[int, ...]
     cin: int
     cout: int
     kernel: tuple[int, ...]
     stride: tuple[int, ...]
-    plan: _tiling.DeconvTilePlan       # the engine's cached tile plan
+    plan: _tiling.DeconvTilePlan | None  # the engine's cached tile plan
     grid_steps: int                    # fused-grid steps for the forward
     mxu_per_step: int                  # tap-batched matmuls per grid step
     mxu_dispatches: int                # total MXU dispatches (forward)
@@ -374,20 +424,30 @@ class LayerSchedule:
     local_cout: int = 0
     collective: str | None = None      # "psum" | "all_gather" | None
     collective_bytes: int = 0          # per-device payload entering it
+    groups: int = 1                    # channel groups (depthwise = cin)
+    dilation: tuple[int, ...] = ()     # per-dim tap spacing
+    epilogue: str = "-"                # fused epilogue ("bias+relu" | "-")
 
     def __post_init__(self):
         if not self.local_cin:
             object.__setattr__(self, "local_cin", self.cin)
         if not self.local_cout:
             object.__setattr__(self, "local_cout", self.cout)
+        if not self.dilation:
+            object.__setattr__(self, "dilation",
+                               (1,) * len(self.in_spatial))
 
     def describe(self) -> str:
         coll = (f" {self.collective}{self.collective_bytes}B"
                 if self.collective else "")
+        plan = self.plan.describe() if self.plan is not None else "merge"
         return (f"{self.name:<18s} {self.op:<6s} "
                 f"{'x'.join(map(str, self.in_spatial)):>11s}x{self.cin:<4d}-> "
                 f"{'x'.join(map(str, self.out_spatial)):>11s}x{self.cout:<4d} "
-                f"{self.plan.describe():<28s} grid{self.grid_steps:>5d} "
+                f"g{self.groups:<3d} "
+                f"d{'x'.join(map(str, self.dilation)):<5s} "
+                f"ep:{self.epilogue:<10s} "
+                f"{plan:<28s} grid{self.grid_steps:>5d} "
                 f"mxu{self.mxu_dispatches:>6d} zeros{self.sparsity:.0%}"
                 f"{coll}")
 
@@ -398,7 +458,8 @@ class LayerSchedule:
             "out_spatial": list(self.out_spatial),
             "cin": self.cin, "cout": self.cout,
             "local_cin": self.local_cin, "local_cout": self.local_cout,
-            "plan": self.plan.describe(),
+            "plan": (self.plan.describe() if self.plan is not None
+                     else None),
             "grid_steps": self.grid_steps,
             "mxu_per_step": self.mxu_per_step,
             "mxu_dispatches": self.mxu_dispatches,
@@ -406,6 +467,9 @@ class LayerSchedule:
             "sparsity": round(self.sparsity, 4),
             "collective": self.collective,
             "collective_bytes": self.collective_bytes,
+            "groups": self.groups,
+            "dilation": list(self.dilation),
+            "epilogue": self.epilogue,
         }
 
 
@@ -483,19 +547,26 @@ def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
                     collective_bytes: int = 0) -> LayerSchedule:
     cin = local_cin or layer.cin
     cout = local_cout or layer.cout
+    g = layer.groups
     sp3, k3, s3, p3 = _lift_geometry(layer)
+    dil3 = _kcommon.lift_tuple3(layer.dilation, layer.rank)
     if layer.op == "conv":
         plan_sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
     else:
         plan_sp3 = sp3
     # the plan one device actually runs: local channel counts under a mesh
-    plan = engine.plan(layer.op, plan_sp3, k3, s3, cin, cout)
-    ci_blocks = -(-cin // plan.block_ci)
-    co_blocks = -(-cout // plan.block_co)
+    plan = engine.plan(layer.op, plan_sp3, k3, s3, cin, cout,
+                       groups=g, dilation=dil3)
+    # the kernel grid enumerates ALL output-channel blocks but only the
+    # PER-GROUP input blocks (each block contracts within its own group)
+    ci_blocks = -(-(cin // g) // plan.block_ci)
+    co_blocks = g * -(-(cout // g) // plan.block_co)
     grid_steps = batch * co_blocks * plan.n_dtiles * ci_blocks
     # per-phase tap batching: one wide matmul per NON-EMPTY output phase —
-    # prod(min(S, K)) of them (stride 1 collapses to a single dispatch)
-    mxu_per_step = math.prod(min(s, k) for s, k in zip(s3, k3))
+    # prod(min(S, K)) at dilation 1 (stride 1 collapses to a single
+    # dispatch); dilation can leave phases structurally empty, so count
+    # the actual tap table
+    mxu_per_step = len(_kcommon.phase_taps(k3, s3, dil3))
     sparsity = (insertion_sparsity(layer.in_spatial, layer.kernel,
                                    layer.stride)
                 if layer.op == "deconv" else 0.0)
@@ -507,7 +578,21 @@ def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
         mxu_dispatches=grid_steps * mxu_per_step,
         vmem_bytes=plan.step_vmem_bytes, sparsity=sparsity,
         local_cin=cin, local_cout=cout, collective=collective,
-        collective_bytes=collective_bytes)
+        collective_bytes=collective_bytes, groups=g,
+        dilation=layer.dilation, epilogue=layer.epilogue.describe())
+
+
+def _schedule_merge(node: _networks.MergeNode, graph: _networks.UniformGraph,
+                    ) -> LayerSchedule:
+    """A zero-cost schedule row for a DAG merge node — the report accounts
+    every node the compiled callable executes."""
+    sp, cout = graph.node_shape(node.name)
+    cin = sum(graph.node_shape(p)[1] for p in graph.edges[node.name])
+    return LayerSchedule(
+        name=node.name, op=node.kind, in_spatial=sp, out_spatial=sp,
+        cin=cin, cout=cout, kernel=(), stride=(), plan=None,
+        grid_steps=0, mxu_per_step=0, mxu_dispatches=0, vmem_bytes=0,
+        sparsity=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -598,6 +683,18 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
     def local_apply(ws, x):
         h = x
         for layer, w, part in zip(layers, ws, parts):
+            epi = layer.epilogue
+            if part.collective == "psum" and not epi.is_identity:
+                # a channel-contracting layer produces PARTIAL sums: its
+                # epilogue does not commute with the reduction, so defer
+                # it until after the psum (host-side, same semantics)
+                op = engine.deconv if layer.op == "deconv" else engine.conv
+                h = op(h, w.astype(h.dtype), layer.stride, layer.padding,
+                       dilation=layer.dilation, groups=layer.groups)
+                h = lax.psum(h, policy.model_axis)
+                h = _kcommon.apply_epilogue(h, None, epi.activation,
+                                            epi.alpha)
+                continue
             h = engine(layer, h, w.astype(h.dtype))
             if part.collective == "psum":
                 h = lax.psum(h, policy.model_axis)
@@ -624,29 +721,161 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
     return apply, report
 
 
-def compile_network(layers: Sequence[_networks.UniformLayer],
+def _layer_wb(entry, layer: _networks.UniformLayer):
+    """Split one graph-weight pytree entry into (w, bias-or-None)."""
+    if isinstance(entry, dict):
+        w, b = entry["w"], entry.get("b")
+    else:
+        w, b = entry, None
+    if layer.epilogue.bias and b is None:
+        raise ValueError(f"layer {layer.name!r} declares a fused bias but "
+                         f"its weight entry carries none (expected "
+                         f"{{'w', 'b'}})")
+    return w, b
+
+
+def _graph_report(graph: _networks.UniformGraph, engine: UniformEngine,
+                  batch: int, **mesh_kw) -> ScheduleReport:
+    rows = []
+    for name in graph.order:
+        nd = graph.nodes[name]
+        rows.append(_schedule_layer(nd, engine, batch)
+                    if isinstance(nd, _networks.UniformLayer)
+                    else _schedule_merge(nd, graph))
+    return ScheduleReport(engine=engine.config, batch=batch,
+                          layers=tuple(rows), **mesh_kw)
+
+
+def _graph_apply_fn(graph: _networks.UniformGraph, engine: UniformEngine):
+    """The compiled DAG walk: one engine call per layer node (epilogue
+    fused), one concat/add per merge node, intermediates dropped as soon
+    as their last consumer has run."""
+    last_use: dict[str, str] = {}
+    for name in graph.order:
+        for p in graph.edges[name]:
+            last_use[p] = name
+    layer_names = [l.name for l in graph.layers]
+    # the storage-dtype contract: with no explicit preferred_element_type
+    # every node emits its input's dtype (the Pallas kernels already do —
+    # f32 accumulation in-kernel — and the XLA flavours' f32 outputs cast
+    # back), so a bf16 graph stays bf16 END TO END with no astype in the
+    # hot loop
+    keep_dtype = engine.config.preferred_element_type is None
+
+    def apply(ws, x):
+        missing = [n for n in layer_names if n not in ws]
+        if missing:
+            raise ValueError(f"graph weights missing entries for {missing}")
+        vals: dict[str, jax.Array] = {graph.INPUT: x}
+        for name in graph.order:
+            nd = graph.nodes[name]
+            ins = [vals[p] for p in graph.edges[name]]
+            if isinstance(nd, _networks.MergeNode):
+                if nd.kind == "concat":
+                    vals[name] = jnp.concatenate(ins, axis=-1)
+                else:
+                    out = ins[0]
+                    for v in ins[1:]:
+                        out = out + v
+                    vals[name] = out
+            else:
+                w, b = _layer_wb(ws[name], nd)
+                h = ins[0]
+                out = engine(nd, h, w.astype(h.dtype),
+                             None if b is None else b.astype(h.dtype))
+                vals[name] = out.astype(h.dtype) if keep_dtype else out
+            for p in graph.edges[name]:
+                if last_use[p] == name and p != graph.output:
+                    vals.pop(p, None)
+        return vals[graph.output]
+
+    return apply
+
+
+def _compile_graph(graph: _networks.UniformGraph, engine: UniformEngine,
+                   batch: int):
+    """DAG schedules on one device — topological walk over the nodes."""
+    report = _graph_report(graph, engine, batch)
+    return _graph_apply_fn(graph, engine), report
+
+
+def _compile_graph_sharded(graph: _networks.UniformGraph,
+                           engine: UniformEngine, batch: int):
+    """The mesh-aware DAG path: pure data parallelism — the batch shards
+    over the data axis, weights replicate (``P()``), and the whole DAG walk
+    runs inside one ``shard_map`` region (skip tensors never cross
+    devices).  Megatron-style channel sharding stays a chain-only feature:
+    a DAG's merge nodes would force gathers at every skip.
+    """
+    from repro.sharding.compat import shard_map_norep
+
+    cfg = engine.config
+    mesh, policy = cfg.mesh, cfg.policy
+    dp = mesh.shape[policy.batch_axis]
+    if batch % dp:
+        raise ValueError(
+            f"compile batch {batch} does not divide the {dp}-way "
+            f"{policy.batch_axis!r} mesh axis")
+    # rows carry PER-DEVICE accounting (the batch one shard runs); the
+    # report-level batch stays GLOBAL, matching the chain path
+    report = dataclasses.replace(
+        _graph_report(graph, engine, batch // dp, data_parallel=dp),
+        batch=batch)
+    local_apply = _graph_apply_fn(graph, engine)
+    sharded = shard_map_norep(
+        local_apply, mesh=mesh, in_specs=(P(), P(policy.batch_axis)),
+        out_specs=P(policy.batch_axis))
+
+    def apply(ws, x):
+        if x.shape[0] % dp:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide the {dp}-way "
+                f"{policy.batch_axis!r} mesh axis")
+        return sharded(ws, x)
+
+    return apply, report
+
+
+def compile_network(layers: Sequence[_networks.UniformLayer]
+                    | _networks.UniformGraph,
                     engine: UniformEngine | EngineConfig | str,
                     *, batch: int = 1,
                     ) -> tuple[Callable, ScheduleReport]:
-    """Compile a ``UniformLayer`` chain onto one configured engine.
+    """Compile a ``UniformLayer`` chain OR a ``UniformGraph`` DAG onto one
+    configured engine.
 
     Returns ``(apply, report)``: ``apply(ws, x)`` is a jit-compatible
-    callable running every layer on the engine in order (``ws`` is the
-    per-layer weight list, each ``[*K, Cin, Cout]``), and ``report`` is the
-    per-layer ``ScheduleReport`` — every tile plan it lists is resident in
-    the engine's cache, so executing ``apply`` (including under jit, and
-    across retraces) never re-runs the planner.
+    callable running every node on the engine in schedule order, and
+    ``report`` is the per-node ``ScheduleReport`` — every tile plan it
+    lists is resident in the engine's cache, so executing ``apply``
+    (including under jit, and across retraces) never re-runs the planner.
+
+    For a chain, ``ws`` is the per-layer weight list (each
+    ``[*K, Cin/groups, Cout]``).  For a graph, ``ws`` is a dict keyed by
+    layer name: a bare weight array, or ``{"w": ..., "b": ...}`` when the
+    layer's epilogue declares a fused bias
+    (``init_network_weights(graph, key)`` builds the matching pytree).
+    Merge nodes own no weights; epilogues (bias + activation) execute
+    inside the engine's kernels — a compiled graph traces ZERO elementwise
+    ops outside merges.
 
     With a mesh-aware engine (``EngineConfig(mesh=..., policy=...)``) the
     callable is ``shard_map``-wrapped: ``apply`` still takes FULL (global)
     weights and batch — the wrapper splits them per the partition — and the
-    report's rows become per-device (local tile plans, per-device VMEM
-    bytes, collective payload counts).  Outputs match the unsharded engine.
+    report's rows become per-device.  Chains partition Megatron-style per
+    the policy's model axis; graphs shard the batch axis only (weights
+    replicated), since skip merges would otherwise gather at every node.
 
-    The chain must be geometrically consistent (layer i's output feeds
-    layer i+1); the schedule accounts a batch-``batch`` forward.
+    A chain must be geometrically consistent (layer i's output feeds layer
+    i+1); a graph validated its edges at construction.  The schedule
+    accounts a batch-``batch`` forward.
     """
     engine = engine if isinstance(engine, UniformEngine) else as_engine(engine)
+    if isinstance(layers, _networks.UniformGraph):
+        graph = layers
+        if engine.config.mesh is not None:
+            return _compile_graph_sharded(graph, engine, batch)
+        return _compile_graph(graph, engine, batch)
     layers = tuple(layers)
     if not layers:
         raise ValueError("compile_network needs at least one layer")
@@ -674,9 +903,23 @@ def compile_network(layers: Sequence[_networks.UniformLayer],
     return apply, report
 
 
-def init_network_weights(layers: Sequence[_networks.UniformLayer], key,
+def init_network_weights(layers: Sequence[_networks.UniformLayer]
+                         | _networks.UniformGraph, key,
                          dtype=jnp.float32, scale: float = 0.05):
-    """Per-layer ``[*K, Cin, Cout]`` weights for a compiled network."""
+    """Weights for a compiled network: a per-layer ``[*K, Cin/G, Cout]``
+    list for a chain, or the name-keyed dict ``compile_network`` expects
+    for a ``UniformGraph`` (``{"w", "b"}`` entries where the layer's
+    epilogue declares a fused bias, zero-initialised biases)."""
+    if isinstance(layers, _networks.UniformGraph):
+        graph = layers
+        ls = graph.layers
+        keys = jax.random.split(key, len(ls))
+        ws = {}
+        for k, l in zip(keys, ls):
+            w = scale * jax.random.normal(k, l.weight_shape, dtype)
+            ws[l.name] = ({"w": w, "b": jnp.zeros((l.cout,), dtype)}
+                          if l.epilogue.bias else w)
+        return ws
     keys = jax.random.split(key, len(layers))
-    return [scale * jax.random.normal(k, (*l.kernel, l.cin, l.cout), dtype)
+    return [scale * jax.random.normal(k, l.weight_shape, dtype)
             for k, l in zip(keys, layers)]

@@ -97,19 +97,21 @@ def dim_numbers(rank: int) -> lax.ConvDimensionNumbers:
 
 
 def deconv_output_shape(in_spatial: Ints, kernel: Ints, stride: Ints,
-                        padding=0) -> tuple[int, ...]:
-    """Eq. (1): O = (I-1)*S + K, then crop ``padding`` from the borders.
+                        padding=0, dilation: Ints | int = 1) -> tuple[int, ...]:
+    """Eq. (1): O = (I-1)*S + K_eff, then crop ``padding`` from the borders.
 
     ``padding`` follows ``canon_padding``: a scalar, per-dim scalars, or
-    per-dim ``(lo, hi)`` pairs (asymmetric crop).
+    per-dim ``(lo, hi)`` pairs (asymmetric crop).  ``dilation`` widens the
+    kernel footprint to ``K_eff = (K-1)*dil + 1``.
     """
     rank = len(in_spatial)
     kernel = _canon(kernel, rank)
     stride = _canon(stride, rank)
+    dilation = _canon(dilation, rank)
     pads = canon_padding(padding, rank)
-    return tuple((i - 1) * s + k - lo - hi
-                 for i, k, s, (lo, hi) in zip(in_spatial, kernel, stride,
-                                              pads))
+    return tuple((i - 1) * s + (k - 1) * d + 1 - lo - hi
+                 for i, k, s, d, (lo, hi) in zip(in_spatial, kernel, stride,
+                                                 dilation, pads))
 
 
 def zero_insert(x: jax.Array, stride: Ints) -> jax.Array:
@@ -188,14 +190,24 @@ def deconv_oom(x: jax.Array, w: jax.Array, stride: Ints, padding: Ints | int = 0
 # ---------------------------------------------------------------------------
 
 def deconv_xla(x: jax.Array, w: jax.Array, stride: Ints, padding: Ints | int = 0,
-               *, preferred_element_type=jnp.float32) -> jax.Array:
+               *, dilation: Ints | int = 1, groups: int = 1,
+               preferred_element_type=jnp.float32) -> jax.Array:
+    """XLA-native deconv; the only METHODS entry generalised to the full
+    layer algebra (kernel ``dilation`` via rhs_dilation, ``groups`` via
+    feature_group_count — w is [*K, Ci/G, Co], the lax grouping convention).
+    The engine routes grouped/dilated layers on any XLA-flavoured method
+    through here."""
     rank = x.ndim - 2
     stride = _canon(stride, rank)
+    dilation = _canon(dilation, rank)
     kernel = w.shape[:rank]
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
     y = lax.conv_general_dilated(
         x, _flip_spatial(w), window_strides=(1,) * rank,
-        padding=[(k - 1, k - 1) for k in kernel],
+        padding=[(k - 1, k - 1) for k in k_eff],
         lhs_dilation=stride,
+        rhs_dilation=dilation,
+        feature_group_count=groups,
         dimension_numbers=dim_numbers(rank),
         preferred_element_type=preferred_element_type)
     return _crop(y, padding)

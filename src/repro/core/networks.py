@@ -37,6 +37,35 @@ def _canon_pads(padding, rank: int) -> tuple[tuple[int, int], ...]:
     return tuple(out)
 
 
+ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Fused layer epilogue: bias-add + activation, executed INSIDE the
+    engine's kernel flush (no separate elementwise pass, no extra HBM
+    round-trip).  ``bias`` records whether the layer owns a bias vector —
+    the weight pytree then carries ``{"w", "b"}`` instead of a bare array.
+    """
+    bias: bool = False
+    activation: str = "none"     # "none" | "relu" | "leaky_relu" | "tanh"
+    alpha: float = 0.2           # leaky_relu negative slope
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}; "
+                             f"expected one of {ACTIVATIONS}")
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.bias and self.activation == "none"
+
+    def describe(self) -> str:
+        parts = (["bias"] if self.bias else []) \
+            + ([self.activation] if self.activation != "none" else [])
+        return "+".join(parts) or "-"
+
+
 @dataclasses.dataclass(frozen=True)
 class UniformLayer:
     """One layer of the uniform engine — a conv OR a deconv.
@@ -45,6 +74,13 @@ class UniformLayer:
     op: for ``op="deconv"`` it is the border CROP applied after the Eq. (1)
     extent (the old ``DeconvLayer.crop``); for ``op="conv"`` it is the
     input padding of the strided convolution.
+
+    ``groups`` splits the channel algebra into independent blocks
+    (depthwise is ``groups == cin``); weights are stored
+    ``[*K, cin/groups, cout]`` (the lax grouping convention — see
+    ``weight_shape``).  ``dilation`` spaces the kernel taps per dim
+    (effective footprint ``(K-1)*dil + 1``).  ``epilogue`` is the fused
+    bias/activation spec the kernels execute at flush.
     """
     name: str
     in_spatial: tuple[int, ...]      # input spatial extent (rank 1..3)
@@ -54,6 +90,9 @@ class UniformLayer:
     stride: tuple[int, ...]
     padding: tuple[tuple[int, int], ...] = ()
     op: str = "deconv"               # "deconv" | "conv"
+    groups: int = 1
+    dilation: tuple[int, ...] = ()
+    epilogue: Epilogue = Epilogue()
 
     def __post_init__(self):
         if self.op not in ("deconv", "conv"):
@@ -63,6 +102,17 @@ class UniformLayer:
             object.__setattr__(self, f, tuple(getattr(self, f)))
         object.__setattr__(self, "padding",
                            _canon_pads(self.padding or 0, self.rank))
+        dil = self.dilation or 1
+        if isinstance(dil, int):
+            dil = (dil,) * self.rank
+        object.__setattr__(self, "dilation", tuple(int(d) for d in dil))
+        assert len(self.dilation) == self.rank, (self.dilation, self.rank)
+        if self.epilogue is None:
+            object.__setattr__(self, "epilogue", Epilogue())
+        if self.cin % self.groups or self.cout % self.groups:
+            raise ValueError(
+                f"{self.name}: groups={self.groups} must divide "
+                f"cin={self.cin} and cout={self.cout}")
 
     @property
     def rank(self) -> int:
@@ -74,8 +124,19 @@ class UniformLayer:
         return self.padding
 
     @property
+    def effective_kernel(self) -> tuple[int, ...]:
+        return tuple((k - 1) * d + 1
+                     for k, d in zip(self.kernel, self.dilation))
+
+    @property
+    def weight_shape(self) -> tuple[int, ...]:
+        """[*K, cin/groups, cout] — the engine's weight layout."""
+        return (*self.kernel, self.cin // self.groups, self.cout)
+
+    @property
     def out_spatial(self) -> tuple[int, ...]:
-        z = zip(self.in_spatial, self.stride, self.kernel, self.padding)
+        z = zip(self.in_spatial, self.stride, self.effective_kernel,
+                self.padding)
         if self.op == "deconv":
             return tuple((i - 1) * s + k - lo - hi for i, s, k, (lo, hi) in z)
         return tuple((i + lo + hi - k) // s + 1 for i, s, k, (lo, hi) in z)
@@ -85,10 +146,12 @@ class UniformLayer:
         """MACs the engine actually executes — all valid under IOM.
 
         Deconv: every input activation x the full kernel (paper Fig. 5);
-        conv: every output activation x the full kernel.
+        conv: every output activation x the full kernel.  Grouping divides
+        the channel contraction by ``groups``.
         """
         sp = self.in_spatial if self.op == "deconv" else self.out_spatial
-        return math.prod(sp) * math.prod(self.kernel) * self.cin * self.cout
+        return (math.prod(sp) * math.prod(self.kernel)
+                * (self.cin // self.groups) * self.cout)
 
     @property
     def oom_macs(self) -> int:
@@ -100,8 +163,9 @@ class UniformLayer:
             return self.valid_macs
         full = tuple((i - 1) * s + k
                      for i, s, k in zip(self.in_spatial, self.stride,
-                                        self.kernel))
-        return math.prod(full) * math.prod(self.kernel) * self.cin * self.cout
+                                        self.effective_kernel))
+        return (math.prod(full) * math.prod(self.kernel)
+                * (self.cin // self.groups) * self.cout)
 
     @property
     def ops(self) -> int:
@@ -112,7 +176,8 @@ class UniformLayer:
         """Off-chip traffic: read input + weights, write output (once each)."""
         b = data_width_bits // 8
         inp = math.prod(self.in_spatial) * self.cin
-        wgt = math.prod(self.kernel) * self.cin * self.cout
+        wgt = (math.prod(self.kernel) * (self.cin // self.groups) * self.cout
+               + (self.cout if self.epilogue.bias else 0))
         out = math.prod(self.out_spatial) * self.cout
         return b * (inp + wgt + out)
 
@@ -227,3 +292,210 @@ BENCHMARKS = {
 
 def benchmark_layers(name: str) -> list[UniformLayer]:
     return BENCHMARKS[name]()
+
+
+# -- DAG networks -----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MergeNode:
+    """A DAG merge point: concatenate predecessor outputs along channels
+    (``kind="concat"``, spatial extents must match) or add them elementwise
+    (``kind="add"``, spatial AND channels must match)."""
+    name: str
+    kind: str = "concat"             # "concat" | "add"
+
+    def __post_init__(self):
+        if self.kind not in ("concat", "add"):
+            raise ValueError(f"unknown merge kind {self.kind!r}; expected "
+                             f"'concat' | 'add'")
+
+
+class UniformGraph:
+    """A DAG of ``UniformLayer`` and ``MergeNode`` nodes for the engine.
+
+    ``nodes`` is a sequence of layer/merge specs; ``edges`` maps each node
+    name to its predecessor names in consumption order (the sentinel
+    ``UniformGraph.INPUT`` is the graph input).  Layers take exactly one
+    predecessor, merges two or more.  Construction topologically sorts the
+    DAG and validates every edge's (spatial, channels) shape, so a graph
+    that builds is a graph the engine can schedule.
+    """
+
+    INPUT = "input"
+
+    def __init__(self, nodes, edges, output: str | None = None):
+        self.nodes: dict[str, UniformLayer | MergeNode] = {}
+        for nd in nodes:
+            if nd.name == self.INPUT or nd.name in self.nodes:
+                raise ValueError(f"duplicate/reserved node name {nd.name!r}")
+            self.nodes[nd.name] = nd
+        self.edges: dict[str, tuple[str, ...]] = {}
+        for name, preds in edges.items():
+            if name not in self.nodes:
+                raise ValueError(f"edge for unknown node {name!r}")
+            self.edges[name] = (preds,) if isinstance(preds, str) \
+                else tuple(preds)
+        for name, nd in self.nodes.items():
+            preds = self.edges.get(name)
+            if preds is None:
+                raise ValueError(f"node {name!r} has no incoming edge")
+            if isinstance(nd, MergeNode) and len(preds) < 2:
+                raise ValueError(f"merge {name!r} needs >= 2 inputs, "
+                                 f"got {preds}")
+            if isinstance(nd, UniformLayer) and len(preds) != 1:
+                raise ValueError(f"layer {name!r} takes exactly one input, "
+                                 f"got {preds}")
+            for p in preds:
+                if p != self.INPUT and p not in self.nodes:
+                    raise ValueError(f"{name!r} consumes unknown node {p!r}")
+        self.order = self._topo_sort()
+        self.output = output if output is not None else self.order[-1]
+        if self.output not in self.nodes:
+            raise ValueError(f"unknown output node {self.output!r}")
+        self._shapes = self._infer_shapes()
+
+    def _topo_sort(self) -> list[str]:
+        indeg = {name: sum(p != self.INPUT for p in preds)
+                 for name, preds in self.edges.items()}
+        succs: dict[str, list[str]] = {name: [] for name in self.nodes}
+        for name, preds in self.edges.items():
+            for p in preds:
+                if p != self.INPUT:
+                    succs[p].append(name)
+        ready = [n for n, d in indeg.items() if d == 0]
+        order = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for s in succs[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        if len(order) != len(self.nodes):
+            cyc = sorted(set(self.nodes) - set(order))
+            raise ValueError(f"graph has a cycle through {cyc}")
+        return order
+
+    def _infer_shapes(self):
+        shapes: dict[str, tuple[tuple[int, ...], int]] = {}
+        # anchor the graph-input shape on the layers that consume it
+        for name, nd in self.nodes.items():
+            if isinstance(nd, UniformLayer) \
+                    and self.INPUT in self.edges[name]:
+                got = (nd.in_spatial, nd.cin)
+                if shapes.setdefault(self.INPUT, got) != got:
+                    raise ValueError(
+                        f"graph breaks at {name!r}: input consumers "
+                        f"disagree on the graph-input shape "
+                        f"({shapes[self.INPUT]} vs {got})")
+        for name in self.order:
+            nd = self.nodes[name]
+            pin = [shapes.get(p) for p in self.edges[name]]
+            if isinstance(nd, UniformLayer):
+                got = pin[0]
+                if got is not None and got != (nd.in_spatial, nd.cin):
+                    raise ValueError(
+                        f"graph breaks at {name!r}: expects "
+                        f"{(nd.in_spatial, nd.cin)}, predecessor "
+                        f"{self.edges[name][0]!r} produces {got}")
+                shapes[name] = (nd.out_spatial, nd.cout)
+                continue
+            if any(p is None for p in pin):
+                raise ValueError(
+                    f"merge {name!r} consumes the graph input but no layer "
+                    f"anchors its shape")
+            sps = [sp for sp, _ in pin]
+            if any(sp != sps[0] for sp in sps):
+                raise ValueError(f"merge {name!r} spatial mismatch: {sps}")
+            chans = [c for _, c in pin]
+            if nd.kind == "concat":
+                shapes[name] = (sps[0], sum(chans))
+            else:
+                if any(c != chans[0] for c in chans):
+                    raise ValueError(
+                        f"add-merge {name!r} channel mismatch: {chans}")
+                shapes[name] = (sps[0], chans[0])
+        return shapes
+
+    def node_shape(self, name: str) -> tuple[tuple[int, ...], int]:
+        """(spatial, channels) produced by ``name`` (or the graph input)."""
+        return self._shapes[name]
+
+    @property
+    def in_shape(self) -> tuple[tuple[int, ...], int]:
+        return self._shapes[self.INPUT]
+
+    @property
+    def out_shape(self) -> tuple[tuple[int, ...], int]:
+        return self._shapes[self.output]
+
+    @property
+    def layers(self) -> list[UniformLayer]:
+        """The layer nodes in schedule (topological) order."""
+        return [self.nodes[n] for n in self.order
+                if isinstance(self.nodes[n], UniformLayer)]
+
+
+def chain_graph(layers: Sequence[UniformLayer]) -> UniformGraph:
+    """Lift a linear chain into a ``UniformGraph`` (layer i feeds i+1)."""
+    edges, prev = {}, UniformGraph.INPUT
+    for l in layers:
+        edges[l.name] = (prev,)
+        prev = l.name
+    return UniformGraph(list(layers), edges)
+
+
+def vnet_graph(in_spatial=(128, 128, 64), chans=(16, 32, 64, 128, 256),
+               cin: int = 1, num_classes: int = 2,
+               name: str = "vnet") -> UniformGraph:
+    """Full V-Net (Milletari et al.) as ONE engine graph: encoder convs,
+    decoder deconvs, REAL skip concatenations (``MergeNode``) and merge
+    convs, each with its relu epilogue fused, ending in the 1x1x1 head.
+
+    Spatial extents must stay even through the encoder so the stride-2
+    deconvs re-align with their skips exactly (the (0, 1) crop is the
+    exact-doubling convention).
+    """
+    rank = len(in_spatial)
+    relu = Epilogue(activation="relu")
+    nodes: list[UniformLayer | MergeNode] = []
+    edges: dict[str, tuple[str, ...]] = {}
+    prev, sp, ci = UniformGraph.INPUT, tuple(in_spatial), cin
+    enc_out = []                       # (name, channels, spatial) per stage
+    for i, co in enumerate(chans):
+        stride = (1,) * rank if i == 0 else (2,) * rank
+        if i > 0 and any(v % 2 for v in sp):
+            raise ValueError(f"vnet_graph needs even spatial at every "
+                             f"downsample; stage {i} sees {sp}")
+        lay = UniformLayer(name=f"{name}.enc{i + 1}", in_spatial=sp, cin=ci,
+                           cout=co, kernel=(3,) * rank, stride=stride,
+                           padding=((1, 1),) * rank, op="conv",
+                           epilogue=relu)
+        nodes.append(lay)
+        edges[lay.name] = (prev,)
+        prev, sp, ci = lay.name, lay.out_spatial, co
+        enc_out.append((lay.name, co, sp))
+    for i, (skip_name, skip_c, skip_sp) in enumerate(reversed(enc_out[:-1])):
+        up = UniformLayer(name=f"{name}.up{i + 1}", in_spatial=sp, cin=ci,
+                          cout=skip_c, kernel=(3,) * rank,
+                          stride=(2,) * rank, padding=((0, 1),) * rank,
+                          op="deconv", epilogue=relu)
+        nodes.append(up)
+        edges[up.name] = (prev,)
+        cat = MergeNode(name=f"{name}.skip{i + 1}", kind="concat")
+        nodes.append(cat)
+        edges[cat.name] = (up.name, skip_name)
+        merge = UniformLayer(name=f"{name}.merge{i + 1}", in_spatial=skip_sp,
+                             cin=2 * skip_c, cout=skip_c,
+                             kernel=(3,) * rank, stride=(1,) * rank,
+                             padding=((1, 1),) * rank, op="conv",
+                             epilogue=relu)
+        nodes.append(merge)
+        edges[merge.name] = (cat.name,)
+        prev, sp, ci = merge.name, skip_sp, skip_c
+    head = UniformLayer(name=f"{name}.head", in_spatial=sp, cin=ci,
+                        cout=num_classes, kernel=(1,) * rank,
+                        stride=(1,) * rank, padding=0, op="conv")
+    nodes.append(head)
+    edges[head.name] = (prev,)
+    return UniformGraph(nodes, edges, output=head.name)

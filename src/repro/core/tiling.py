@@ -179,7 +179,9 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
                        block_co: int | None = None,
                        allow_split: bool = True,
                        backward: bool = False,
-                       in_dtype_bytes: int = 2) -> DeconvTilePlan:
+                       in_dtype_bytes: int = 2,
+                       groups: int = 1,
+                       dilation=None) -> DeconvTilePlan:
     """Jointly pick ``(dtile, block_ci, block_co)`` against the VMEM budget.
 
     The SHARED planner entry for both directions of the uniform engine:
@@ -204,6 +206,12 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
     The planned leading extent includes ``ceil(K_d/S_d) - 1`` rows of zero
     slack so the final tile's halo carry-out is structurally zero (the
     kernels' contract); ``n_dtiles * dtile`` always covers it.
+
+    ``groups`` blocks the channel grid PER GROUP: the default channel
+    blocks come from the per-group channel counts (so a depthwise layer
+    plans 1-wide ci blocks and each group's blocks independently respect
+    the budget); ``dilation`` widens every kernel footprint in the byte
+    model to the effective extent.
     """
     from repro.kernels.deconv import kernel as _k  # local: avoids a cycle
 
@@ -211,12 +219,14 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
         from repro.core.engine import conv_output_shape
         from repro.kernels.conv import kernel as _ck
 
-        out_sp = conv_output_shape(in_spatial, kernel, stride)
+        out_sp = conv_output_shape(in_spatial, kernel, stride,
+                                   dilation=dilation)
         d = out_sp[0]
 
         def step_bytes(dt, ci, co):
             bytes_ = _ck.vmem_bytes(out_sp, kernel, stride, ci, co,
-                                    in_dtype_bytes, dtile=dt)
+                                    in_dtype_bytes, dtile=dt,
+                                    dilation=dilation)
             if backward:
                 # conv's dx is the deconv-forward kernel over dy and its dw
                 # the deconv dw kernel — both with channel roles swapped
@@ -224,27 +234,31 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
                 bytes_ = max(
                     bytes_,
                     _k.vmem_bytes(out_sp, kernel, stride, co, ci,
-                                  in_dtype_bytes, dtile=dt),
+                                  in_dtype_bytes, dtile=dt,
+                                  dilation=dilation),
                     _k.vmem_bytes_dw(out_sp, kernel, stride, co, ci,
-                                     in_dtype_bytes, dtile=dt))
+                                     in_dtype_bytes, dtile=dt,
+                                     dilation=dilation))
             return bytes_
     elif mode == "deconv":
         d = in_spatial[0]
 
         def step_bytes(dt, ci, co):
             bytes_ = _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
-                                   in_dtype_bytes, dtile=dt)
+                                   in_dtype_bytes, dtile=dt,
+                                   dilation=dilation)
             if backward:
                 bytes_ = max(bytes_, _k.vmem_bytes_bwd(
                     in_spatial, kernel, stride, ci, co, in_dtype_bytes,
-                    dtile=dt))
+                    dtile=dt, dilation=dilation))
             return bytes_
     else:
         raise ValueError(f"unknown mode {mode!r}; expected 'deconv'|'conv'")
 
-    d_eff = d + _k.halo_depth(kernel, stride)
-    bci = block_ci or min(cin, 128)
-    bco = block_co or min(cout, 128)
+    d_eff = d + _k.halo_depth(kernel, stride, dilation)
+    assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
+    bci = block_ci or min(max(cin // groups, 1), 128)
+    bco = block_co or min(max(cout // groups, 1), 128)
 
     dtile = d_eff
     if allow_split:

@@ -32,68 +32,154 @@ CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
-def phase_geometry(kernel, stride):
-    """Static geometry: M_max (taps per phase per dim) and acc lengths."""
-    return tuple(-(-k // s) for k, s in zip(kernel, stride))
+def canon_dilation(dilation, rank):
+    """None / int / seq -> rank-length tuple of per-dim dilation factors."""
+    if dilation is None:
+        return (1,) * rank
+    return tuple(_canon(dilation, rank))
 
 
-def halo_depth(kernel, stride) -> int:
+def effective_kernel(kernel, dilation=None):
+    """Dilated footprint per dim: K_eff = (K - 1) * dil + 1."""
+    dil = canon_dilation(dilation, len(kernel))
+    return tuple((k - 1) * d + 1 for k, d in zip(kernel, dil))
+
+
+def _dim_tap_table(k, s, d):
+    """Per-dim polyphase map: phase p -> sorted [(m, k_idx), ...].
+
+    Kernel element ``k_idx`` of a dilation-``d`` kernel sits at effective
+    offset ``e = k_idx * d``; under stride ``s`` it lands in phase
+    ``e % s`` as tap ``m = e // s``.  Distinct elements get distinct
+    (p, m) pairs, and under dilation some phases may receive no taps at
+    all (structural zeros).
+    """
+    table = {}
+    for ki in range(k):
+        e = ki * d
+        table.setdefault(e % s, []).append((e // s, ki))
+    return table
+
+
+def phase_geometry(kernel, stride, dilation=None):
+    """Static geometry: M_max (taps per phase per dim) and acc lengths.
+
+    With dilation the deepest tap of any phase is ``((K-1)*dil) // S``; at
+    dil=1 this reduces to the familiar ``ceil(K/S)``.
+    """
+    dil = canon_dilation(dilation, len(kernel))
+    return tuple(((k - 1) * d) // s + 1
+                 for k, s, d in zip(kernel, stride, dil))
+
+
+def halo_depth(kernel, stride, dilation=None) -> int:
     """Phase rows adjacent leading-dim tiles exchange (FIFO-D carry depth)."""
-    return -(-kernel[0] // stride[0]) - 1
+    return phase_geometry(kernel, stride, dilation)[0] - 1
 
 
-def phase_taps(kernel, stride):
+def phase_taps(kernel, stride, dilation=None):
     """Static (phase_index, phase, valid taps) triples; empty phases skipped.
 
-    A tap ``m`` of phase ``p`` touches kernel element ``k = m*S + p``; taps
-    with any ``k >= K`` are the zero-padded tail and carry no MACs, so they
-    are dropped here at trace time.  Summed over phases the surviving taps
-    number exactly K^d — the IOM valid-MAC count.
+    A tap ``m`` of phase ``p`` touches the kernel element whose *effective*
+    offset is ``e = m*S + p``; under dilation only offsets divisible by the
+    per-dim factor carry a weight, so each phase's tap list is the cross
+    product of the per-dim polyphase tables.  Summed over phases the
+    surviving taps number exactly K^d — the IOM valid-MAC count.
     """
-    m_max = phase_geometry(kernel, stride)
+    dil = canon_dilation(dilation, len(kernel))
+    tables = [_dim_tap_table(k, s, d)
+              for k, s, d in zip(kernel, stride, dil)]
     out = []
     for p_idx, p in enumerate(itertools.product(*(range(s) for s in stride))):
-        taps = [m for m in itertools.product(*(range(mm) for mm in m_max))
-                if all(mj * sj + pj < kj
-                       for mj, sj, pj, kj in zip(m, stride, p, kernel))]
-        if taps:  # S > K leaves phases with no taps (structural zeros)
-            out.append((p_idx, p, taps))
+        dim_taps = [t.get(pj) for t, pj in zip(tables, p)]
+        if any(dt is None for dt in dim_taps):
+            continue  # structural-zero phase (S > K, or dilation gaps)
+        taps = [tuple(m for m, _ in combo)
+                for combo in itertools.product(*dim_taps)]
+        out.append((p_idx, p, taps))
     return out
 
 
-def phase_major_tap_index(kernel, stride):
+def phase_major_tap_index(kernel, stride, dilation=None):
     """Flat kernel-element indices ordered phase-major (the weight layout).
 
     The caller gathers ``w.reshape(prod(K), ci, co)[index]`` so each phase's
     valid taps sit contiguously: the kernel bodies then feed a whole phase
     to the MXU with ONE static slice — no per-tap loads, no zero-padded
     Kpad tail.  Total length is exactly prod(K): every kernel element
-    belongs to exactly one phase.
+    belongs to exactly one phase.  Must stay in lock-step with the tap
+    order ``phase_taps`` emits.
     """
+    dil = canon_dilation(dilation, len(kernel))
+    tables = [_dim_tap_table(k, s, d)
+              for k, s, d in zip(kernel, stride, dil)]
     idx = []
-    for _, p, taps in phase_taps(kernel, stride):
-        for m in taps:
-            k = tuple(mj * sj + pj for mj, sj, pj in zip(m, stride, p))
+    for p in itertools.product(*(range(s) for s in stride)):
+        dim_taps = [t.get(pj) for t, pj in zip(tables, p)]
+        if any(dt is None for dt in dim_taps):
+            continue
+        for combo in itertools.product(*dim_taps):
             flat = 0
-            for kj, kk in zip(k, kernel):
+            for (_, kj), kk in zip(combo, kernel):
                 flat = flat * kk + kj
             idx.append(flat)
     assert len(idx) == math.prod(kernel)
     return idx
 
 
-def phase_major_inverse(kernel, stride):
+def phase_major_inverse(kernel, stride, dilation=None):
     """Inverse of ``phase_major_tap_index`` — unscrambles dw outputs.
 
     The dw kernel emits taps phase-major; indexing its output with this
     permutation restores kernel-element order (both ops layers' backwards
     use it).
     """
-    perm = phase_major_tap_index(kernel, stride)
+    perm = phase_major_tap_index(kernel, stride, dilation)
     inv = [0] * len(perm)
     for pos, j in enumerate(perm):
         inv[j] = pos
     return inv
+
+
+# -- Fused epilogue (bias + activation inside the kernel flush) --------------
+
+ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
+
+
+def apply_epilogue(y, bias, activation, alpha=0.2):
+    """Bias-add + activation, applied to a completed accumulator value.
+
+    Runs inside the kernel flush (values, not refs) and on the host for the
+    XLA-flavoured engines — one definition so the two paths cannot drift.
+    ``bias`` broadcasts over everything but the trailing channel dim.
+    """
+    if bias is not None:
+        y = y + bias.reshape((1,) * (y.ndim - 1) + (-1,)).astype(y.dtype)
+    if activation == "relu":
+        y = jnp.maximum(y, 0)
+    elif activation == "leaky_relu":
+        y = jnp.where(y > 0, y, jnp.asarray(alpha, y.dtype) * y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def activation_grad_from_output(y, activation, alpha=0.2):
+    """d(act)/d(pre-activation) computed from the *output* y = act(pre).
+
+    All supported activations are invertible enough for this: relu and
+    leaky_relu keep the sign of the pre-activation, tanh' = 1 - y^2.
+    Returns None for the identity (no rescaling needed).
+    """
+    if activation == "relu":
+        return (y > 0).astype(y.dtype)
+    if activation == "leaky_relu":
+        return jnp.where(y > 0, jnp.ones_like(y), jnp.full_like(y, alpha))
+    if activation == "tanh":
+        return (1 - y * y).astype(y.dtype)
+    return None
 
 
 def default_interpret() -> bool:
@@ -115,7 +201,42 @@ def pad_axis_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-def phase_major_weights(w3, kernel3, stride3):
+def pad_group_axis(x, axis, groups, mult):
+    """Pad each of ``groups`` equal chunks along ``axis`` to a multiple.
+
+    The grouped kernels block the channel grid *per group*, so padding must
+    land at the tail of every group chunk — a flat ``pad_axis_to`` would
+    misalign every group after the first.  ``groups == 1`` degenerates to
+    ``pad_axis_to``.
+    """
+    axis = axis % x.ndim
+    per = x.shape[axis] // groups
+    pad = (-per) % mult
+    if pad == 0:
+        return x
+    shape = x.shape[:axis] + (groups, per) + x.shape[axis + 1:]
+    widths = [(0, 0)] * (x.ndim + 1)
+    widths[axis + 1] = (0, pad)
+    xg = jnp.pad(x.reshape(shape), widths)
+    return xg.reshape(x.shape[:axis] + (groups * (per + pad),)
+                      + x.shape[axis + 1:])
+
+
+def crop_group_axis(x, axis, groups, per):
+    """Inverse of ``pad_group_axis``: keep the first ``per`` of each chunk."""
+    axis = axis % x.ndim
+    padded = x.shape[axis] // groups
+    if padded == per:
+        return x
+    shape = x.shape[:axis] + (groups, padded) + x.shape[axis + 1:]
+    xg = x.reshape(shape)
+    sl = [slice(None)] * xg.ndim
+    sl[axis + 1] = slice(0, per)
+    xg = xg[tuple(sl)]
+    return xg.reshape(x.shape[:axis] + (groups * per,) + x.shape[axis + 1:])
+
+
+def phase_major_weights(w3, kernel3, stride3, dilation3=None):
     """[K..., a, b] -> [prod(K), a, b] in phase-major tap order.
 
     Each phase's valid taps land contiguously, so the kernel bodies slice a
@@ -124,9 +245,21 @@ def phase_major_weights(w3, kernel3, stride3):
     XLA; the trailing two dims are whatever channel pair the caller uses
     ([ci, co] for deconv, [co, ci] for the forward conv).
     """
-    idx = phase_major_tap_index(kernel3, stride3)
+    idx = phase_major_tap_index(kernel3, stride3, dilation3)
     flat = w3.reshape(-1, *w3.shape[3:])
     return flat[jnp.asarray(idx)]
+
+
+def lift_tuple3(vals, rank, fill=1):
+    """Lift a rank-length per-dim tuple to rank 3 the way ``lift_3d`` lifts
+    activations: rank 2 puts the singleton in the MIDDLE, rank 1 leads with
+    two.  Used for dilation (and any future per-dim knob)."""
+    vals = tuple(vals)
+    if rank == 3:
+        return vals
+    if rank == 2:
+        return (vals[0], fill, vals[1])
+    return (fill, fill, vals[0])
 
 
 def lift_3d(x, w, stride):

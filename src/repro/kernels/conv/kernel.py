@@ -49,26 +49,39 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import (
     CompilerParams,
+    apply_epilogue,
     halo_depth,
     phase_geometry,
     phase_taps,
 )
 
 
-def _conv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
-                      tile_spatial, kernel, stride, n_ci_blocks, out_dtype):
+def _conv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
+                      n_ci_blocks, out_dtype, has_bias=False,
+                      activation="none", alpha=0.2):
     """One grid step: a (batch, co-block, d-tile, ci-block) partial conv.
 
     x_ref:   [1, dtile*S_d, IH, IW, bci]   (aligned input slab of tile t)
     w_ref:   [prod(K), bco, bci]           (phase-major tap order)
+    b_ref:   [1, bco]                      (only when ``has_bias``)
     o_ref:   [1, dtile, OH, OW, bco]       (this tile's output slab)
     acc_ref: VMEM f32 [dtile + M_d - 1, OH, OW, bco]
     halo_ref: VMEM f32 [M_d - 1, OH, OW, bco] (None if M_d == 1)
+
+    The epilogue (bias + activation) runs in ``_flush`` — after the Cin
+    adder tree completes AND after the reversed FIFO-D carry-in, so it sees
+    the finished f32 accumulation, never a partial sum.
     """
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref, acc_ref, *rest = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref, *rest = refs
+        b_ref = None
+    halo_ref = rest[0] if rest else None
     r = pl.program_id(2)
     cb = pl.program_id(3)
-    m_max = phase_geometry(kernel, stride)
-    halo = halo_depth(kernel, stride)
+    m_max = phase_geometry(kernel, stride, dilation)
+    halo = halo_depth(kernel, stride, dilation)
     dtile, oh, ow = tile_spatial
 
     @pl.when(cb == 0)
@@ -79,7 +92,7 @@ def _conv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
     bci = x.shape[-1]
 
     off = 0
-    for _, p, taps in phase_taps(kernel, stride):
+    for _, p, taps in phase_taps(kernel, stride, dilation):
         # gather input phase p once: x_ph[u] = x[u*S + p]
         x_ph = x[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
         lh, lw = x_ph.shape[1], x_ph.shape[2]
@@ -112,57 +125,85 @@ def _conv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
 
     @pl.when(cb == n_ci_blocks - 1)
     def _flush():
-        o_ref[0] = acc_ref[halo:].astype(out_dtype)
+        y = apply_epilogue(acc_ref[halo:],
+                           b_ref[0] if b_ref is not None else None,
+                           activation, alpha)
+        o_ref[0] = y.astype(out_dtype)
 
 
 def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                    kernel: Sequence[int], stride: Sequence[int],
                    block_ci: int, block_co: int, dtile: int,
+                   dilation: Sequence[int] | None = None,
+                   groups: int = 1,
+                   bias: jax.Array | None = None,
+                   activation: str = "none", alpha: float = 0.2,
                    interpret: bool = True,
                    out_dtype=None) -> jax.Array:
     """Uniform strided conv on rank-3 canonical layout — one ``pallas_call``.
 
     x: [N, n_dtiles*dtile*S_d, IH, IW, Ci] — the (lo, hi)-padded input,
     zero-padded on the leading dim to the tile grid (ops.py pads); trailing
-    extents are consumed VALID, so OH/OW = (I - K)//S + 1 statically.
-    w_taps: [prod(K), Co, Ci] in the phase-major tap order of
+    extents are consumed VALID, so OH/OW = (I - K_eff)//S + 1 statically.
+    w_taps: [prod(K), Co, Ci/G] in the phase-major tap order of
     ``kernels.common.phase_major_tap_index`` (ops.py gathers it), output
-    channels leading — the contraction runs over the trailing Ci.  Returns
-    [N, n_dtiles*dtile, OH, OW, Co]; rows at or beyond the true output
-    extent are cropped by the caller.
+    channels leading — the contraction runs over the trailing per-group Ci.
+    ``groups`` blocks the channel grid per group: the co grid dim still
+    enumerates ALL output blocks while the inner ci dim spans one group's
+    input blocks, and the x index map routes each output block to its
+    group's input slab — grouped/depthwise layers stay ONE pallas_call.
+    ``bias``/``activation`` fuse the layer epilogue into the kernel flush.
+    Returns [N, n_dtiles*dtile, OH, OW, Co]; rows at or beyond the true
+    output extent are cropped by the caller.
     """
     n, d_in, ih, iw, ci = x.shape
     co = w_taps.shape[1]
     kernel = tuple(kernel)
     stride = tuple(stride)
+    dilation = tuple(dilation) if dilation is not None else (1,) * len(kernel)
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
     out_dtype = out_dtype or x.dtype
     assert d_in % (dtile * stride[0]) == 0, (d_in, dtile, stride)
     n_dt = d_in // (dtile * stride[0])
-    oh = (ih - kernel[1]) // stride[1] + 1
-    ow = (iw - kernel[2]) // stride[2] + 1
-    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
-                                                       block_ci, block_co)
-    n_ci, n_co = ci // block_ci, co // block_co
-    halo = halo_depth(kernel, stride)
+    oh = (ih - k_eff[1]) // stride[1] + 1
+    ow = (iw - k_eff[2]) // stride[2] + 1
+    assert ci % groups == 0 and co % groups == 0, (ci, co, groups)
+    cig = ci // groups
+    assert cig % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                        block_ci, block_co)
+    n_ci, n_co = cig // block_ci, co // block_co
+    assert n_co % groups == 0, (n_co, groups)
+    nco_g = n_co // groups              # output blocks per group
+    halo = halo_depth(kernel, stride, dilation)
     tile_spatial = (dtile, oh, ow)
 
     body = functools.partial(
         _conv_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
-        stride=stride, n_ci_blocks=n_ci, out_dtype=out_dtype)
+        stride=stride, dilation=dilation, n_ci_blocks=n_ci,
+        out_dtype=out_dtype, has_bias=bias is not None,
+        activation=activation, alpha=alpha)
     scratch = [pltpu.VMEM((dtile + halo, oh, ow, block_co), jnp.float32)]
     if halo:
         scratch.append(pltpu.VMEM((halo, oh, ow, block_co), jnp.float32))
+
+    in_specs = [
+        pl.BlockSpec((1, dtile * stride[0], ih, iw, block_ci),
+                     lambda b, oc, t, ic: (b, n_dt - 1 - t, 0, 0,
+                                           (oc // nco_g) * n_ci + ic)),
+        pl.BlockSpec((math.prod(kernel), block_co, block_ci),
+                     lambda b, oc, t, ic: (0, oc, ic)),
+    ]
+    operands = [x, w_taps]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_co),
+                                     lambda b, oc, t, ic: (0, oc)))
+        operands.append(bias.reshape(1, co))
 
     grid = (n, n_co, n_dt, n_ci)
     return pl.pallas_call(
         body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, dtile * stride[0], ih, iw, block_ci),
-                         lambda b, oc, t, ic: (b, n_dt - 1 - t, 0, 0, ic)),
-            pl.BlockSpec((math.prod(kernel), block_co, block_ci),
-                         lambda b, oc, t, ic: (0, oc, ic)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, dtile, oh, ow, block_co),
                                lambda b, oc, t, ic: (b, n_dt - 1 - t, 0, 0,
                                                      oc)),
@@ -173,26 +214,32 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary", "arbitrary")),
-    )(x, w_taps)
+    )(*operands)
 
 
 def vmem_bytes(out_spatial, kernel, stride, block_ci, block_co,
-               in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+               in_dtype_bytes: int = 2, dtile: int | None = None,
+               dilation=None) -> int:
     """Static per-grid-step VMEM footprint of ``conv_pallas_3d``.
 
     ``out_spatial`` is the conv OUTPUT extent per dim (the quantity the
     leading-dim tiling counts); models the input slab, weights, output slab,
     f32 accumulator + halo carry, and the tap-batched matmul output of the
-    widest phase.  The deconv backward's dx budget is this same model with
-    the channel roles swapped (see ``kernels.deconv.kernel.vmem_bytes_bwd``).
+    widest phase.  Dilation widens the input slab and halo by the effective
+    kernel footprint.  The deconv backward's dx budget is this same model
+    with the channel roles swapped (see
+    ``kernels.deconv.kernel.vmem_bytes_bwd``).
     """
-    m_max = phase_geometry(kernel, stride)
+    dilation = tuple(dilation) if dilation is not None \
+        else (1,) * len(kernel)
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
+    m_max = phase_geometry(kernel, stride, dilation)
     halo = m_max[0] - 1
     trail = tuple(out_spatial[1:])
     if dtile is None:
         dtile = out_spatial[0] + halo
     in_trail = tuple((o - 1) * s + k
-                     for o, s, k in zip(trail, stride[1:], kernel[1:]))
+                     for o, s, k in zip(trail, stride[1:], k_eff[1:]))
     trail_elems = math.prod(trail)
     in_elems = dtile * stride[0] * math.prod(in_trail)
     out_elems = dtile * trail_elems

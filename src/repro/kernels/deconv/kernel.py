@@ -65,6 +65,7 @@ from jax.experimental.pallas import tpu as pltpu
 # names are kept as aliases for in-repo callers.
 from repro.kernels.common import (  # noqa: F401
     CompilerParams as _CompilerParams,
+    apply_epilogue,
     halo_depth,
     phase_geometry as _phase_geometry,
     phase_major_tap_index,
@@ -72,21 +73,34 @@ from repro.kernels.common import (  # noqa: F401
 )
 
 
-def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
-                        tile_spatial, kernel, stride, out_trailing,
-                        n_ci_blocks, out_dtype):
+def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
+                        out_trailing, n_ci_blocks, out_dtype,
+                        has_bias=False, activation="none", alpha=0.2):
     """One grid step: accumulate a (batch, co-block, d-tile, ci-block) part.
 
     x_ref:   [1, dtile, H, W, bci]
     w_ref:   [prod(K), bci, bco]                  (phase-major tap order)
+    b_ref:   [1, bco]                             (only when ``has_bias``)
     o_ref:   [1, dtile*S_d, OH, OW, bco]          (this tile's output slab)
     acc_ref: VMEM f32 [n_phases, dtile + M_d - 1, L_h, L_w, bco]
     halo_ref: VMEM f32 [n_phases, M_d - 1, L_h, L_w, bco] (None if M_d == 1)
+
+    Under dilation a tap ``m`` of phase ``p`` carries kernel element
+    ``k = (m*S + p)/dil``; phases no kernel element lands in are structural
+    zeros — their accumulator rows stay zero-initialised and interleave as
+    genuine zero output rows.  The fused epilogue runs at ``_flush`` on the
+    completed f32 accumulation (after the FIFO-D carry-in).
     """
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref, acc_ref, *rest = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref, *rest = refs
+        b_ref = None
+    halo_ref = rest[0] if rest else None
     dt = pl.program_id(2)
     ci = pl.program_id(3)
-    m_max = _phase_geometry(kernel, stride)
-    halo = halo_depth(kernel, stride)
+    m_max = _phase_geometry(kernel, stride, dilation)
+    halo = halo_depth(kernel, stride, dilation)
     dtile = tile_spatial[0]
 
     @pl.when(ci == 0)
@@ -99,7 +113,7 @@ def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
     x_flat = x.reshape(dhw, bci)
 
     off = 0
-    for p_idx, p, taps in _phase_taps(kernel, stride):
+    for p_idx, p, taps in _phase_taps(kernel, stride, dilation):
         # Tap-batched MXU dispatch: the phase's valid taps sit contiguously
         # in the phase-major weight layout, so ONE static slice feeds ONE
         # contraction — x_flat [dhw, bci] against [n_taps, bci, bco] is a
@@ -141,13 +155,20 @@ def _deconv_kernel_body(x_ref, w_ref, o_ref, acc_ref, halo_ref=None, *,
         acc = acc.reshape(s_d, s_h, s_w, dtile, lh, lw, bco)
         acc = acc.transpose(3, 0, 4, 1, 5, 2, 6)
         full = acc.reshape(dtile * s_d, lh * s_h, lw * s_w, bco)
-        o_ref[0] = full[:, :out_trailing[0], :out_trailing[1]].astype(out_dtype)
+        y = apply_epilogue(full[:, :out_trailing[0], :out_trailing[1]],
+                           b_ref[0] if b_ref is not None else None,
+                           activation, alpha)
+        o_ref[0] = y.astype(out_dtype)
 
 
 def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      kernel: Sequence[int], stride: Sequence[int],
                      block_ci: int, block_co: int,
                      dtile: int | None = None,
+                     dilation: Sequence[int] | None = None,
+                     groups: int = 1,
+                     bias: jax.Array | None = None,
+                     activation: str = "none", alpha: float = 0.2,
                      interpret: bool = True,
                      out_dtype=None) -> jax.Array:
     """Uniform deconv on rank-3 canonical layout — one call, any input size.
@@ -169,43 +190,60 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     co = w_taps.shape[-1]
     kernel = tuple(kernel)
     stride = tuple(stride)
+    dilation = tuple(dilation) if dilation is not None else (1,) * len(kernel)
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
     out_dtype = out_dtype or x.dtype
     if dtile is None:
         dtile = d_pad
     assert d_pad % dtile == 0, (d_pad, dtile)
     n_dt = d_pad // dtile
-    assert ci % block_ci == 0 and co % block_co == 0, (ci, co, block_ci, block_co)
-    n_ci, n_co = ci // block_ci, co // block_co
+    assert ci % groups == 0 and co % groups == 0, (ci, co, groups)
+    cig = ci // groups
+    assert cig % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                        block_ci, block_co)
+    n_ci, n_co = cig // block_ci, co // block_co
+    assert n_co % groups == 0, (n_co, groups)
+    nco_g = n_co // groups              # output blocks per group
 
-    m_max = _phase_geometry(kernel, stride)
-    halo = halo_depth(kernel, stride)
+    m_max = _phase_geometry(kernel, stride, dilation)
+    halo = halo_depth(kernel, stride, dilation)
     tile_spatial = (dtile, h, wdim)
     lengths = tuple(i + m - 1 for i, m in zip(tile_spatial, m_max))
     n_phases = math.prod(stride)
     out_trailing = tuple((i - 1) * s + k for i, s, k in
-                         zip((h, wdim), stride[1:], kernel[1:]))
+                         zip((h, wdim), stride[1:], k_eff[1:]))
     out_block_lead = dtile * stride[0]
 
     body = functools.partial(
         _deconv_kernel_body,
         tile_spatial=tile_spatial, kernel=kernel, stride=stride,
-        out_trailing=out_trailing, n_ci_blocks=n_ci, out_dtype=out_dtype)
+        dilation=dilation, out_trailing=out_trailing, n_ci_blocks=n_ci,
+        out_dtype=out_dtype, has_bias=bias is not None,
+        activation=activation, alpha=alpha)
 
     scratch = [pltpu.VMEM((n_phases, *lengths, block_co), jnp.float32)]
     if halo:
         scratch.append(
             pltpu.VMEM((n_phases, halo, *lengths[1:], block_co), jnp.float32))
 
+    in_specs = [
+        pl.BlockSpec((1, dtile, h, wdim, block_ci),
+                     lambda b, oc, dt, ic: (b, dt, 0, 0,
+                                            (oc // nco_g) * n_ci + ic)),
+        pl.BlockSpec((math.prod(kernel), block_ci, block_co),
+                     lambda b, oc, dt, ic: (0, ic, oc)),
+    ]
+    operands = [x, w_taps]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_co),
+                                     lambda b, oc, dt, ic: (0, oc)))
+        operands.append(bias.reshape(1, co))
+
     grid = (n, n_co, n_dt, n_ci)
     return pl.pallas_call(
         body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, dtile, h, wdim, block_ci),
-                         lambda b, oc, dt, ic: (b, dt, 0, 0, ic)),
-            pl.BlockSpec((math.prod(kernel), block_ci, block_co),
-                         lambda b, oc, dt, ic: (0, ic, oc)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, out_block_lead, *out_trailing, block_co),
                                lambda b, oc, dt, ic: (b, dt, 0, 0, oc)),
         out_shape=jax.ShapeDtypeStruct(
@@ -215,22 +253,27 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel",
                                  "arbitrary", "arbitrary")),
-    )(x, w_taps)
+    )(*operands)
 
 
 def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
-               in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+               in_dtype_bytes: int = 2, dtile: int | None = None,
+               dilation=None) -> int:
     """Static VMEM footprint of one grid step (for the tiling planner).
 
     ``dtile=None`` is the classic whole-leading-dim accounting; with
     ``dtile`` set it accounts the tiled grid's per-step input/output blocks
-    plus the f32 halo-carry scratch.
+    plus the f32 halo-carry scratch.  Dilation widens the accumulator and
+    output footprints by the effective kernel extent.
     """
-    m_max = _phase_geometry(kernel, stride)
+    dilation = tuple(dilation) if dilation is not None \
+        else (1,) * len(kernel)
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
+    m_max = _phase_geometry(kernel, stride, dilation)
     if dtile is None:
         lengths = tuple(i + m - 1 for i, m in zip(in_spatial, m_max))
         out_spatial = tuple((i - 1) * s + k
-                            for i, s, k in zip(in_spatial, stride, kernel))
+                            for i, s, k in zip(in_spatial, stride, k_eff))
         in_elems = math.prod(in_spatial)
         halo_elems = 0
     else:
@@ -239,7 +282,7 @@ def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
             i + m - 1 for i, m in zip(trail, m_max[1:]))
         out_spatial = (dtile * stride[0],) + tuple(
             (i - 1) * s + k
-            for i, s, k in zip(trail, stride[1:], kernel[1:]))
+            for i, s, k in zip(trail, stride[1:], k_eff[1:]))
         in_elems = dtile * math.prod(trail)
         halo_elems = (math.prod(stride) * (m_max[0] - 1)
                       * math.prod(lengths[1:]))
@@ -257,6 +300,8 @@ def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
 def deconv_dx_pallas_3d(dy: jax.Array, w: jax.Array, *,
                         kernel: Sequence[int], stride: Sequence[int],
                         block_ci: int, block_co: int, dtile: int,
+                        dilation: Sequence[int] | None = None,
+                        groups: int = 1,
                         interpret: bool = True,
                         out_dtype=None) -> jax.Array:
     """dx on the uniform grid: one ``pallas_call``, any dy size.
@@ -283,12 +328,13 @@ def deconv_dx_pallas_3d(dy: jax.Array, w: jax.Array, *,
     return _conv_k.conv_pallas_3d(
         dy, w, kernel=kernel, stride=stride,
         block_ci=block_co, block_co=block_ci, dtile=dtile,
+        dilation=dilation, groups=groups,
         interpret=interpret, out_dtype=out_dtype or dy.dtype)
 
 
 def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
-                           tile_spatial, kernel, stride, n_batch, n_dtiles,
-                           out_dtype):
+                           tile_spatial, kernel, stride, dilation,
+                           n_batch, n_dtiles, out_dtype):
     """One grid step of dw: per-tap [bci, bco] contractions into VMEM.
 
     dw[k, ci, co] = sum_{n, i} x[n, i, ci] * dy[n, i*S+k, co] — for each tap
@@ -313,8 +359,8 @@ def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
     """
     b = pl.program_id(2)
     t = pl.program_id(3)
-    m_max = _phase_geometry(kernel, stride)
-    halo = halo_depth(kernel, stride)
+    m_max = _phase_geometry(kernel, stride, dilation)
+    halo = halo_depth(kernel, stride, dilation)
     dtile, h, wdim = tile_spatial
 
     @pl.when(jnp.logical_and(b == 0, t == 0))
@@ -335,7 +381,7 @@ def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
     bco = dy.shape[-1]
 
     off = 0
-    for _, p, taps in _phase_taps(kernel, stride):
+    for _, p, taps in _phase_taps(kernel, stride, dilation):
         dy_ph = dy[tuple(slice(pj, None, sj) for pj, sj in zip(p, stride))]
         # the phase's taps are a (leading m_d) x (trailing m_h, m_w) grid
         lead = sorted({m[0] for m in taps})
@@ -367,6 +413,8 @@ def _deconv_dw_kernel_body(x_ref, dy_ref, o_ref, acc_ref, xcarry_ref=None, *,
 def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
                         kernel: Sequence[int], stride: Sequence[int],
                         block_ci: int, block_co: int, dtile: int,
+                        dilation: Sequence[int] | None = None,
+                        groups: int = 1,
                         interpret: bool = True,
                         out_dtype=None) -> jax.Array:
     """dw on the uniform grid: one ``pallas_call`` reducing over (N, tiles).
@@ -374,27 +422,36 @@ def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
     x: [N, n_dtiles*dtile, H, W, Ci] (leading dim zero-padded to the tile
     grid — padded rows pair only with padded/zero dy rows, contributing
     nothing); dy: [N, n_dtiles*dtile*S_d, OH, OW, Co] un-cropped and padded
-    likewise.  Returns dw [prod(K), Ci, Co] in PHASE-MAJOR tap order — the
-    caller inverts ``phase_major_tap_index`` and crops channel padding.
+    likewise.  Returns dw [prod(K), Ci/G, Co] in PHASE-MAJOR tap order —
+    with groups, the ci grid dim spans ONE group's input blocks and the x
+    index map routes each co block to its group's slab, so the output IS
+    the grouped weight layout.  The caller inverts
+    ``phase_major_tap_index`` and crops channel padding per group.
     """
     n, d_pad, h, wdim, ci = x.shape
     co = dy.shape[-1]
     kernel = tuple(kernel)
     stride = tuple(stride)
+    dilation = tuple(dilation) if dilation is not None else (1,) * len(kernel)
     out_dtype = out_dtype or x.dtype
     assert d_pad % dtile == 0, (d_pad, dtile)
     n_dt = d_pad // dtile
     assert dy.shape[1] == d_pad * stride[0], (dy.shape, d_pad, stride)
     oh, ow = dy.shape[2], dy.shape[3]
-    assert ci % block_ci == 0 and co % block_co == 0, (ci, co,
-                                                       block_ci, block_co)
-    n_ci, n_co = ci // block_ci, co // block_co
-    halo = halo_depth(kernel, stride)
+    assert ci % groups == 0 and co % groups == 0, (ci, co, groups)
+    cig = ci // groups
+    assert cig % block_ci == 0 and co % block_co == 0, (ci, co,
+                                                        block_ci, block_co)
+    n_ci, n_co = cig // block_ci, co // block_co
+    assert n_co % groups == 0, (n_co, groups)
+    nco_g = n_co // groups
+    halo = halo_depth(kernel, stride, dilation)
     tile_spatial = (dtile, h, wdim)
 
     body = functools.partial(
         _deconv_dw_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
-        stride=stride, n_batch=n, n_dtiles=n_dt, out_dtype=out_dtype)
+        stride=stride, dilation=dilation, n_batch=n, n_dtiles=n_dt,
+        out_dtype=out_dtype)
     n_taps = math.prod(kernel)
     scratch = [pltpu.VMEM((n_taps, block_ci, block_co), jnp.float32)]
     if halo:
@@ -406,13 +463,14 @@ def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, dtile, h, wdim, block_ci),
-                         lambda ic, oc, b, t: (b, t, 0, 0, ic)),
+                         lambda ic, oc, b, t: (b, t, 0, 0,
+                                               (oc // nco_g) * n_ci + ic)),
             pl.BlockSpec((1, dtile * stride[0], oh, ow, block_co),
                          lambda ic, oc, b, t: (b, t, 0, 0, oc)),
         ],
         out_specs=pl.BlockSpec((n_taps, block_ci, block_co),
                                lambda ic, oc, b, t: (0, ic, oc)),
-        out_shape=jax.ShapeDtypeStruct((n_taps, ci, co), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((n_taps, cig, co), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         compiler_params=_CompilerParams(
@@ -422,7 +480,8 @@ def deconv_dw_pallas_3d(x: jax.Array, dy: jax.Array, *,
 
 
 def vmem_bytes_dx(in_spatial, kernel, stride, block_ci, block_co,
-                  in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+                  in_dtype_bytes: int = 2, dtile: int | None = None,
+                  dilation=None) -> int:
     """Static per-grid-step VMEM footprint of the dx VJP kernel.
 
     dx is the engine's strided convolution with the channel roles swapped
@@ -433,23 +492,27 @@ def vmem_bytes_dx(in_spatial, kernel, stride, block_ci, block_co,
     from repro.kernels.conv import kernel as _conv_k  # lazy: avoids a cycle
     return _conv_k.vmem_bytes(in_spatial, kernel, stride,
                               block_co, block_ci, in_dtype_bytes,
-                              dtile=dtile)
+                              dtile=dtile, dilation=dilation)
 
 
 def vmem_bytes_dw(in_spatial, kernel, stride, block_ci, block_co,
-                  in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+                  in_dtype_bytes: int = 2, dtile: int | None = None,
+                  dilation=None) -> int:
     """Static per-grid-step VMEM footprint of the dw VJP kernel.
 
     Models the x slab + dy slab + f32 dw scratch + the f32 x_ext/carry and
     the stacked per-phase window batches of the widest phase.
     """
-    m_max = _phase_geometry(kernel, stride)
+    dilation = tuple(dilation) if dilation is not None \
+        else (1,) * len(kernel)
+    k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
+    m_max = _phase_geometry(kernel, stride, dilation)
     halo = m_max[0] - 1
     trail = tuple(in_spatial[1:])
     if dtile is None:
         dtile = in_spatial[0] + halo
     out_trail = tuple((i - 1) * s + k
-                      for i, s, k in zip(trail, stride[1:], kernel[1:]))
+                      for i, s, k in zip(trail, stride[1:], k_eff[1:]))
     trail_elems = math.prod(trail)
     dy_elems = dtile * stride[0] * math.prod(out_trail)
     x_elems = dtile * trail_elems
@@ -464,13 +527,14 @@ def vmem_bytes_dw(in_spatial, kernel, stride, block_ci, block_co,
 
 
 def vmem_bytes_bwd(in_spatial, kernel, stride, block_ci, block_co,
-                   in_dtype_bytes: int = 2, dtile: int | None = None) -> int:
+                   in_dtype_bytes: int = 2, dtile: int | None = None,
+                   dilation=None) -> int:
     """Static per-grid-step VMEM footprint of the two VJP kernels (max).
 
     The planner budgets ``max(forward, dx, dw)`` when asked to plan for
     training; see ``vmem_bytes_dx`` / ``vmem_bytes_dw``.
     """
     return max(vmem_bytes_dx(in_spatial, kernel, stride, block_ci, block_co,
-                             in_dtype_bytes, dtile=dtile),
+                             in_dtype_bytes, dtile=dtile, dilation=dilation),
                vmem_bytes_dw(in_spatial, kernel, stride, block_ci, block_co,
-                             in_dtype_bytes, dtile=dtile))
+                             in_dtype_bytes, dtile=dtile, dilation=dilation))

@@ -41,30 +41,41 @@ _lift_3d = _common.lift_3d
 _default_interpret = _common.default_interpret
 
 
-def _phase_major(w3, kernel3, stride3):
+def _phase_major(w3, kernel3, stride3, dilation3=None):
     """[K..., ci, co] -> [prod(K), ci, co] in phase-major tap order.
 
     Alias of ``kernels.common.phase_major_weights`` — each phase's valid
     taps land contiguously, so the kernel bodies slice a whole phase for
     their tap-batched matmul.
     """
-    return _common.phase_major_weights(w3, kernel3, stride3)
+    return _common.phase_major_weights(w3, kernel3, stride3, dilation3)
 
 
 def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
-               dtile=None, n_dtiles=1, out_dtype=None):
+               dtile=None, n_dtiles=1, out_dtype=None,
+               dilation3=None, groups=1,
+               bias=None, activation="none", alpha=0.2):
     """Pad channels/weights/leading dim and invoke the fused kernel ONCE.
 
     The leading dim is zero-padded to ``n_dtiles * dtile`` — always at least
-    ``ceil(K_d/S_d) - 1`` rows beyond the data, which the kernel's halo
-    contract requires.  Output is cropped back to Eq. (1) extent.
+    ``M_d - 1`` rows beyond the data, which the kernel's halo contract
+    requires.  Output is cropped back to Eq. (1) extent.  ``w3`` is
+    ``[*K, Ci/G, Co]``: the contracted dim is already per-group, the
+    produced dim (and x's channels, and the bias) pad PER GROUP so the
+    kernel's group-blocked channel grid stays aligned.
     """
     ci, co = x3.shape[-1], w3.shape[-1]
-    out3 = deconv_output_shape(x3.shape[1:4], kernel3, stride3, 0)
-    x3 = _pad_axis_to(x3, -1, block_ci)
-    w3 = _pad_axis_to(_pad_axis_to(w3, -1, block_co), -2, block_ci)
-    m_max = tuple(-(-k // s) for k, s in zip(kernel3, stride3))
-    w3 = _phase_major(w3, kernel3, stride3)
+    cog = co // groups
+    dilation3 = tuple(dilation3) if dilation3 is not None else (1, 1, 1)
+    out3 = deconv_output_shape(x3.shape[1:4], kernel3, stride3, 0,
+                               dilation3)
+    x3 = _common.pad_group_axis(x3, -1, groups, block_ci)
+    w3 = _common.pad_group_axis(_pad_axis_to(w3, -2, block_ci), -1,
+                                groups, block_co)
+    m_max = _common.phase_geometry(kernel3, stride3, dilation3)
+    w3 = _phase_major(w3, kernel3, stride3, dilation3)
+    if bias is not None:
+        bias = _common.pad_group_axis(bias.reshape(-1), 0, groups, block_co)
     if dtile is None:
         dtile = x3.shape[1] + m_max[0] - 1
         n_dtiles = 1
@@ -75,9 +86,11 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
     y = _k.deconv_pallas_3d(x3, w3, kernel=kernel3, stride=stride3,
                             block_ci=min(block_ci, x3.shape[-1]),
                             block_co=min(block_co, w3.shape[-1]),
-                            dtile=dtile, interpret=interpret,
+                            dtile=dtile, dilation=dilation3, groups=groups,
+                            bias=bias, activation=activation, alpha=alpha,
+                            interpret=interpret,
                             out_dtype=out_dtype)
-    return y[:, :out3[0], :, :, :co]
+    return _common.crop_group_axis(y[:, :out3[0]], -1, groups, cog)
 
 
 def _resolve(engine):
@@ -87,22 +100,29 @@ def _resolve(engine):
     return cfg, interpret
 
 
-def _deconv_fwd_impl(x, w, stride, padding, engine):
+def _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
+                     alpha, engine):
     cfg, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
+    dil_r = _common.canon_dilation(dilation, rank)
     x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
     kernel3 = w3.shape[:3]
+    dilation3 = _common.lift_tuple3(dil_r, rank)
     in_sp3 = x3.shape[1:4]
 
     plan = engine.plan("deconv", in_sp3, kernel3, stride3,
-                       x3.shape[-1], w3.shape[-1])
+                       x3.shape[-1], w3.shape[-1], groups=groups,
+                       dilation=dilation3)
     y3 = _core_call(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
                     interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles,
-                    out_dtype=cfg.preferred_element_type)
+                    out_dtype=cfg.preferred_element_type,
+                    dilation3=dilation3, groups=groups,
+                    bias=b, activation=activation, alpha=alpha)
 
-    # un-lift and crop ((lo, hi) per dim — asymmetric crops supported)
+    # un-lift and crop ((lo, hi) per dim — asymmetric crops supported);
+    # the fused epilogue commutes with the border crop (elementwise)
     y = jnp.squeeze(y3, axis=squeeze) if squeeze else y3
     if any(lo or hi for lo, hi in pads_r):
         idx = (slice(None),) + tuple(
@@ -113,13 +133,21 @@ def _deconv_fwd_impl(x, w, stride, padding, engine):
     return y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _deconv(x, w, stride, padding, engine):
-    return _deconv_fwd_impl(x, w, stride, padding, engine)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _deconv(x, w, b, stride, padding, dilation, groups, activation, alpha,
+            engine):
+    return _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups,
+                            activation, alpha, engine)
 
 
-def _fwd(x, w, stride, padding, engine):
-    return _deconv(x, w, stride, padding, engine), (x, w)
+def _fwd(x, w, b, stride, padding, dilation, groups, activation, alpha,
+         engine):
+    y = _deconv(x, w, b, stride, padding, dilation, groups, activation,
+                alpha, engine)
+    # the activation gradient is recoverable from the OUTPUT for every
+    # supported activation, so y is the only extra residual — and only
+    # when an activation is actually fused
+    return y, (x, w, b, y if activation != "none" else None)
 
 
 def _bwd_einsum(stride, padding, res, dy):
@@ -155,7 +183,8 @@ def _bwd_einsum(stride, padding, res, dy):
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
-def _bwd(stride, padding, engine, res, dy):
+def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
+         res, dy):
     """Training backward on the uniform Pallas grid.
 
     Deconv's adjoint is a strided convolution, so both cotangents reuse the
@@ -166,12 +195,24 @@ def _bwd(stride, padding, engine, res, dy):
     cached ``engine.plan(..., backward=True)`` decision budgets the working
     sets of both kernels; inputs stay in their storage dtype (accumulation
     is f32 in-kernel — no full-array HBM upcast).
+
+    A fused epilogue peels off first: the activation gradient is computed
+    from the saved OUTPUT (relu -> y>0, leaky -> slope by sign, tanh ->
+    1-y^2), and the bias cotangent is the pre-activation cotangent summed
+    over every non-channel axis.  Grouped layers reshuffle the weight
+    layout so each adjoint contracts only within its own group slab.
     """
-    x, w = res
+    x, w, b, y = res
     _, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
     pads_r = canon_padding(padding, rank)
+    dil_r = _common.canon_dilation(dilation, rank)
+
+    if activation != "none":
+        dy = dy * _common.activation_grad_from_output(y, activation, alpha)
+    db = (dy.sum(axis=tuple(range(dy.ndim - 1))).astype(b.dtype)
+          if b is not None else None)
 
     # un-crop dy back to the full Eq.(1) extent
     if any(lo or hi for lo, hi in pads_r):
@@ -180,42 +221,61 @@ def _bwd(stride, padding, engine, res, dy):
     x3, w3, stride3, squeeze = _lift_3d(x, w, stride_r)
     dy3 = jnp.expand_dims(dy, squeeze) if squeeze else dy
     kernel3 = w3.shape[:3]
+    dilation3 = _common.lift_tuple3(dil_r, rank)
     ci, co = x3.shape[-1], w3.shape[-1]
+    cig, cog = ci // groups, co // groups
 
     plan = engine.plan("deconv", x3.shape[1:4], kernel3, stride3, ci, co,
-                       backward=True)
+                       groups=groups, dilation=dilation3, backward=True)
 
-    # pad channels to the blocks and leading dims to the tile grid: x to
-    # n_dtiles*dtile rows, dy to the matching output extent (the kernels'
-    # alignment contract; zero rows pair only with zeros)
-    x3p = _pad_axis_to(x3, -1, plan.block_ci)
-    w3p = _pad_axis_to(_pad_axis_to(w3, -1, plan.block_co), -2, plan.block_ci)
-    dy3p = _pad_axis_to(dy3, -1, plan.block_co)
+    # pad channels to the blocks (per group, so group slabs stay aligned)
+    # and leading dims to the tile grid: x to n_dtiles*dtile rows, dy to
+    # the matching output extent (the kernels' alignment contract; zero
+    # rows pair only with zeros)
+    x3p = _common.pad_group_axis(x3, -1, groups, plan.block_ci)
+    dy3p = _common.pad_group_axis(dy3, -1, groups, plan.block_co)
     d_pad = plan.n_dtiles * plan.dtile
     x3p = jnp.pad(x3p, [(0, 0), (0, d_pad - x3.shape[1])] + [(0, 0)] * 3)
     dy3p = jnp.pad(dy3p, [(0, 0), (0, d_pad * stride3[0] - dy3.shape[1])]
                    + [(0, 0)] * 3)
 
+    # dx contracts Co within each group and produces ALL Ci: regroup the
+    # padded weight [*K, Ci/G, Co] -> [*K, G*Ci/G, Co/G] so the conv-side
+    # kernel's group-blocked maps pick the right slab
+    w3p = _common.pad_group_axis(_pad_axis_to(w3, -2, plan.block_ci), -1,
+                                 groups, plan.block_co)
+    cig_p, cog_p = w3p.shape[-2], w3p.shape[-1] // groups
+    w3dx = w3p.reshape(*kernel3, cig_p, groups, cog_p)
+    w3dx = jnp.moveaxis(w3dx, -2, -3).reshape(*kernel3, groups * cig_p,
+                                              cog_p)
+
     dx3 = _k.deconv_dx_pallas_3d(
-        dy3p, _phase_major(w3p, kernel3, stride3), kernel=kernel3,
-        stride=stride3, block_ci=plan.block_ci,
-        block_co=plan.block_co, dtile=plan.dtile, interpret=interpret,
-        out_dtype=x.dtype)[:, :x3.shape[1], :, :, :ci]
+        dy3p, _phase_major(w3dx, kernel3, stride3, dilation3),
+        kernel=kernel3, stride=stride3, block_ci=plan.block_ci,
+        block_co=plan.block_co, dtile=plan.dtile, dilation=dilation3,
+        groups=groups, interpret=interpret,
+        out_dtype=x.dtype)[:, :x3.shape[1]]
+    dx3 = _common.crop_group_axis(dx3, -1, groups, cig)
     dw3 = _k.deconv_dw_pallas_3d(
         x3p, dy3p, kernel=kernel3, stride=stride3, block_ci=plan.block_ci,
-        block_co=plan.block_co, dtile=plan.dtile, interpret=interpret,
-        out_dtype=w.dtype)[:, :ci, :co]
+        block_co=plan.block_co, dtile=plan.dtile, dilation=dilation3,
+        groups=groups, interpret=interpret,
+        out_dtype=w.dtype)[:, :cig]
+    dw3 = _common.crop_group_axis(dw3, -1, groups, cog)
     # the kernel emits taps phase-major; invert back to kernel-element order
-    dw3 = dw3[jnp.asarray(_common.phase_major_inverse(kernel3, stride3))]
+    dw3 = dw3[jnp.asarray(_common.phase_major_inverse(kernel3, stride3,
+                                                      dilation3))]
 
     dx = jnp.squeeze(dx3, axis=squeeze) if squeeze else dx3
-    return dx, dw3.reshape(w.shape)
+    return dx, dw3.reshape(w.shape), db
 
 
 _deconv.defvjp(_fwd, _bwd)
 
 
 def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
+           dilation=1, groups: int = 1, bias: jax.Array | None = None,
+           activation: str = "none", alpha: float = 0.2,
            block_ci: int | None = None, block_co: int | None = None,
            interpret: bool | None = None,
            max_tile_bytes: int | None = None,
@@ -223,11 +283,14 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
            engine=None) -> jax.Array:
     """Public op: uniform 1D/2D/3D IOM deconvolution via the Pallas kernel.
 
-    x: [N, *spatial, Cin]; w: [*K, Cin, Cout]; returns channels-last output
-    of extent (I-1)*S + K - lo - hi per dim.  ``padding`` is a scalar,
-    per-dim scalars, or per-dim ``(lo, hi)`` pairs (the
-    ``UniformLayer.padding`` convention — ``((0, 1),) * rank`` crops to
-    exact doubling).
+    x: [N, *spatial, Cin]; w: [*K, Cin/groups, Cout]; returns channels-last
+    output of extent (I-1)*S + (K-1)*dilation + 1 - lo - hi per dim.
+    ``padding`` is a scalar, per-dim scalars, or per-dim ``(lo, hi)`` pairs
+    (the ``UniformLayer.padding`` convention — ``((0, 1),) * rank`` crops
+    to exact doubling).  ``groups`` blocks channels lax-style
+    (``feature_group_count``; ``groups == Cin`` is depthwise) and
+    ``bias``/``activation`` fuse the layer epilogue into the kernel's
+    accumulator flush — no separate elementwise pass is traced.
 
     The tuning keywords are compatibility sugar: they resolve to a memoized
     ``repro.core.engine.default_engine`` whose ``EngineConfig`` carries
@@ -244,6 +307,14 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
                                      max_tile_bytes, preferred_element_type)):
         raise ValueError("per-call tuning kwargs and an explicit engine are "
                          "mutually exclusive; set them on the EngineConfig")
+    if activation not in _common.ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_common.ACTIVATIONS}, "
+                         f"got {activation!r}")
     rank = x.ndim - 2
-    return _deconv(x, w, _canon(stride, rank), canon_padding(padding, rank),
-                   engine)
+    if x.shape[-1] % groups or w.shape[-1] % groups:
+        raise ValueError(f"groups={groups} must divide Cin={x.shape[-1]} "
+                         f"and Cout={w.shape[-1]}")
+    return _deconv(x, w, bias, _canon(stride, rank),
+                   canon_padding(padding, rank),
+                   _common.canon_dilation(dilation, rank), groups,
+                   activation, float(alpha), engine)

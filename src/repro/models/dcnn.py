@@ -1,23 +1,28 @@
 """The paper's four benchmark DCNNs as trainable JAX models.
 
-WHOLE networks on ONE configured engine: every forward runs against a
-``repro.core.engine.UniformEngine`` — the generators' (DCGAN / GP-GAN /
+WHOLE networks compile onto ONE configured engine: every forward here is a
+thin wrapper over ``repro.core.engine.compile_network`` on a
+``repro.core.networks.UniformGraph`` — the generators' (DCGAN / GP-GAN /
 3D-GAN) transposed convolutions, the discriminator's strided convs, the
-V-Net encoder/merge convs and its 1x1x1 head all dispatch through
-``engine.deconv``/``engine.conv``.  No method strings or Pallas tuning
-kwargs thread through this module: the engine's ``EngineConfig`` was
-decided once by the caller, and its geometry-keyed plan cache schedules
-each layer shape exactly once.  With ``UniformEngine(method="pallas")`` a
-full GAN loss step or V-Net forward executes every conv AND deconv on the
-same fused Pallas grid — zero ``lax.conv_general_dilated`` dispatches; any
-other method pairs the XLA-lowered deconv flavour with the XLA conv
-baseline.  The crop convention matches ``networks.UniformLayer`` ((0,1)
-per dim: exact spatial doubling), applied INSIDE the deconv op via its
-``(lo, hi)`` padding.
+V-Net encoder/decoder with its REAL skip concatenations, all as one DAG
+schedule.  Per-layer bias and activation live in the layers' fused
+``Epilogue``, executed inside the kernels' accumulator flush: with
+``UniformEngine(method="pallas")`` a full GAN loss step or V-Net forward
+traces zero ``lax.conv_general_dilated`` dispatches AND zero outside-kernel
+bias/activation elementwise ops — the only non-kernel array ops left are
+the skip concats, the dense z-projection and the discriminator head.  No
+method strings or Pallas tuning kwargs thread through this module: the
+engine's ``EngineConfig`` was decided once by the caller, and its
+geometry-keyed plan cache schedules each layer shape exactly once.  The
+crop convention matches ``networks.UniformLayer`` ((0,1) per dim: exact
+spatial doubling), applied INSIDE the deconv op via its ``(lo, hi)``
+padding.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 import math
 
 import jax
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import networks
-from repro.core.engine import UniformEngine, as_engine
+from repro.core.engine import UniformEngine, as_engine, compile_network
 from repro.models import layers as L
 from repro.sharding.partition import constrain, conv_weight_axes
 
@@ -45,6 +50,22 @@ def _scaled_layers(cfg: ModelConfig) -> list[networks.UniformLayer]:
 # ---------------------------------------------------------------------------
 # Generators (DCGAN, GP-GAN, 3D-GAN)
 # ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _generator_graph(dcnn: str, reduced: bool) -> networks.UniformGraph:
+    """The generator's deconv chain as a graph with fused epilogues:
+    bias+relu on the hidden layers, bias+tanh on the output layer."""
+    cfg_layers = networks.benchmark_layers(dcnn)
+    if reduced:
+        cfg_layers = networks.scale_channels(cfg_layers)
+    glayers = [
+        dataclasses.replace(
+            l, epilogue=networks.Epilogue(
+                bias=True,
+                activation="tanh" if i == len(cfg_layers) - 1 else "relu"))
+        for i, l in enumerate(cfg_layers)]
+    return networks.chain_graph(glayers)
+
 
 def init_generator(cfg: ModelConfig, key):
     layers = _scaled_layers(cfg)
@@ -66,23 +87,55 @@ def init_generator(cfg: ModelConfig, key):
 
 
 def generator_forward(params, cfg: ModelConfig, z, engine=None):
-    """z [B, dz] -> image/volume [B, *spatial, C_out] in (-1, 1)."""
+    """z [B, dz] -> image/volume [B, *spatial, C_out] in (-1, 1).
+
+    The deconv stack runs as ONE compiled graph on the engine — each
+    layer's bias add and relu/tanh is fused into its kernel epilogue, so
+    only the dense z-projection precedes the graph."""
     engine = _engine(engine)
-    layers = _scaled_layers(cfg)
-    first = layers[0]
+    graph = _generator_graph(cfg.dcnn, cfg.dcnn_reduced)
+    glayers = graph.layers
+    first = glayers[0]
     h = jnp.einsum("bz,zp->bp", z, params["proj"].astype(z.dtype))
     h = h.reshape(h.shape[0], *first.in_spatial, first.cin)
     h = jax.nn.relu(h)
     sp0 = "model" if cfg.dcnn_spatial_shard else None
     h = constrain(h, "batch", sp0, *([None] * first.rank))
-    for i, l in enumerate(layers):
-        p = params["deconvs"][i]
-        # crop (0,1) — exact doubling — applied inside the op
-        h = engine.deconv(h, p["w"].astype(h.dtype), l.stride, l.padding)
-        h = h.astype(z.dtype) + p["b"].astype(z.dtype)
-        h = jnp.tanh(h) if i == len(layers) - 1 else jax.nn.relu(h)
-        h = constrain(h, "batch", sp0, *([None] * l.rank))
-    return h
+    apply, _ = compile_network(graph, engine, batch=h.shape[0])
+    ws = {l.name: {"w": p["w"], "b": p["b"]}
+          for l, p in zip(glayers, params["deconvs"])}
+    return apply(ws, h)
+
+
+def generator_schedule(cfg: ModelConfig, engine=None, batch: int = 1):
+    """The generator graph's compiled ``ScheduleReport`` on the engine."""
+    engine = _engine(engine)
+    graph = _generator_graph(cfg.dcnn, cfg.dcnn_reduced)
+    _, report = compile_network(graph, engine, batch=batch)
+    return report
+
+
+@functools.lru_cache(maxsize=None)
+def _discriminator_graph(dcnn: str, reduced: bool) -> networks.UniformGraph:
+    """The discriminator's strided-conv chain (leaky_relu epilogues fused);
+    geometry mirrors ``init_discriminator``'s channel doubling."""
+    cfg_layers = networks.benchmark_layers(dcnn)
+    if reduced:
+        cfg_layers = networks.scale_channels(cfg_layers)
+    rank = cfg_layers[0].rank
+    sp = cfg_layers[-1].out_spatial
+    chans = [cfg_layers[-1].cout] + [max(8, cfg_layers[-1].cout * (2 ** i))
+                                     for i in range(1, len(cfg_layers) + 1)]
+    leaky = networks.Epilogue(activation="leaky_relu", alpha=0.2)
+    convs = []
+    for i in range(len(chans) - 1):
+        lay = networks.UniformLayer(
+            name=f"disc.conv{i + 1}", in_spatial=sp, cin=chans[i],
+            cout=chans[i + 1], kernel=(3,) * rank, stride=(2,) * rank,
+            padding=((1, 1),) * rank, op="conv", epilogue=leaky)
+        convs.append(lay)
+        sp = lay.out_spatial
+    return networks.chain_graph(convs)
 
 
 def init_discriminator(cfg: ModelConfig, key):
@@ -103,16 +156,15 @@ def init_discriminator(cfg: ModelConfig, key):
 
 
 def discriminator_forward(params, cfg: ModelConfig, x, engine=None):
-    """Strided-conv stack on the uniform engine (a ``method="pallas"``
-    engine runs every conv on the same Pallas grid as the generator's
-    deconvs)."""
+    """Strided-conv stack as ONE compiled graph on the uniform engine
+    (leaky_relu fused into each kernel's epilogue), then global average
+    pooling and the dense head."""
     engine = _engine(engine)
+    graph = _discriminator_graph(cfg.dcnn, cfg.dcnn_reduced)
     rank = x.ndim - 2
-    h = x
-    for c in params["convs"]:
-        h = engine.conv(h, c["w"].astype(h.dtype), 2, 1).astype(x.dtype)
-        h = jax.nn.leaky_relu(h, 0.2)
-        h = constrain(h, "batch", *([None] * (rank + 1)))
+    apply, _ = compile_network(graph, engine, batch=x.shape[0])
+    ws = {l.name: c["w"] for l, c in zip(graph.layers, params["convs"])}
+    h = apply(ws, x)
     h = jnp.mean(h, axis=tuple(range(1, rank + 1)))       # GAP
     return jnp.einsum("bc,co->bo", h, params["head"].astype(h.dtype))[:, 0]
 
@@ -132,6 +184,25 @@ def _vnet_chans(cfg: ModelConfig):
     if cfg.dcnn_reduced:
         return [(1, 4), (4, 8), (8, 16), (16, 32), (32, 64)]
     return VNET_ENC
+
+
+@functools.lru_cache(maxsize=None)
+def _vnet_graph_cached(in_spatial, chans, cin) -> networks.UniformGraph:
+    return networks.vnet_graph(in_spatial=in_spatial, chans=chans, cin=cin,
+                               num_classes=2)
+
+
+def _vnet_weights(params, graph: networks.UniformGraph):
+    """Map the historical ``{"enc", "dec", "head"}`` pytree onto the
+    graph's name-keyed weight dict."""
+    ws = {}
+    for i, c in enumerate(params["enc"]):
+        ws[f"vnet.enc{i + 1}"] = c["w"]
+    for i, c in enumerate(params["dec"]):
+        ws[f"vnet.up{i + 1}"] = c["up_w"]
+        ws[f"vnet.merge{i + 1}"] = c["merge_w"]
+    ws["vnet.head"] = params["head"]
+    return ws
 
 
 def init_vnet(cfg: ModelConfig, key):
@@ -164,37 +235,28 @@ def init_vnet(cfg: ModelConfig, key):
 def vnet_forward(params, cfg: ModelConfig, vol, engine=None):
     """vol [B, H, W, D, 1] -> logits [B, H, W, D, 2].
 
-    Encoder convs, decoder deconvs, skip-merge convs and the 1x1x1 head all
-    dispatch through ONE configured engine (a ``method="pallas"`` engine
-    keeps the whole forward on the Pallas grid)."""
+    The WHOLE V-Net — encoder convs, decoder deconvs, REAL skip
+    concatenations and merge convs, the 1x1x1 head — is one compiled
+    ``UniformGraph`` on one configured engine.  Every relu is fused into
+    its layer's kernel epilogue and the graph walk keeps the input's
+    storage dtype end to end (bf16 volumes stay bf16 — no per-layer
+    ``astype`` in the hot loop)."""
     engine = _engine(engine)
-    h = vol
-    skips = []
-    for i, c in enumerate(params["enc"]):
-        stride = (1,) * 3 if i == 0 else (2,) * 3
-        h = engine.conv(h, c["w"].astype(h.dtype), stride,
-                        1).astype(vol.dtype)
-        h = jax.nn.relu(h)
-        h = constrain(h, "batch", None, None, None, None)
-        skips.append(h)
-    skips = skips[:-1]
-    for c, skip in zip(params["dec"], reversed(skips)):
-        # crop (0,1) — exact doubling — inside the op; the slice guard only
-        # engages for odd-sized skips
-        h = engine.deconv(h, c["up_w"].astype(h.dtype), 2, ((0, 1),) * 3)
-        if h.shape[1:-1] != skip.shape[1:-1]:
-            idx = (slice(None),) + tuple(slice(0, s)
-                                         for s in skip.shape[1:-1]) \
-                + (slice(None),)
-            h = h[idx]
-        h = jax.nn.relu(h.astype(vol.dtype))
-        h = jnp.concatenate([h, skip], axis=-1)
-        h = engine.conv(h, c["merge_w"].astype(h.dtype), 1,
-                        1).astype(vol.dtype)
-        h = jax.nn.relu(h)
-        h = constrain(h, "batch", None, None, None, None)
-    logits = engine.conv(h, params["head"].astype(h.dtype), 1, 0)
-    return logits
+    graph = _vnet_graph_cached(tuple(vol.shape[1:-1]),
+                               tuple(co for _, co in _vnet_chans(cfg)),
+                               vol.shape[-1])
+    apply, _ = compile_network(graph, engine, batch=vol.shape[0])
+    return apply(_vnet_weights(params, graph), vol)
+
+
+def vnet_schedule(cfg: ModelConfig, engine=None, batch: int = 1):
+    """The V-Net graph's compiled ``ScheduleReport`` on the engine."""
+    engine = _engine(engine)
+    sp = _vnet_spatial(cfg)
+    graph = _vnet_graph_cached(sp, tuple(co for _, co in _vnet_chans(cfg)),
+                               _vnet_chans(cfg)[0][0])
+    _, report = compile_network(graph, engine, batch=batch)
+    return report
 
 
 # ---------------------------------------------------------------------------
