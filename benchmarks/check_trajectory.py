@@ -31,10 +31,11 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 
 # the rows the trajectory is anchored on: the compiled whole-network
-# schedules (chains AND the DAG graphs with fused epilogues) and the
-# heaviest single-kernel conv row
+# schedules (chains AND the DAG graphs with fused epilogues), the
+# heaviest single-kernel conv row, and the serving tier's steady-state
+# p50 latency per served model (benchmarks/serve_bench.py)
 KEY_PATTERNS = ("net_*_compiled_pallas", "net_*_graph_pallas",
-                "conv_3d_s2_pallas")
+                "conv_3d_s2_pallas", "serve_*_p50_pallas")
 
 # rows under this baseline time are timer noise, not signal — report only
 MIN_GATED_US = 20.0

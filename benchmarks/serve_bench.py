@@ -1,0 +1,143 @@
+"""Serving benchmark: the DCNN server's latency/throughput surface.
+
+Drives the ``DcnnServer`` (bounded queue, bucketed compiled-schedule
+cache, fallback machinery) over the reduced DCGAN generator and V-Net
+specs on BOTH engine methods, and emits per-model p50/p99 latency and
+req/s rows into ``BENCH_kernel.json`` — merged into the kernel bench's
+payload (stale ``serve_*`` rows dropped, everything else preserved), so
+``check_trajectory.py`` anchors serving latency alongside the kernel
+rows.  Parity between the pallas-served and xla-served outputs is
+asserted at 1e-4 before any row is written.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py   # after kernel_bench
+"""
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import EngineConfig, UniformEngine
+from repro.runtime.dcnn_server import (
+    DcnnServer,
+    ServeRequest,
+    dcgan_gen_spec,
+    vnet_spec,
+)
+from repro.runtime.serving import latency_summary
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernel.json"
+
+REQUESTS = 6          # timed requests per model per method
+MAX_BATCH = 2
+
+
+def _specs():
+    return [dcgan_gen_spec(chans=(8, 4, 3)), vnet_spec(chans=(2, 4))]
+
+
+def _sample(rng, spec):
+    return rng.standard_normal((*spec.base_spatial, spec.cin),
+                               ).astype(np.float32)
+
+
+def _serve_all(method: str) -> tuple[dict, dict, dict]:
+    """Serve the full request mix on one engine method.  Returns
+    (per-model latency lists, outputs keyed (model, i), server stats)."""
+    engines = {method: UniformEngine(EngineConfig(
+                   method=method, strict_vmem=(method == "pallas")))}
+    engines.setdefault("xla", UniformEngine(EngineConfig(method="xla")))
+    srv = DcnnServer(_specs(), primary=method, fallback="xla",
+                     engines=engines, max_batch=MAX_BATCH)
+    rng = np.random.default_rng(0)
+    samples = {spec.name: [_sample(rng, spec) for _ in range(REQUESTS)]
+               for spec in _specs()}
+
+    # warm-up: one full batch per model so compile time stays out of the
+    # timed rows (steady-state serving latency is the trajectory signal)
+    for name, xs in samples.items():
+        for x in xs[:MAX_BATCH]:
+            srv.submit(ServeRequest(name, x))
+    for r in srv.drain():
+        assert r.ok, (r.code, r.error)
+
+    lats: dict[str, list[float]] = {name: [] for name in samples}
+    outs: dict[tuple[str, int], np.ndarray] = {}
+    wall: dict[str, float] = {}
+    for name, xs in samples.items():
+        t0 = time.perf_counter()
+        ids = {}
+        for i, x in enumerate(xs):
+            ids[srv.submit(ServeRequest(name, x))] = i
+            if len(ids) % MAX_BATCH == 0:
+                for r in srv.drain():
+                    assert r.ok and r.engine == method, (r.code, r.engine)
+                    lats[name].append(r.latency_s)
+                    outs[(name, ids[r.id])] = r.output
+        for r in srv.drain():
+            assert r.ok and r.engine == method, (r.code, r.engine)
+            lats[name].append(r.latency_s)
+            outs[(name, ids[r.id])] = r.output
+        wall[name] = time.perf_counter() - t0
+
+    stats = srv.stats()
+    assert stats["fallbacks"] == 0 and stats["shed"] == 0
+    return {"lats": lats, "wall": wall}, outs, stats
+
+
+def run() -> list[dict]:
+    recs: list[dict] = []
+    timing, outputs, stats = {}, {}, {}
+    for method in ("pallas", "xla"):
+        timing[method], outputs[method], stats[method] = _serve_all(method)
+
+    # served-path parity: every request's pallas output == xla output
+    for key, y_pallas in outputs["pallas"].items():
+        np.testing.assert_allclose(y_pallas, outputs["xla"][key],
+                                   rtol=1e-4, atol=1e-4)
+
+    for method in ("pallas", "xla"):
+        for name, lat in timing[method]["lats"].items():
+            s = latency_summary(lat)
+            wall = timing[method]["wall"][name]
+            rps = len(lat) / wall if wall > 0 else float("inf")
+            recs.append({"name": f"serve_{name}_p50_{method}",
+                         "us": s["p50_us"],
+                         "detail": f"n{s['n']}_b{MAX_BATCH}"})
+            recs.append({"name": f"serve_{name}_p99_{method}",
+                         "us": s["p99_us"],
+                         "detail": f"n{s['n']}_b{MAX_BATCH}"})
+            recs.append({"name": f"serve_{name}_rps_{method}",
+                         "us": round(wall / len(lat) * 1e6, 1),
+                         "detail": f"{rps:.1f}req/s"})
+    return recs, stats
+
+
+def _merge_json(recs, stats) -> None:
+    """Merge serve rows into the kernel bench payload: keep every
+    non-serve row, drop stale ``serve_*`` rows, append the fresh ones."""
+    if _JSON_PATH.exists():
+        payload = json.loads(_JSON_PATH.read_text())
+    else:
+        payload = {"bench": "kernel", "jax": jax.__version__,
+                   "backend": jax.default_backend(), "interpret": True,
+                   "rows": []}
+    payload["rows"] = [r for r in payload.get("rows", [])
+                       if not r["name"].startswith("serve_")] + recs
+    payload["serve"] = {
+        method: {k: s[k] for k in ("completed", "shed", "expired",
+                                   "fallbacks", "schedule_cache")}
+        for method, s in stats.items()}
+    _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    rows, stats = run()
+    for r in rows:
+        print(f"{r['name']},{r['us']:.0f},{r['detail']}")
+    _merge_json(rows, stats)
+    print(f"merged {len(rows)} serve rows into {_JSON_PATH}")

@@ -155,4 +155,29 @@ print("\n=== training scales the same way: the explicit dp trainer ===")
 print(f"  host mesh {dict(mesh.shape)} ready; drivers: train_dcgan --dp, "
       f"segment_vnet3d --dp")
 
+print("\n=== serve it: the fault-tolerant inference tier ===")
+# DcnnServer wraps the compiled schedules in a serving loop with teeth:
+# a bounded queue that sheds load with typed errors, per-request
+# deadlines, a shape-bucketed LRU of compiled schedules (odd geometries
+# pad up to their bucket and crop back), retry-with-backoff, and
+# per-bucket degradation — a Pallas schedule that fails to compile or
+# dispatch falls back to the XLA engine for THAT bucket, is recorded in
+# stats(), and is probed back to the primary when it recovers.  See
+# examples/serve_dcnn.py (--inject-faults scripts a failure window).
+from repro.runtime.dcnn_server import DcnnServer, ServeRequest, vnet_spec
+
+server = DcnnServer([vnet_spec(chans=(2, 4))], max_batch=2)
+server.submit(ServeRequest("vnet",
+                           rng.randn(8, 8, 8, 1).astype(np.float32),
+                           deadline_s=30.0))
+server.submit(ServeRequest("vnet",                 # odd geometry: buckets
+                           rng.randn(6, 7, 5, 1).astype(np.float32)))
+for r in server.drain():
+    print(f"  req{r.id} -> {r.output.shape} on {r.engine} "
+          f"(bucket {r.bucket}, {r.latency_s * 1e3:.1f}ms)")
+sstats = server.stats()
+print(f"  queue shed={sstats['shed']} expired={sstats['expired']} "
+      f"fallbacks={sstats['fallbacks']} schedules="
+      f"{sstats['schedule_cache']['size']}")
+
 print("\nquickstart OK")

@@ -43,12 +43,20 @@ def _cheap_checksum(a: np.ndarray) -> int:
 
 class Checkpointer:
     def __init__(self, directory: str | os.PathLike, async_save: bool = True,
-                 keep: int = 3):
+                 keep: int = 3, keep_last_n: int | None = None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.async_save = async_save
-        self.keep = keep
+        # keep_last_n is the GC window (alias of the original ``keep``);
+        # the newest VALID checkpoint survives GC regardless of the window
+        self.keep = keep if keep_last_n is None else keep_last_n
+        if self.keep < 1:
+            raise ValueError(f"keep_last_n must be >= 1, got {self.keep}")
         self._thread: threading.Thread | None = None
+
+    @property
+    def keep_last_n(self) -> int:
+        return self.keep
 
     # -- save ---------------------------------------------------------------
 
@@ -87,9 +95,33 @@ class Checkpointer:
         self._gc()
 
     def _gc(self):
+        """Prune to the last ``keep_last_n`` checkpoints — atomically, and
+        never the newest VALID one (a burst of newer-but-corrupt saves must
+        not push the only restorable checkpoint out of the window)."""
         steps = sorted(self.all_steps())
+        if len(steps) <= self.keep:
+            return
+        newest_valid = None
+        for s in reversed(steps):
+            if self.validate(s):
+                newest_valid = s
+                break
         for s in steps[:-self.keep]:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+            if s == newest_valid:
+                continue
+            final = self.dir / f"step_{s:08d}"
+            # atomic removal: rename into a ``.tmp``-suffixed trash name
+            # first (invisible to ``all_steps``/restore scans), then delete
+            # — a crash mid-rmtree never leaves a half-deleted checkpoint
+            # where a restart could pick it up
+            trash = self.dir / f"step_{s:08d}.gc.tmp"
+            try:
+                if trash.exists():
+                    shutil.rmtree(trash, ignore_errors=True)
+                os.rename(final, trash)
+            except OSError:
+                continue
+            shutil.rmtree(trash, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
 

@@ -26,6 +26,9 @@ from repro.core.functional import (  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     CONV_METHODS,
     EngineConfig,
+    EngineError,
+    ScheduleError,
+    VmemBudgetError,
     LayerSchedule,
     MeshPolicy,
     ScheduleReport,

@@ -64,6 +64,32 @@ from repro.core.functional import (
 
 CONV_METHODS = ("xla", "pallas")
 
+
+class EngineError(Exception):
+    """Base of the engine's typed failure surface."""
+
+
+class ScheduleError(EngineError, ValueError):
+    """A schedule could not be built or applied: broken layer chains,
+    mismatched weight pytrees, batches that don't divide the mesh, …
+
+    Subclasses ``ValueError`` so pre-existing callers (and tests) catching
+    the old bare raises keep working; new callers — the serving tier's
+    per-bucket fallback above all — catch ``ScheduleError`` and degrade
+    instead of crashing.
+    """
+
+
+class VmemBudgetError(ScheduleError):
+    """``plan_uniform_tiles`` could not fit a grid step inside the VMEM
+    budget (raised only under ``EngineConfig(strict_vmem=True)``; the
+    default engine keeps the historical best-effort plan and lets the
+    kernel run over budget)."""
+
+    def __init__(self, msg: str, plan: "_tiling.DeconvTilePlan" = None):
+        super().__init__(msg)
+        self.plan = plan
+
 _XLA_DECONVS = {"oom": deconv_oom, "xla": deconv_xla, "iom": deconv_iom,
                 "iom_phase": deconv_iom_phase}
 
@@ -124,7 +150,11 @@ class EngineConfig:
     the XLA deconv flavours default to f32 as before when unset).
     ``max_tile_bytes`` overrides the planner's per-grid-step VMEM budget;
     ``block_ci``/``block_co`` pin the channel blocks; ``interpret`` forces
-    Pallas interpret mode (None = auto: True off-TPU).
+    Pallas interpret mode (None = auto: True off-TPU).  ``strict_vmem``
+    turns a budget overflow (the planner's best plan still exceeds the
+    budget) into a typed ``VmemBudgetError`` at planning time instead of
+    silently running over — the serving tier uses this to fall back
+    per-bucket rather than OOM a device.
 
     ``mesh`` (optional) makes the engine mesh-aware: ``compile_network``
     then emits a ``shard_map``-wrapped callable partitioned per ``policy``
@@ -140,6 +170,7 @@ class EngineConfig:
     block_ci: int | None = None
     block_co: int | None = None
     interpret: bool | None = None
+    strict_vmem: bool = False
     mesh: Mesh | None = None
     policy: MeshPolicy = MeshPolicy()
 
@@ -238,6 +269,11 @@ class UniformEngine:
                 vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
                 block_co=cfg.block_co, groups=groups, dilation=dilation,
                 backward=backward, in_dtype_bytes=in_dtype_bytes)
+        if self.config.strict_vmem and plan.overflows:
+            raise VmemBudgetError(
+                f"{mode} {tuple(in_spatial)}x{cin}->{cout}: best plan "
+                f"{plan.describe()} exceeds the {plan.vmem_budget}-byte "
+                f"VMEM budget", plan)
         return plan
 
     # -- the two op directions ---------------------------------------------
@@ -661,7 +697,7 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
     dp = mesh.shape[policy.batch_axis]
     mp = mesh.shape[policy.model_axis] if policy.model_axis else 1
     if batch % dp:
-        raise ValueError(
+        raise ScheduleError(
             f"compile batch {batch} does not divide the {dp}-way "
             f"{policy.batch_axis!r} mesh axis")
     parts = _partition_layers(layers, policy, mp)
@@ -710,10 +746,10 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
 
     def apply(ws, x):
         if len(ws) != len(layers):
-            raise ValueError(f"expected {len(layers)} weight arrays, got "
-                             f"{len(ws)}")
+            raise ScheduleError(f"expected {len(layers)} weight arrays, got "
+                                f"{len(ws)}")
         if x.shape[0] % dp:
-            raise ValueError(
+            raise ScheduleError(
                 f"batch {x.shape[0]} does not divide the {dp}-way "
                 f"{policy.batch_axis!r} mesh axis")
         return sharded(list(ws), x)
@@ -728,7 +764,7 @@ def _layer_wb(entry, layer: _networks.UniformLayer):
     else:
         w, b = entry, None
     if layer.epilogue.bias and b is None:
-        raise ValueError(f"layer {layer.name!r} declares a fused bias but "
+        raise ScheduleError(f"layer {layer.name!r} declares a fused bias but "
                          f"its weight entry carries none (expected "
                          f"{{'w', 'b'}})")
     return w, b
@@ -765,7 +801,7 @@ def _graph_apply_fn(graph: _networks.UniformGraph, engine: UniformEngine):
     def apply(ws, x):
         missing = [n for n in layer_names if n not in ws]
         if missing:
-            raise ValueError(f"graph weights missing entries for {missing}")
+            raise ScheduleError(f"graph weights missing entries for {missing}")
         vals: dict[str, jax.Array] = {graph.INPUT: x}
         for name in graph.order:
             nd = graph.nodes[name]
@@ -813,7 +849,7 @@ def _compile_graph_sharded(graph: _networks.UniformGraph,
     mesh, policy = cfg.mesh, cfg.policy
     dp = mesh.shape[policy.batch_axis]
     if batch % dp:
-        raise ValueError(
+        raise ScheduleError(
             f"compile batch {batch} does not divide the {dp}-way "
             f"{policy.batch_axis!r} mesh axis")
     # rows carry PER-DEVICE accounting (the batch one shard runs); the
@@ -828,7 +864,7 @@ def _compile_graph_sharded(graph: _networks.UniformGraph,
 
     def apply(ws, x):
         if x.shape[0] % dp:
-            raise ValueError(
+            raise ScheduleError(
                 f"batch {x.shape[0]} does not divide the {dp}-way "
                 f"{policy.batch_axis!r} mesh axis")
         return sharded(ws, x)
@@ -878,10 +914,10 @@ def compile_network(layers: Sequence[_networks.UniformLayer]
         return _compile_graph(graph, engine, batch)
     layers = tuple(layers)
     if not layers:
-        raise ValueError("compile_network needs at least one layer")
+        raise ScheduleError("compile_network needs at least one layer")
     for prev, nxt in zip(layers, layers[1:]):
         if prev.out_spatial != nxt.in_spatial or prev.cout != nxt.cin:
-            raise ValueError(
+            raise ScheduleError(
                 f"layer chain breaks at {prev.name} -> {nxt.name}: "
                 f"{prev.out_spatial}x{prev.cout} != "
                 f"{nxt.in_spatial}x{nxt.cin}")
@@ -893,8 +929,8 @@ def compile_network(layers: Sequence[_networks.UniformLayer]
 
     def apply(ws, x):
         if len(ws) != len(layers):
-            raise ValueError(f"expected {len(layers)} weight arrays, got "
-                             f"{len(ws)}")
+            raise ScheduleError(f"expected {len(layers)} weight arrays, got "
+                                f"{len(ws)}")
         h = x
         for layer, w in zip(layers, ws):
             h = engine(layer, h, w.astype(h.dtype))

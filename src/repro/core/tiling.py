@@ -166,6 +166,13 @@ class DeconvTilePlan:
     def split(self) -> bool:
         return self.n_dtiles > 1
 
+    @property
+    def overflows(self) -> bool:
+        """True when even the best plan exceeds its VMEM budget (the
+        geometry cannot fit a grid step; ``EngineConfig(strict_vmem=True)``
+        turns this into a typed ``VmemBudgetError``)."""
+        return self.step_vmem_bytes > self.vmem_budget
+
     def describe(self) -> str:
         return (f"dtile{self.dtile}x{self.n_dtiles}"
                 f"_ci{self.block_ci}_co{self.block_co}"

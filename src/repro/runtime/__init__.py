@@ -1,2 +1,32 @@
 from repro.runtime.train_loop import Trainer, TrainLoopConfig  # noqa: F401
 from repro.runtime.serve_loop import Server  # noqa: F401
+from repro.runtime.serving import (  # noqa: F401
+    Backoff,
+    DeadlineExceededError,
+    DispatchFailedError,
+    InvalidRequestError,
+    PoisonedOutputError,
+    QueueFullError,
+    RequestQueue,
+    ServeError,
+    latency_summary,
+    percentile,
+)
+from repro.runtime.faults import (  # noqa: F401
+    FaultEvent,
+    FaultScript,
+    FaultyEngine,
+    InjectedCompileError,
+    InjectedDispatchError,
+    InjectedFault,
+    has_poison,
+    poisoned_rows,
+)
+from repro.runtime.dcnn_server import (  # noqa: F401
+    DcnnServer,
+    ModelSpec,
+    ServeRequest,
+    ServeResult,
+    dcgan_gen_spec,
+    vnet_spec,
+)

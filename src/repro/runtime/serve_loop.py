@@ -4,6 +4,14 @@ Continuous-batching-lite: requests accumulate up to ``max_batch`` or
 ``max_wait_s``; the batch prefills together and decodes lock-step for the
 max requested tokens, with per-request early stop masks.  The decode step
 is the same jitted ``serve_step`` the dry-run lowers.
+
+The admission path rides the shared serving primitives
+(``repro.runtime.serving``): the queue is BOUNDED (``submit`` raises a
+typed ``QueueFullError`` at ``max_queue`` instead of growing without
+limit), over-long prompts are rejected at submit with a typed
+``InvalidRequestError`` (previously they crashed the whole batch inside
+``step``), and per-request deadlines expire into typed records rather
+than being silently dropped.  ``stats()`` exposes the counters.
 """
 
 from __future__ import annotations
@@ -19,6 +27,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.runtime.serving import (
+    DeadlineExceededError,
+    InvalidRequestError,
+    RequestQueue,
+)
 
 
 @dataclasses.dataclass
@@ -26,17 +39,24 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int = -1           # -1: never stops early
+    deadline_s: float | None = None
 
 
 class Server:
     def __init__(self, params, cfg: ModelConfig, max_batch: int = 8,
-                 max_len: int = 256, extra_batch: dict | None = None):
+                 max_len: int = 256, extra_batch: dict | None = None,
+                 max_queue: int = 64,
+                 clock: Callable[[], float] = time.monotonic):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.extra = extra_batch or {}
-        self._queue: list[Request] = []
+        self._queue = RequestQueue(max_queue, clock)
+        self.rejected = 0
+        # expired requests complete HERE with their typed error — never
+        # silently dropped (list of (Request, DeadlineExceededError))
+        self.expired_log: list[tuple[Request, DeadlineExceededError]] = []
 
         def prefill(params, batch):
             return T.forward(params, cfg, batch, mode="prefill",
@@ -52,7 +72,19 @@ class Server:
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     def submit(self, req: Request):
-        self._queue.append(req)
+        """Validate + enqueue.  Raises ``InvalidRequestError`` for an
+        empty prompt or one whose prompt + generation can't fit the
+        serving window, ``QueueFullError`` when the bounded queue sheds."""
+        if not req.prompt:
+            self.rejected += 1
+            raise InvalidRequestError("empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            self.rejected += 1
+            raise InvalidRequestError(
+                f"prompt ({len(req.prompt)} tokens) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds the serving window "
+                f"max_len={self.max_len}")
+        self._queue.submit(req, deadline_s=req.deadline_s)
 
     def _pad_batch(self, reqs):
         lens = [len(r.prompt) for r in reqs]
@@ -62,13 +94,21 @@ class Server:
             toks[i, -len(r.prompt):] = r.prompt     # left-pad
         return jnp.asarray(toks), lens
 
+    def _sweep(self):
+        now = self._queue.clock()
+        for t in self._queue.sweep_expired():
+            self.expired_log.append((t.item, DeadlineExceededError(
+                f"request expired after {now - t.submitted:.3f}s in queue")))
+
     def step(self) -> list[list[int]]:
         """Serve one batch from the queue; returns generated tokens per
-        request (in submit order)."""
-        if not self._queue:
+        request (in submit order).  Expired requests are swept into
+        ``expired_log`` with their typed error first."""
+        self._sweep()
+        tickets = self._queue.take(self.max_batch)
+        if not tickets:
             return []
-        reqs, self._queue = (self._queue[:self.max_batch],
-                             self._queue[self.max_batch:])
+        reqs = [t.item for t in tickets]
         tokens, lens = self._pad_batch(reqs)
         b, s = tokens.shape
         batch = {"tokens": tokens, **self._extra_for(b, s)}
@@ -91,6 +131,16 @@ class Server:
                       **self._extra_for(b, 1)}
             tok, cache = self._decode(self.params, cache, dbatch)
         return out
+
+    def stats(self) -> dict:
+        """Queue depth + the shed/expired/rejected counters."""
+        return {
+            "queue_depth": self._queue.depth,
+            "submitted": self._queue.submitted,
+            "shed": self._queue.shed,
+            "expired": self._queue.expired,
+            "rejected": self.rejected,
+        }
 
     def _extra_for(self, b, s):
         extra = {}

@@ -1,0 +1,432 @@
+"""The fault-injection suite for the DCNN serving tier.
+
+Deterministic throughout: scripted ``FaultScript`` events, a fake clock
+for deadlines, recorded sleeps for backoff — no wall-time flakiness.  The
+acceptance bar (mirrors ISSUE): under a scripted mix of dispatch errors,
+compile failures, NaN outputs, slow steps and deadline pressure, every
+non-poisoned request completes with outputs matching the XLA engine to
+1e-4, failures surface as typed errors (never a crash), and the
+Pallas->XLA fallback + recovery transitions are visible in the stats.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.engine import EngineConfig, UniformEngine, compile_network
+from repro.runtime.dcnn_server import (
+    DcnnServer,
+    ServeRequest,
+    dcgan_gen_spec,
+    pad_to,
+    vnet_spec,
+)
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultScript,
+    InjectedDispatchError,
+    has_poison,
+)
+from repro.runtime.serving import (
+    Backoff,
+    DeadlineExceededError,
+    InvalidRequestError,
+    PoisonedOutputError,
+    QueueFullError,
+    RequestQueue,
+    ServeError,
+    latency_summary,
+    percentile,
+)
+
+RNG = np.random.default_rng(0)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+def _vol(sp=(8, 8, 8), cin=1):
+    return RNG.normal(size=(*sp, cin)).astype(np.float32)
+
+
+def _seed(sp=(4, 4), cin=8):
+    return RNG.normal(size=(*sp, cin)).astype(np.float32)
+
+
+def _logic_engines():
+    """Two cheap XLA engines under the primary/fallback names: the
+    robustness-logic tests don't need real Pallas kernels."""
+    return {"pallas": UniformEngine(EngineConfig(method="xla")),
+            "xla": UniformEngine(EngineConfig(method="xla"))}
+
+
+@pytest.fixture(scope="module")
+def gen_spec():
+    return dcgan_gen_spec(chans=(8, 4, 3))
+
+
+@pytest.fixture(scope="module")
+def vol_spec():
+    return vnet_spec(chans=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Serving primitives (shared with the LM server).
+# ---------------------------------------------------------------------------
+
+def test_request_queue_bounds_and_deadlines():
+    clk = FakeClock()
+    q = RequestQueue(max_depth=2, clock=clk)
+    q.submit("a")
+    q.submit("b", deadline_s=1.0)
+    with pytest.raises(QueueFullError):
+        q.submit("c")
+    assert q.shed == 1 and q.depth == 2
+    clk.advance(2.0)
+    expired = q.sweep_expired()
+    assert [t.item for t in expired] == ["b"] and q.expired == 1
+    assert [t.item for t in q.take(4)] == ["a"]
+    assert q.depth == 0
+
+
+def test_request_queue_take_pred_keeps_order():
+    q = RequestQueue(max_depth=8, clock=FakeClock())
+    for x in ["a1", "b1", "a2", "b2"]:
+        q.submit(x)
+    taken = q.take(4, pred=lambda s: s.startswith("a"))
+    assert [t.item for t in taken] == ["a1", "a2"]
+    assert [t.item for t in q.take(4)] == ["b1", "b2"]
+
+
+def test_backoff_deterministic():
+    rec = []
+    b = Backoff(base_s=0.01, factor=3.0, max_retries=3, sleep=rec.append)
+    for k in range(3):
+        b.wait(k)
+    assert rec == pytest.approx([0.01, 0.03, 0.09])
+
+
+def test_percentile_and_summary():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile(xs, 100) == pytest.approx(4.0)
+    s = latency_summary([1e-3] * 4)
+    assert s["n"] == 4 and s["p50_us"] == pytest.approx(1000.0)
+
+
+# ---------------------------------------------------------------------------
+# Admission: typed validation + load shedding.
+# ---------------------------------------------------------------------------
+
+def test_submit_validation_typed(gen_spec, vol_spec):
+    srv = DcnnServer([gen_spec, vol_spec], engines=_logic_engines())
+    with pytest.raises(InvalidRequestError):
+        srv.submit(ServeRequest("nope", _seed()))
+    with pytest.raises(InvalidRequestError):        # wrong rank
+        srv.submit(ServeRequest("vnet", _seed()))
+    with pytest.raises(InvalidRequestError):        # wrong cin
+        srv.submit(ServeRequest("vnet", _vol(cin=3)))
+    with pytest.raises(InvalidRequestError):        # fixed-geometry model
+        srv.submit(ServeRequest("dcgan_gen", _seed(sp=(8, 8))))
+    assert srv.stats()["rejected"] == 4
+    assert srv.stats()["submitted"] == 0
+
+
+def test_queue_full_sheds_typed(gen_spec):
+    srv = DcnnServer([gen_spec], engines=_logic_engines(), max_queue=2)
+    srv.submit(ServeRequest("dcgan_gen", _seed()))
+    srv.submit(ServeRequest("dcgan_gen", _seed()))
+    with pytest.raises(QueueFullError):
+        srv.submit(ServeRequest("dcgan_gen", _seed()))
+    s = srv.stats()
+    assert s["shed"] == 1 and s["queue_depth"] == 2
+
+
+def test_deadline_expiry_is_typed_never_dropped(gen_spec):
+    clk = FakeClock()
+    srv = DcnnServer([gen_spec], engines=_logic_engines(), clock=clk)
+    ok_id = srv.submit(ServeRequest("dcgan_gen", _seed()))
+    late_id = srv.submit(ServeRequest("dcgan_gen", _seed(), deadline_s=0.5))
+    clk.advance(1.0)
+    results = srv.drain()
+    by_id = {r.id: r for r in results}
+    assert set(by_id) == {ok_id, late_id}           # nothing silently lost
+    assert by_id[ok_id].ok
+    assert isinstance(by_id[late_id].error, DeadlineExceededError)
+    assert by_id[late_id].code == "deadline_exceeded"
+    assert srv.stats()["expired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# The bucketed schedule cache.
+# ---------------------------------------------------------------------------
+
+def test_shape_bucketing_and_schedule_reuse(vol_spec):
+    srv = DcnnServer([vol_spec], engines=_logic_engines(), max_batch=2)
+    for sp in [(8, 8, 8), (6, 7, 5), (8, 6, 8)]:    # all bucket to 8x8x8
+        srv.submit(ServeRequest("vnet", _vol(sp)))
+    res = srv.drain()
+    assert all(r.ok for r in res)
+    # outputs crop back to each request's own geometry (head preserves
+    # spatial extent; num_classes channels)
+    shapes = {r.id: r.output.shape for r in res}
+    assert shapes[1] == (6, 7, 5, 2)
+    s = srv.stats()
+    # 3 requests, max_batch=2 -> buckets b2 + b1: exactly two compiles
+    assert s["schedule_cache"]["misses"] == 2
+    assert set(s["buckets"]) == {"vnet/8x8x8/b2", "vnet/8x8x8/b1"}
+
+
+def test_schedule_lru_eviction(gen_spec, vol_spec):
+    srv = DcnnServer([gen_spec, vol_spec], engines=_logic_engines(),
+                     max_schedules=1, max_batch=1)
+    for _ in range(2):
+        srv.submit(ServeRequest("dcgan_gen", _seed()))
+        assert all(r.ok for r in srv.drain())
+        srv.submit(ServeRequest("vnet", _vol()))
+        assert all(r.ok for r in srv.drain())
+    s = srv.stats()["schedule_cache"]
+    assert s["size"] == 1 and s["capacity"] == 1
+    assert s["evictions"] >= 3 and s["misses"] >= 4
+
+
+# ---------------------------------------------------------------------------
+# Retry, degradation, recovery.
+# ---------------------------------------------------------------------------
+
+def test_transient_dispatch_error_retries(gen_spec):
+    script = FaultScript([FaultEvent("error", at_call=1, count=1)])
+    sleeps = []
+    srv = DcnnServer([gen_spec], engines=_logic_engines(), faults=script,
+                     backoff=Backoff(base_s=0.01, sleep=sleeps.append))
+    srv.submit(ServeRequest("dcgan_gen", _seed()))
+    res = srv.drain()
+    assert res[0].ok and res[0].engine == "pallas"
+    s = srv.stats()
+    assert s["retries"] == 1 and s["fallbacks"] == 0
+    assert sleeps == pytest.approx([0.01])
+
+
+def test_persistent_failure_falls_back_then_recovers(vol_spec):
+    # 6 consecutive dispatch errors on the pallas tag: batch 1 exhausts
+    # retries (3 calls) and degrades; the first probe eats the rest and
+    # fails; the second probe succeeds and the bucket recovers.
+    script = FaultScript(
+        [FaultEvent("error", at_call=1, match="pallas:vnet", count=6)])
+    srv = DcnnServer([vol_spec], engines=_logic_engines(), faults=script,
+                     probe_every=2, backoff=Backoff(sleep=lambda s: None))
+    engines, degraded = [], []
+    for _ in range(8):
+        srv.submit(ServeRequest("vnet", _vol()))
+        res = srv.drain()
+        assert len(res) == 1 and res[0].ok
+        engines.append(res[0].engine)
+        degraded.append(srv.stats()["buckets"]["vnet/8x8x8/b1"]["degraded"])
+    # served on the fallback while degraded, back on the primary after
+    assert engines[0] == "xla" and engines[-1] == "pallas"
+    assert True in degraded and degraded[-1] is False
+    s = srv.stats()
+    assert s["fallbacks"] == 1 and s["recoveries"] == 1
+    assert s["probes_failed"] >= 1
+    b = s["buckets"]["vnet/8x8x8/b1"]
+    assert b["engine"] == "pallas" and b["fallback_reason"] is None
+
+
+def test_compile_failure_falls_back(vol_spec):
+    script = FaultScript(
+        [FaultEvent("compile_error", at_call=1, match="pallas:vnet")])
+    srv = DcnnServer([vol_spec], engines=_logic_engines(), faults=script)
+    srv.submit(ServeRequest("vnet", _vol()))
+    res = srv.drain()
+    assert res[0].ok and res[0].engine == "xla"
+    b = srv.stats()["buckets"]["vnet/8x8x8/b1"]
+    assert b["degraded"] and "InjectedCompileError" in b["fallback_reason"]
+
+
+def test_vmem_budget_overflow_falls_back(gen_spec):
+    # a real strict-VMEM Pallas primary with an impossible budget: the
+    # typed VmemBudgetError at planning time degrades the bucket to XLA
+    srv = DcnnServer([gen_spec], max_tile_bytes=64)
+    srv.submit(ServeRequest("dcgan_gen", _seed()))
+    res = srv.drain()
+    assert res[0].ok and res[0].engine == "xla"
+    b = srv.stats()["buckets"]["dcgan_gen/4x4/b1"]
+    assert b["degraded"] and "VmemBudgetError" in b["fallback_reason"]
+
+
+def test_all_engines_failing_is_typed(gen_spec):
+    script = FaultScript([FaultEvent("error", at_call=1, count=0)])
+    srv = DcnnServer([gen_spec], engines=_logic_engines(), faults=script,
+                     backoff=Backoff(sleep=lambda s: None))
+    srv.submit(ServeRequest("dcgan_gen", _seed()))
+    res = srv.drain()
+    assert not res[0].ok and res[0].code == "dispatch_failed"
+    assert isinstance(res[0].error, ServeError)
+    assert srv.stats()["dispatch_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf output guards.
+# ---------------------------------------------------------------------------
+
+def test_nan_quarantine_reruns_clean_rows(vol_spec):
+    script = FaultScript([FaultEvent("nan", at_call=1, rows=(0,))])
+    srv = DcnnServer([vol_spec], engines=_logic_engines(), faults=script,
+                     max_batch=4)
+    xs = [_vol() for _ in range(3)]
+    for x in xs:
+        srv.submit(ServeRequest("vnet", x))
+    res = {r.id: r for r in srv.drain()}
+    assert res[0].code == "poisoned_output"
+    assert res[1].ok and res[2].ok
+    assert not has_poison(res[1].output)
+    s = srv.stats()
+    assert s["quarantined"] == 1 and s["reruns"] == 1
+
+
+def test_nan_every_rerun_terminates_typed(vol_spec):
+    script = FaultScript([FaultEvent("nan", at_call=1, count=0, rows=(0,))])
+    srv = DcnnServer([vol_spec], engines=_logic_engines(), faults=script,
+                     max_batch=4)
+    for _ in range(3):
+        srv.submit(ServeRequest("vnet", _vol()))
+    res = srv.drain()
+    assert len(res) == 3
+    assert all(isinstance(r.error, PoisonedOutputError) for r in res)
+
+
+# ---------------------------------------------------------------------------
+# Parity: the served Pallas path against the XLA engine.
+# ---------------------------------------------------------------------------
+
+def test_served_outputs_match_xla_engine(gen_spec, vol_spec):
+    """The real acceptance parity: requests served through the Pallas
+    primary (bucket padding, batch padding, cropping and all) match a
+    direct XLA-engine run of the same padded geometry to 1e-4."""
+    srv = DcnnServer([gen_spec, vol_spec], max_batch=2)
+    reqs = [ServeRequest("dcgan_gen", _seed()),
+            ServeRequest("vnet", _vol((8, 8, 8))),
+            ServeRequest("vnet", _vol((6, 7, 5)))]
+    for r in reqs:
+        srv.submit(r)
+    res = {r.id: r for r in srv.drain()}
+    assert all(r.ok and r.engine == "pallas" for r in res.values())
+
+    xla = UniformEngine(EngineConfig(method="xla"))
+    for i, req in enumerate(reqs):
+        spec = srv.specs[req.model]
+        bsp = spec.bucket_spatial(tuple(np.asarray(req.x).shape[:-1]))
+        graph = spec.graph_for(bsp)
+        apply, _ = compile_network(graph, xla, batch=1)
+        ws = jax.tree_util.tree_map(jax.numpy.asarray, dict(spec.weights))
+        ref = np.asarray(apply(ws, pad_to(np.asarray(req.x), bsp)[None]))[0]
+        got = res[i].output
+        ref = ref[tuple(slice(0, d) for d in got.shape)]
+        np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# The scripted-mix acceptance test.
+# ---------------------------------------------------------------------------
+
+def test_scripted_mix_acceptance(gen_spec, vol_spec):
+    """Everything at once: transient dispatch errors, a persistent error
+    window (fallback + recovery), a compile failure, NaN poisons, slow
+    dispatches and deadline pressure — every non-poisoned, non-expired
+    request completes with XLA-parity output, every failure is typed, the
+    server never crashes, and the degradation transitions show in stats."""
+    clk = FakeClock()
+    script = FaultScript(
+        [
+            # one transient dispatch error on the generator (retry wins)
+            FaultEvent("error", at_call=1, match="pallas:dcgan_gen"),
+            # persistent window on the vnet bucket: fallback, then recover
+            FaultEvent("error", at_call=2, match="pallas:vnet", count=4),
+            # a slow dispatch advancing the (fake) clock past deadlines
+            FaultEvent("slow", at_call=2, match="dcgan_gen", factor=2.0),
+            # a poisoned row mid-run on the generator bucket
+            FaultEvent("nan", at_call=4, match="dcgan_gen", rows=(0,)),
+        ],
+        sleep=clk.advance)
+    srv = DcnnServer([gen_spec, vol_spec], faults=script, max_batch=2,
+                     probe_every=1, clock=clk,
+                     backoff=Backoff(sleep=lambda s: None))
+
+    reqs, results = [], []
+    def feed(model, x, deadline_s=None):
+        r = ServeRequest(model, x, deadline_s=deadline_s)
+        reqs.append(r)
+        srv.submit(r)
+
+    for k in range(4):
+        feed("dcgan_gen", _seed())
+        feed("vnet", _vol((8, 8, 8) if k % 2 == 0 else (6, 7, 5)))
+    # deadline pressure: expires while the slow dispatch advances the clock
+    feed("vnet", _vol(), deadline_s=0.5)
+    for k in range(3):
+        feed("dcgan_gen", _seed())
+    results = srv.drain()
+    # keep traffic flowing so the degraded vnet bucket gets probed back
+    for k in range(4):
+        feed("vnet", _vol((8, 8, 8)))
+    results += srv.drain()
+
+    # 1. complete accounting: one result per request, no crash
+    assert sorted(r.id for r in results) == sorted(r.id for r in reqs)
+    by_id = {r.id: r for r in results}
+
+    # 2. failures are typed and of the expected kinds
+    failed = [r for r in results if not r.ok]
+    assert failed, "the script must produce some typed failures"
+    assert all(isinstance(r.error, ServeError) for r in failed)
+    assert {r.code for r in failed} <= {"poisoned_output",
+                                        "deadline_exceeded"}
+    assert any(r.code == "deadline_exceeded" for r in failed)
+    assert any(r.code == "poisoned_output" for r in failed)
+
+    # 3. every non-poisoned, non-expired request completed with parity
+    xla = UniformEngine(EngineConfig(method="xla"))
+    ref_cache = {}
+    for r in reqs:
+        got = by_id[r.id]
+        if not got.ok:
+            continue
+        spec = srv.specs[r.model]
+        bsp = spec.bucket_spatial(tuple(np.asarray(r.x).shape[:-1]))
+        if (r.model, bsp) not in ref_cache:
+            apply, _ = compile_network(spec.graph_for(bsp), xla, batch=1)
+            ws = jax.tree_util.tree_map(jax.numpy.asarray,
+                                        dict(spec.weights))
+            ref_cache[(r.model, bsp)] = (apply, ws)
+        apply, ws = ref_cache[(r.model, bsp)]
+        ref = np.asarray(apply(ws, pad_to(np.asarray(r.x), bsp)[None]))[0]
+        ref = ref[tuple(slice(0, d) for d in got.output.shape)]
+        np.testing.assert_allclose(got.output, ref, atol=1e-4, rtol=1e-4)
+
+    # 4. the degradation transitions are visible in the stats surface
+    s = srv.stats()
+    assert s["fallbacks"] >= 1, "the persistent window must degrade vnet"
+    assert s["recoveries"] >= 1, "the probe must recover the bucket"
+    assert s["retries"] >= 1
+    assert s["quarantined"] >= 1
+    assert s["expired"] >= 1
+    for b in s["buckets"].values():
+        assert b["engine"] in ("pallas", "xla")
+    assert srv.health()["ok"]
+
+
+def test_from_seed_is_deterministic():
+    a = FaultScript.from_seed(7, calls=16, p_error=0.3, p_nan=0.2)
+    b = FaultScript.from_seed(7, calls=16, p_error=0.3, p_nan=0.2)
+    assert [(e.kind, e.at_call) for e in a.events] == \
+           [(e.kind, e.at_call) for e in b.events]
+    assert a.events, "seed 7 at these rates must script something"

@@ -1,0 +1,252 @@
+"""Fault-injection coverage for the LM server, the train loop and the
+checkpoint GC — all driven deterministically by ``runtime.faults``.
+
+The LM ``serve_loop.Server`` now rides the same bounded-queue/deadline
+primitives as the DCNN server: over-long prompts are rejected at submit
+with a typed error (previously they crashed the whole batch inside
+``step``), the queue sheds at capacity, and expired requests complete
+with ``DeadlineExceededError`` in ``expired_log``.  The trainer's
+straggler watchdog and SIGTERM preemption path are exercised through
+``FaultScript.wrap_step`` slow/signal events instead of hand-rolled
+sleeps and timer threads.
+"""
+
+import os
+import signal
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, UniformEngine
+from repro.launch import steps as ST
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import Trainer, TrainLoopConfig
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultScript,
+    FaultyEngine,
+    InjectedDispatchError,
+)
+from repro.runtime.serve_loop import Request, Server
+from repro.runtime.serving import InvalidRequestError, QueueFullError
+
+KEY = jax.random.PRNGKey(0)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+# ---------------------------------------------------------------------------
+# LM server on the shared serving primitives.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("llama3_2_1b").reduced()
+    params, _ = ST.real_params(cfg, KEY)
+    return params, cfg
+
+
+def test_lm_overlong_prompt_rejected_typed(lm):
+    """The satellite fix: a prompt that can't fit the serving window is
+    rejected at submit — it no longer reaches step() and crashes the
+    whole batch."""
+    params, cfg = lm
+    server = Server(params, cfg, max_batch=4, max_len=16)
+    with pytest.raises(InvalidRequestError):
+        server.submit(Request(prompt=list(range(20)), max_new_tokens=4))
+    with pytest.raises(InvalidRequestError):     # prompt + gen > window
+        server.submit(Request(prompt=[1, 2, 3], max_new_tokens=14))
+    with pytest.raises(InvalidRequestError):
+        server.submit(Request(prompt=[]))
+    assert server.stats()["rejected"] == 3
+    # valid traffic still serves after the rejections
+    server.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    outs = server.step()
+    assert len(outs) == 1 and len(outs[0]) == 4
+
+
+def test_lm_queue_bounded_sheds_typed(lm):
+    params, cfg = lm
+    server = Server(params, cfg, max_batch=2, max_len=32, max_queue=2)
+    server.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    server.submit(Request(prompt=[3, 4], max_new_tokens=2))
+    with pytest.raises(QueueFullError):
+        server.submit(Request(prompt=[5, 6], max_new_tokens=2))
+    s = server.stats()
+    assert s["shed"] == 1 and s["queue_depth"] == 2
+    assert len(server.step()) == 2               # the queue drains fine
+
+
+def test_lm_deadline_expires_typed_not_dropped(lm):
+    params, cfg = lm
+    clk = FakeClock()
+    server = Server(params, cfg, max_batch=4, max_len=32, clock=clk)
+    server.submit(Request(prompt=[1, 2], max_new_tokens=2))
+    late = Request(prompt=[3, 4], max_new_tokens=2, deadline_s=0.5)
+    server.submit(late)
+    clk.advance(1.0)
+    outs = server.step()
+    assert len(outs) == 1                        # only the live request ran
+    assert [r for r, _ in server.expired_log] == [late]
+    assert server.expired_log[0][1].code == "deadline_exceeded"
+    assert server.stats()["expired"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Trainer fault paths driven by the fault harness.
+# ---------------------------------------------------------------------------
+
+def _toy_trainer(tmp_path, steps=12, ck_every=100):
+    params = {"w": jnp.zeros(4)}
+    opt = AdamWConfig(lr=0.1, weight_decay=0.0)
+    opt_state = adamw_init(params, opt)
+
+    class Data:
+        def next(self):
+            return jnp.ones(4)
+
+        def close(self):
+            pass
+
+    def step_fn(p, s, batch):
+        def loss(p):
+            return jnp.sum((p["w"] - batch) ** 2)
+        l, g = jax.value_and_grad(loss)(p)
+        p, s = adamw_update(g, s, p, opt)
+        return p, s, {"loss": l}
+
+    return Trainer(step_fn, params, opt_state, Data(),
+                   TrainLoopConfig(total_steps=steps,
+                                   checkpoint_every=ck_every,
+                                   log_every=100,
+                                   checkpoint_dir=str(tmp_path)))
+
+
+def test_straggler_watchdog_via_fault_script(tmp_path):
+    """Scripted slow steps (not a hand-rolled sleepy wrapper) trip the
+    watchdog a deterministic number of times."""
+    tr = _toy_trainer(tmp_path, steps=10)
+    # warm the op caches so step 1's compile time doesn't poison the EMA
+    tr.step_fn(tr.params, tr.opt_state, jnp.ones(4))
+    script = FaultScript([
+        FaultEvent("slow", at_call=6, channel="step", count=2, factor=0.3),
+    ])
+    tr.step_fn = script.wrap_step(tr.step_fn)
+    tr.run()
+    assert tr.step == 10
+    assert tr.straggler_events == 2
+    assert script.calls("step") == 10
+    assert len(script.fired) == 2
+
+
+def test_sigterm_via_fault_script_checkpoints_and_exits(tmp_path):
+    """A scripted SIGTERM on step k: the loop finishes the in-flight
+    step, writes the final checkpoint, and exits cleanly at step k."""
+    tr = _toy_trainer(tmp_path, steps=10_000)
+    script = FaultScript([FaultEvent("signal", at_call=5,
+                                     signum=int(signal.SIGTERM))])
+    tr.step_fn = script.wrap_step(tr.step_fn)
+    tr.run()
+    assert tr._preempted
+    assert tr.step == 5
+    assert tr.ckpt.latest_valid_step() == 5
+
+
+def test_wrap_step_records_kills_when_injected(tmp_path):
+    """The kill effect is injectable: tests can record instead of
+    signalling the process."""
+    kills = []
+    script = FaultScript([FaultEvent("signal", at_call=2)],
+                         kill=lambda pid, sig: kills.append((pid, sig)))
+    step = script.wrap_step(lambda: "ok")
+    assert step() == "ok" and step() == "ok"
+    assert kills == [(os.getpid(), int(signal.SIGTERM))]
+
+
+def test_faulty_engine_wraps_any_engine():
+    eng = UniformEngine(EngineConfig(method="xla"))
+    script = FaultScript([FaultEvent("error", at_call=2)])
+    faulty = FaultyEngine(eng, script)
+    assert faulty.config.method == "xla"         # passthrough
+    x = jnp.ones((1, 4, 4, 2))
+    w = jnp.ones((3, 3, 2, 3)) * 0.1
+    y = faulty.deconv(x, w, (2, 2), ((0, 1), (0, 1)))
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(eng.deconv(
+                                   x, w, (2, 2), ((0, 1), (0, 1)))))
+    with pytest.raises(InjectedDispatchError):
+        faulty.deconv(x, w, (2, 2), ((0, 1), (0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint GC: keep_last_n, atomicity, newest-valid survival.
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.ones(5, jnp.int32)}
+
+
+def test_keep_last_n_prunes_to_window(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False, keep_last_n=2)
+    assert ck.keep_last_n == 2
+    for s in range(1, 6):
+        ck.save(s, _tree())
+    assert ck.all_steps() == [4, 5]
+    assert not list(tmp_path.glob("*.tmp"))      # pruning left no debris
+
+
+def test_keep_last_n_rejects_zero(tmp_path):
+    with pytest.raises(ValueError):
+        Checkpointer(tmp_path, keep_last_n=0)
+
+
+def _corrupt_checkpoint(dirpath, step):
+    """A newer-but-invalid checkpoint: manifest references a missing
+    leaf, so ``validate`` fails while ``all_steps`` still lists it."""
+    d = dirpath / f"step_{step:08d}"
+    d.mkdir()
+    (d / "manifest.json").write_text(
+        '{"step": %d, "leaves": [{"shape": [3], "dtype": "float32", '
+        '"bytes": 12, "checksum": 0}]}' % step)
+
+
+def test_gc_never_deletes_newest_valid(tmp_path):
+    """A burst of newer-but-corrupt saves must not push the only
+    restorable checkpoint out of the GC window."""
+    ck = Checkpointer(tmp_path, async_save=False, keep_last_n=2)
+    ck.save(1, _tree())
+    _corrupt_checkpoint(tmp_path, 2)
+    _corrupt_checkpoint(tmp_path, 3)
+    ck._gc()
+    # count-based GC would have dropped step 1 (the only valid one)
+    assert 1 in ck.all_steps()
+    assert ck.latest_valid_step() == 1
+    out = ck.restore(1, _tree())
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree()["a"]))
+
+
+def test_gc_prunes_old_valid_once_newer_valid_exists(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False, keep_last_n=2)
+    ck.save(1, _tree())
+    _corrupt_checkpoint(tmp_path, 2)
+    ck.save(3, _tree())                          # triggers GC
+    ck.save(4, _tree())
+    # newest valid is now 4: step 1 is prunable, window keeps {3, 4}
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_valid_step() == 4
