@@ -37,6 +37,12 @@ ROOT = Path(__file__).resolve().parents[1]
 KEY_PATTERNS = ("net_*_compiled_pallas", "net_*_graph_pallas",
                 "conv_3d_s2_pallas", "serve_*_p50_pallas")
 
+# anchored but NEVER gated: the runtime-utilization rows (util_* — the
+# measured Fig. 6 numbers; absolute utilization is a property of the host,
+# not a regression signal) and the telemetry-overhead rows.  Printed for
+# the human trajectory on every run.
+INFO_PATTERNS = ("util_*", "telemetry_overhead_*")
+
 # rows under this baseline time are timer noise, not signal — report only
 MIN_GATED_US = 20.0
 
@@ -77,6 +83,15 @@ def check(current: dict, baseline: dict, threshold: float) -> list[str]:
         if gate and rel > threshold:
             failures.append(f"{name}: {rel:.2f}x slower than baseline "
                             f"(threshold {threshold}x)")
+    for name in sorted(cur):
+        if not any(fnmatch.fnmatch(name, p) for p in INFO_PATTERNS):
+            continue
+        if name in base:
+            print(f"info  {name:<32s} {base[name]:>9.1f}us -> "
+                  f"{cur[name]:>9.1f}us  (never gated)")
+        else:
+            print(f"info  {name:<32s} {'new':>11s} -> "
+                  f"{cur[name]:>9.1f}us  (never gated)")
     return failures
 
 

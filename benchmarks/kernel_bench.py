@@ -87,6 +87,7 @@ def run() -> list[str]:
     schedules = _compiled_rows(rng, rec)
     schedules.update(_graph_rows(rng, rec))
     schedules["dcgan_gen_sharded"] = _sharded_rows(rng, rec)
+    runtime = _runtime_rows(rng, rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
     # (forward plan and the backward-budgeted training plan).  The lift
@@ -117,7 +118,7 @@ def run() -> list[str]:
                        "step_vmem_bytes": vb,
                        "step_vmem_bytes_bwd": vbb}
 
-    _write_json(recs, plans, schedules)
+    _write_json(recs, plans, schedules, runtime)
     return [f"{r['name']},{r['us']:.0f},{r['detail']}" for r in recs]
 
 
@@ -371,24 +372,32 @@ def _compiled_rows(rng, rec) -> dict:
     return schedules
 
 
-def _graph_rows(rng, rec) -> dict:
-    """DAG-schedule rows: ``compile_network`` over the generator chain with
-    FUSED epilogues (bias+relu, tanh head) and a full V-Net graph with its
-    skip concats — per-method timing, jaxpr dispatch counters (the pallas
-    runs must trace zero conv_general_dilated AND zero outside-kernel
-    activations), parity at 1e-4, schedules in the JSON payload."""
-    key = jax.random.PRNGKey(0)
-
+def _bench_graphs() -> dict:
+    """The bench's DAG networks — the generator chain with FUSED epilogues
+    (bias+relu, tanh head) and the full V-Net graph with its skip concats —
+    shared by the graph rows and the runtime-utilization rows so they
+    measure the same compiled schedules."""
     gen = _bench_gen_chain()
     gen = [dc.replace(l, epilogue=networks.Epilogue(
                bias=True,
                activation="tanh" if i == len(gen) - 1 else "relu"))
            for i, l in enumerate(gen)]
-    graphs = {
+    return {
         "dcgan_gen_graph": networks.chain_graph(gen),
         "vnet_full_graph": networks.vnet_graph(
             in_spatial=(8, 8, 8), chans=(2, 4, 8), cin=1, num_classes=2),
     }
+
+
+def _graph_rows(rng, rec) -> dict:
+    """DAG-schedule rows: ``compile_network`` over the bench graphs
+    (``_bench_graphs``) — per-method timing, jaxpr dispatch counters (the
+    pallas runs must trace zero conv_general_dilated AND zero
+    outside-kernel activations), parity at 1e-4, schedules in the JSON
+    payload."""
+    key = jax.random.PRNGKey(0)
+
+    graphs = _bench_graphs()
     schedules = {}
     for name, graph in graphs.items():
         ws = init_network_weights(graph, key)
@@ -444,7 +453,56 @@ def _sharded_rows(rng, rec) -> dict:
     return report.to_json()
 
 
-def _write_json(recs, plans, schedules) -> None:
+def _runtime_rows(rng, rec) -> dict:
+    """Measured-vs-modeled utilization rows — paper Fig. 6 from live runs.
+
+    ``obs.measure_network`` executes every node of the compiled generator
+    graph and the full V-Net graph on BOTH engines, joining host wall time
+    against the schedule's modeled valid MACs and a roofline peak
+    (``REPRO_PEAK_GFLOPS`` or the calibration probe).  The per-layer
+    tables land under the JSON payload's ``runtime`` key; the summary
+    rows are trajectory-anchored info-only (absolute utilization is a
+    machine property, not a regression signal).
+
+    Also times the telemetry-instrumented dispatch path against the bare
+    jitted apply on the same graphs — the host-side overhead the spine
+    adds per eager dispatch (acceptance: <5% of the graph row's wall).
+    """
+    from repro import obs
+
+    key = jax.random.PRNGKey(0)
+    graphs = _bench_graphs()
+    short = {"dcgan_gen_graph": "dcgan_gen", "vnet_full_graph": "vnet"}
+    runtime = {}
+    for gname, graph in graphs.items():
+        for method in ("pallas", "xla"):
+            rpt = obs.measure_network(graph, UniformEngine(method=method),
+                                      name=gname, repeats=3)
+            runtime[f"{short[gname]}_{method}"] = rpt.to_json()
+            rec(f"util_{short[gname]}_{method}", rpt.net_wall_s * 1e6,
+                f"util{100 * rpt.utilization:.3f}%_"
+                f"{rpt.achieved_gflops:.2f}GF/s_"
+                f"peak{rpt.peak_gflops:.0f}_macs{rpt.total_macs}")
+
+        # telemetry overhead: the SAME jitted callable, bare vs wrapped by
+        # the engine's host-side dispatch timer (eager path — under jit
+        # the wrapper is a pure pass-through and the overhead is zero)
+        tel = obs.Telemetry.create()
+        ws = init_network_weights(graph, key)
+        sp, ci = graph.in_shape
+        x = jnp.asarray(rng.randn(1, *sp, ci) * 0.3, jnp.float32)
+        bare_fn, _ = compile_network(graph, UniformEngine(method="pallas"))
+        f_bare = jax.jit(bare_fn)
+        f_inst = obs.instrument_apply(f_bare, tel, f"bench:{gname}")
+        t_bare = _time(f_bare, ws, x, repeats=5)
+        t_inst = _time(f_inst, ws, x, repeats=5)
+        overhead_pct = (t_inst - t_bare) / t_bare * 100
+        rec(f"telemetry_overhead_{short[gname]}_pallas", t_inst,
+            f"bare{t_bare:.0f}us_overhead{overhead_pct:+.2f}%")
+    return runtime
+
+
+def _write_json(recs, plans, schedules, runtime) -> None:
     payload = {
         "bench": "kernel",
         "jax": jax.__version__,
@@ -453,6 +511,7 @@ def _write_json(recs, plans, schedules) -> None:
         "rows": recs,
         "plans": plans,
         "schedules": schedules,
+        "runtime": runtime,
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
 

@@ -87,6 +87,12 @@ def markdown_table(mesh: str = "single") -> str:
 
 def run() -> list[str]:
     rows = []
+    # the flat-roof ceiling the live utilization reports normalise by
+    # (REPRO_PEAK_GFLOPS override or the cached calibration probe) — the
+    # same peak obs.RuntimeReport divides its achieved GFLOP/s by
+    from repro.obs import machine_peak_gflops
+
+    rows.append(f"roofline_machine_peak_gflops,0,{machine_peak_gflops():.1f}")
     for r in load_records("single"):
         if r.get("status") != "ok" or "roofline" not in r:
             continue

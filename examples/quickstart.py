@@ -180,4 +180,37 @@ print(f"  queue shed={sstats['shed']} expired={sstats['expired']} "
       f"fallbacks={sstats['fallbacks']} schedules="
       f"{sstats['schedule_cache']['size']}")
 
+print("\n=== observe it: ONE telemetry spine for the whole stack ===")
+# repro.obs.Telemetry bundles a metrics registry (Counter / Gauge /
+# bounded-reservoir Histogram) with a span tracer (ring buffer +
+# optional JSONL event log).  Hand it to EngineConfig(telemetry=...) and
+# the engine records plan-cache hits, compile times and eager dispatch
+# walls — with ZERO equations added to any jaxpr (under jit the
+# instrumentation is a pure pass-through).  Every server and trainer
+# takes the same object (DcnnServer(telemetry=...), Trainer(...,
+# telemetry=...), drivers via --telemetry out.jsonl).
+from repro import obs
+
+tel = obs.Telemetry.create()
+obs_engine = UniformEngine(EngineConfig(method="pallas", telemetry=tel))
+oapply, _ = compile_network(vgraph, obs_engine)
+oapply(vws, vol)                                   # eager: dispatch timed
+snap = tel.registry.snapshot()
+print(f"  {len(snap)} instruments after one compile+dispatch; e.g.")
+for key in list(snap)[:3]:
+    print(f"    {key}: {snap[key]}")
+
+# measure_network closes the loop on the paper's Fig. 6: run every node
+# of the compiled graph, join measured wall time against the schedule's
+# modeled valid MACs, normalise by a roofline peak (REPRO_PEAK_GFLOPS or
+# a calibration probe) -> achieved GFLOP/s + utilization-% per layer.
+rpt = obs.measure_network(vgraph, obs_engine, name="vnet", repeats=1)
+print("  " + rpt.describe().replace("\n", "\n  "))
+
+# and the exporters render the registry for scrapers:
+prom = obs.render_prometheus(tel.registry)
+print("  prometheus text, first lines:")
+for line in prom.splitlines()[:4]:
+    print(f"    {line}")
+
 print("\nquickstart OK")

@@ -14,6 +14,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.runtime.dcnn_server import (
     DcnnServer,
     ServeRequest,
@@ -30,6 +31,9 @@ def main():
     ap.add_argument("--inject-faults", action="store_true",
                     help="script a persistent Pallas dispatch failure to "
                          "show the per-bucket XLA fallback + recovery")
+    ap.add_argument("--telemetry", metavar="OUT_JSONL", default=None,
+                    help="write the telemetry spine's event log (spans + "
+                         "final metric snapshots) to this JSONL path")
     args = ap.parse_args()
 
     faults = None
@@ -38,8 +42,11 @@ def main():
             FaultEvent("error", at_call=1, match="pallas:vnet", count=4),
         ])
 
+    telemetry = (obs.Telemetry.create(jsonl_path=args.telemetry)
+                 if args.telemetry else None)
     specs = [dcgan_gen_spec(chans=(8, 4, 3)), vnet_spec(chans=(2, 4))]
-    server = DcnnServer(specs, max_batch=2, probe_every=1, faults=faults)
+    server = DcnnServer(specs, max_batch=2, probe_every=1, faults=faults,
+                        telemetry=telemetry)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -79,6 +86,14 @@ def main():
     health = server.health()
     print(f"health: ok={health['ok']} "
           f"fully_primary={health['fully_primary']}")
+    if telemetry is not None:
+        qw = telemetry.histogram("serve_queue_wait_seconds").snapshot()
+        print(f"queue wait p50="
+              f"{(qw['p50'] or 0) * 1e6:.0f}us over {qw['count']} takes")
+        telemetry.flush_metrics()   # final instrument values -> JSONL
+        telemetry.close()
+        print(f"telemetry written to {args.telemetry} "
+              f"({len(telemetry.tracer.ring)} events in ring)")
     print("\nserve_dcnn OK")
 
 

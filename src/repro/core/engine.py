@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -163,6 +164,15 @@ class EngineConfig:
     VMEM bytes and collective byte counts.  ``engine.conv``/``engine.deconv``
     called directly keep single-device semantics — the mesh only governs
     compiled schedules.
+
+    ``telemetry`` (optional, a ``repro.obs.Telemetry``) makes the engine
+    observable: ``plan`` records cache hit/miss counters and planning
+    time, ``compile_network`` records compile time and wraps its callable
+    with host-side dispatch timing (a pure pass-through under tracing —
+    zero added jaxpr equations).  ``None`` (the default) keeps the engine
+    telemetry-free: no registry is created, no instrument is ever
+    touched.  ``Telemetry`` hashes by identity, so configs stay usable as
+    memoization keys.
     """
     method: str = "xla"
     preferred_element_type: Any = None
@@ -173,6 +183,7 @@ class EngineConfig:
     strict_vmem: bool = False
     mesh: Mesh | None = None
     policy: MeshPolicy = MeshPolicy()
+    telemetry: Any = None
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -262,13 +273,21 @@ class UniformEngine:
                int(cin), int(cout), int(groups), dilation,
                bool(backward), int(in_dtype_bytes))
         plan = self._plans.get(key)
+        tel = self.config.telemetry
         if plan is None:
             cfg = self.config
+            t0 = time.perf_counter()
             plan = self._plans[key] = _tiling.plan_uniform_tiles(
                 key[1], key[2], key[3], key[4], key[5], mode=mode,
                 vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
                 block_co=cfg.block_co, groups=groups, dilation=dilation,
                 backward=backward, in_dtype_bytes=in_dtype_bytes)
+            if tel is not None:
+                tel.registry.counter("engine_plan_cache_misses_total").inc()
+                tel.registry.histogram("engine_plan_seconds").observe(
+                    time.perf_counter() - t0)
+        elif tel is not None:
+            tel.registry.counter("engine_plan_cache_hits_total").inc()
         if self.config.strict_vmem and plan.overflows:
             raise VmemBudgetError(
                 f"{mode} {tuple(in_spatial)}x{cin}->{cout}: best plan "
@@ -907,35 +926,55 @@ def compile_network(layers: Sequence[_networks.UniformLayer]
     accounts a batch-``batch`` forward.
     """
     engine = engine if isinstance(engine, UniformEngine) else as_engine(engine)
+    tel = engine.config.telemetry
+    t0 = time.perf_counter()
     if isinstance(layers, _networks.UniformGraph):
         graph = layers
+        tag = f"graph:{graph.output}"
         if engine.config.mesh is not None:
-            return _compile_graph_sharded(graph, engine, batch)
-        return _compile_graph(graph, engine, batch)
-    layers = tuple(layers)
-    if not layers:
-        raise ScheduleError("compile_network needs at least one layer")
-    for prev, nxt in zip(layers, layers[1:]):
-        if prev.out_spatial != nxt.in_spatial or prev.cout != nxt.cin:
-            raise ScheduleError(
-                f"layer chain breaks at {prev.name} -> {nxt.name}: "
-                f"{prev.out_spatial}x{prev.cout} != "
-                f"{nxt.in_spatial}x{nxt.cin}")
-    if engine.config.mesh is not None:
-        return _compile_sharded(layers, engine, batch)
-    report = ScheduleReport(
-        engine=engine.config, batch=batch,
-        layers=tuple(_schedule_layer(l, engine, batch) for l in layers))
+            built = _compile_graph_sharded(graph, engine, batch)
+        else:
+            built = _compile_graph(graph, engine, batch)
+    else:
+        layers = tuple(layers)
+        if not layers:
+            raise ScheduleError("compile_network needs at least one layer")
+        for prev, nxt in zip(layers, layers[1:]):
+            if prev.out_spatial != nxt.in_spatial or prev.cout != nxt.cin:
+                raise ScheduleError(
+                    f"layer chain breaks at {prev.name} -> {nxt.name}: "
+                    f"{prev.out_spatial}x{prev.cout} != "
+                    f"{nxt.in_spatial}x{nxt.cin}")
+        tag = f"chain:{layers[0].name}x{len(layers)}"
+        if engine.config.mesh is not None:
+            built = _compile_sharded(layers, engine, batch)
+        else:
+            chain = layers
 
-    def apply(ws, x):
-        if len(ws) != len(layers):
-            raise ScheduleError(f"expected {len(layers)} weight arrays, got "
-                                f"{len(ws)}")
-        h = x
-        for layer, w in zip(layers, ws):
-            h = engine(layer, h, w.astype(h.dtype))
-        return h
+            def chain_apply(ws, x):
+                if len(ws) != len(chain):
+                    raise ScheduleError(
+                        f"expected {len(chain)} weight arrays, got "
+                        f"{len(ws)}")
+                h = x
+                for layer, w in zip(chain, ws):
+                    h = engine(layer, h, w.astype(h.dtype))
+                return h
 
+            built = chain_apply, ScheduleReport(
+                engine=engine.config, batch=batch,
+                layers=tuple(_schedule_layer(l, engine, batch)
+                             for l in chain))
+    apply, report = built
+    if tel is not None:
+        from repro.obs.report import instrument_apply  # lazy: opt-in only
+        dt = time.perf_counter() - t0
+        tel.registry.histogram("engine_compile_seconds",
+                               schedule=tag).observe(dt)
+        tel.tracer.event("compile", schedule=tag,
+                         method=engine.config.method, batch=batch,
+                         layers=len(report.layers), duration_s=dt)
+        apply = instrument_apply(apply, tel, tag)
     return apply, report
 
 

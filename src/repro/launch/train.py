@@ -42,6 +42,9 @@ def main():
                          "trainer (int8-compressed gradient all-reduce)")
     ap.add_argument("--no-dp-compress", action="store_true",
                     help="with --dp: plain f32 gradient all-reduce")
+    ap.add_argument("--telemetry", metavar="OUT_JSONL", default=None,
+                    help="record step-time/grads-bytes/collective-bytes "
+                         "metrics + spans to this JSONL event log")
     args = ap.parse_args()
 
     if os.environ.get("TPU_PERF", "0") == "1":
@@ -50,6 +53,7 @@ def main():
 
     import jax
     import jax.numpy as jnp
+    from repro import obs
     from repro.configs import get_config
     from repro.data import DcnnBatches, TokenBatches, VolumeBatches
     from repro.launch import steps as ST
@@ -57,7 +61,10 @@ def main():
     from repro.models import dcnn as D
     from repro.optim import AdamWConfig, adamw_init
     from repro.runtime import Trainer, TrainLoopConfig
+    from repro.runtime.dp_trainer import record_dp_metrics
 
+    telemetry = (obs.Telemetry.create(jsonl_path=args.telemetry)
+                 if args.telemetry else None)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -121,6 +128,16 @@ def main():
             step_fn = ST.make_train_step(cfg, opt)
             opt_state = adamw_init(params, opt)
 
+        if telemetry is not None and use_dp:
+            # reduce_grads runs traced, so the wire accounting is static —
+            # computed from the param tree, recorded as gauges
+            acct = record_dp_metrics(telemetry, params,
+                                     compress=not args.no_dp_compress,
+                                     n_data=n_data)
+            print(f"dp wire: grads={acct['grads_bytes']}B collective="
+                  f"{acct['collective_bytes']}B "
+                  f"({acct['compress_ratio']:.2f}x compression)")
+
         # the dp steps come back pre-jitted from dp_trainer.make_dp_step
         jitted = (step_fn if use_dp
                   else jax.jit(step_fn, donate_argnums=(0, 1)))
@@ -128,13 +145,23 @@ def main():
                           TrainLoopConfig(
                               total_steps=args.steps,
                               checkpoint_every=args.checkpoint_every,
-                              checkpoint_dir=args.checkpoint_dir))
+                              checkpoint_dir=args.checkpoint_dir),
+                          telemetry=telemetry)
         if args.resume:
             resumed = trainer.maybe_resume()
             print(f"resume: {'ok, step=' + str(trainer.step) if resumed else 'no checkpoint found'}")
         trainer.run()
         print(f"finished at step {trainer.step}; "
               f"stragglers={trainer.straggler_events}")
+        if telemetry is not None:
+            step_snap = telemetry.histogram("train_step_seconds").snapshot()
+            if step_snap["count"]:
+                print(f"step time p50={step_snap['p50'] * 1e3:.1f}ms "
+                      f"p99={step_snap['p99'] * 1e3:.1f}ms over "
+                      f"{step_snap['count']} steps")
+            telemetry.flush_metrics()
+            telemetry.close()
+            print(f"telemetry written to {args.telemetry}")
 
 
 if __name__ == "__main__":

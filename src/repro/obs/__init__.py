@@ -1,0 +1,119 @@
+"""repro.obs — ONE telemetry spine for the whole stack.
+
+``Telemetry`` bundles the process-local ``MetricsRegistry`` (typed
+Counter/Gauge/Histogram instruments) with a span ``Tracer`` (bounded ring
+buffer + optional JSONL event log).  Everything that observes itself —
+the uniform engine (``EngineConfig(telemetry=...)``), the serving tier
+(``DcnnServer``/``serve_loop.Server``), the trainers and the example
+drivers (``--telemetry out.jsonl``) — records into one of these instead
+of growing private stats dicts.
+
+Telemetry is strictly opt-in and strictly host-side: with
+``telemetry=None`` (the default everywhere) no registry is created and no
+instrument is touched, and an instrumented ``compile_network`` callable
+adds ZERO equations to its jaxpr (both pinned by ``tests/test_obs.py``).
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    quantile,
+)
+from repro.obs.trace import Span, Tracer
+from repro.obs.report import (
+    LayerRuntime,
+    RuntimeReport,
+    instrument_apply,
+    machine_peak_gflops,
+    measure_network,
+    timed_call,
+)
+from repro.obs.export import (
+    registry_to_dict,
+    render_json,
+    render_prometheus,
+)
+
+
+class Telemetry:
+    """The spine: one registry + one tracer, passed by reference.
+
+    Hashes by identity (NOT by content) so it can ride inside the frozen
+    ``EngineConfig`` dataclass — two configs differing only in telemetry
+    destination stay distinct cache keys, while the memoized default
+    engines (``telemetry=None``) are untouched.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+
+    @classmethod
+    def create(cls, jsonl_path: str | None = None,
+               ring_capacity: int = 2048) -> "Telemetry":
+        return cls(MetricsRegistry(),
+                   Tracer(capacity=ring_capacity, jsonl_path=jsonl_path))
+
+    # convenience passthroughs — ``tel.counter(...)`` etc.
+    def counter(self, name: str, **labels) -> Counter:
+        return self.registry.counter(name, **labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self.registry.gauge(name, **labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self.registry.histogram(name, **labels)
+
+    def span(self, name: str, **fields):
+        return self.tracer.span(name, **fields)
+
+    def event(self, name: str, **fields) -> None:
+        self.tracer.event(name, **fields)
+
+    def flush_metrics(self) -> None:
+        """Append every instrument's final snapshot to the tracer's
+        ring/JSONL as ``kind="metric"`` records — so an event log carries
+        the end-of-run values alongside the spans (the CI serving smoke
+        parses these)."""
+        for inst in self.registry.instruments():
+            snap = inst.snapshot()
+            # the record kind stays "metric"; the instrument type moves to
+            # its own field so JSONL consumers can filter on either
+            snap["instrument"] = snap.pop("kind")
+            self.tracer.metric_record(
+                inst.name, {"labels": dict(inst.labels), **snap})
+
+    def close(self) -> None:
+        self.tracer.close()
+
+    def __repr__(self):
+        n = len(self.registry.instruments())
+        return (f"Telemetry(instruments={n}, "
+                f"events={len(self.tracer.ring)}, "
+                f"jsonl={self.tracer.jsonl_path!r})")
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LayerRuntime",
+    "MetricsRegistry",
+    "RuntimeReport",
+    "Span",
+    "Telemetry",
+    "Tracer",
+    "instrument_apply",
+    "machine_peak_gflops",
+    "measure_network",
+    "quantile",
+    "registry_to_dict",
+    "render_json",
+    "render_prometheus",
+    "timed_call",
+]

@@ -1,0 +1,353 @@
+"""Runtime utilization reports: the paper's Fig. 6 table from live runs.
+
+``ScheduleReport`` is static — modeled tile plans, MXU dispatch counts,
+VMEM working sets decided at compile time.  ``RuntimeReport`` closes the
+loop: ``measure_network`` executes every node of a compiled chain/DAG
+individually (host-side timing around the blocked call), joins the
+measured wall time against the schedule rows and the layers' modeled
+valid MACs, and normalises by a machine roofline peak to report achieved
+GFLOP/s and utilization-% per layer — the measured analogue of the
+paper's >90%-utilisation claim, and the feedback signal the ROADMAP's
+autotuner needs.
+
+The roofline peak comes from ``machine_peak_gflops()``: the
+``REPRO_PEAK_GFLOPS`` env var when set (a datasheet number), else a
+cached one-shot f32 matmul calibration probe — the same dense-MACs/s
+ceiling a roofline plot uses for its flat roof.
+
+Also here: ``instrument_apply``, the host-side dispatch timer
+``compile_network`` wraps its callable with when the engine carries
+telemetry.  The wrapper is a *pure pass-through under tracing* — when any
+argument is a JAX tracer it calls straight into the schedule, so jitting
+an instrumented ``apply`` adds ZERO equations to the jaxpr (pinned by
+``tests/test_obs.py``); eager calls time around ``block_until_ready`` and
+record into the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# The roofline peak.
+# ---------------------------------------------------------------------------
+
+_PEAK_CACHE: dict = {}
+
+
+def _calibrate_peak_gflops(n: int = 256, repeats: int = 5) -> float:
+    """Best-of-``repeats`` f32 ``n x n`` matmul throughput in GFLOP/s."""
+    a = jnp.ones((n, n), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    jax.block_until_ready(f(a))              # compile outside the clock
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(a))
+        best = min(best, time.perf_counter() - t0)
+    return (2.0 * n ** 3) / best / 1e9
+
+
+def machine_peak_gflops(*, force: bool = False) -> float:
+    """The dense-compute roofline ceiling used to normalise utilization.
+
+    ``REPRO_PEAK_GFLOPS`` overrides (set it to the accelerator's datasheet
+    number for honest utilization on real hardware); otherwise a cached
+    matmul calibration probe measures this host's achievable peak.
+    """
+    env = os.environ.get("REPRO_PEAK_GFLOPS")
+    if env is not None:
+        return float(env)
+    if force or "peak" not in _PEAK_CACHE:
+        _PEAK_CACHE["peak"] = _calibrate_peak_gflops()
+    return _PEAK_CACHE["peak"]
+
+
+# ---------------------------------------------------------------------------
+# Host-side dispatch instrumentation.
+# ---------------------------------------------------------------------------
+
+def _has_tracer(*trees) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for tree in trees for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def instrument_apply(apply: Callable, telemetry, tag: str) -> Callable:
+    """Wrap a compiled ``apply`` with host-side dispatch timing.
+
+    Under tracing (jit/grad/vmap — any tracer argument) the wrapper is a
+    pure pass-through, so the compiled computation is equation-identical
+    to the uninstrumented one.  Eager calls with concrete arrays time
+    around ``jax.block_until_ready`` and record a dispatch-seconds
+    histogram + dispatch counter labelled by schedule tag.
+    """
+    hist = telemetry.registry.histogram("engine_dispatch_seconds",
+                                        schedule=tag)
+    count = telemetry.registry.counter("engine_dispatches_total",
+                                       schedule=tag)
+
+    @functools.wraps(apply)
+    def timed(ws, x):
+        if _has_tracer(ws, x):
+            return apply(ws, x)
+        t0 = time.perf_counter()
+        y = apply(ws, x)
+        jax.block_until_ready(y)
+        hist.observe(time.perf_counter() - t0)
+        count.inc()
+        return y
+
+    timed.telemetry_tag = tag
+    timed.__wrapped__ = apply
+    return timed
+
+
+def timed_call(fn: Callable, telemetry, name: str, **labels) -> Callable:
+    """Generic host-timing wrapper: call ``fn``, block on its outputs,
+    record the wall seconds into ``name`` with ``labels``.  The overhead
+    this adds over the bare blocked call is what the bench's
+    telemetry-overhead rows measure."""
+    hist = telemetry.registry.histogram(name, **labels)
+
+    def timed(*args, **kwargs):
+        t0 = time.perf_counter()
+        y = fn(*args, **kwargs)
+        jax.block_until_ready(y)
+        hist.observe(time.perf_counter() - t0)
+        return y
+
+    return timed
+
+
+# ---------------------------------------------------------------------------
+# The measured Fig. 6 table.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerRuntime:
+    """One measured row: a schedule node joined with its wall time."""
+    name: str
+    op: str                          # "deconv" | "conv" | "concat" | "add"
+    macs: int                        # modeled valid MACs at this batch
+    flops: int                       # 2 * macs
+    measured_s: float                # best-of-repeats blocked wall time
+    modeled_s: float                 # flops / roofline peak (ideal wall)
+    achieved_gflops: float
+    utilization: float               # achieved / peak, in [0, 1]-ish
+    grid_steps: int
+    mxu_dispatches: int
+    vmem_bytes: int
+
+    def describe(self) -> str:
+        return (f"{self.name:<18s} {self.op:<6s} "
+                f"macs{self.macs:>12,d} {self.measured_s * 1e6:>10.1f}us "
+                f"{self.achieved_gflops:>8.3f}GF/s "
+                f"util{100 * self.utilization:>7.3f}% "
+                f"grid{self.grid_steps:>5d} mxu{self.mxu_dispatches:>6d}")
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "op": self.op,
+            "macs": self.macs, "flops": self.flops,
+            "measured_us": round(self.measured_s * 1e6, 2),
+            "modeled_us": round(self.modeled_s * 1e6, 4),
+            "achieved_gflops": round(self.achieved_gflops, 4),
+            "utilization_pct": round(100 * self.utilization, 4),
+            "grid_steps": self.grid_steps,
+            "mxu_dispatches": self.mxu_dispatches,
+            "vmem_bytes": self.vmem_bytes,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeReport:
+    """Measured-vs-modeled utilization for one compiled network.
+
+    ``layers`` follows schedule order (merge nodes included, zero MACs);
+    ``net_wall_s`` times the WHOLE compiled callable in one jitted call —
+    comparing it against ``sum_layer_s`` shows what per-node dispatch
+    overhead the fused schedule saves.
+    """
+    method: str
+    network: str
+    batch: int
+    peak_gflops: float
+    layers: tuple[LayerRuntime, ...]
+    net_wall_s: float
+
+    @property
+    def total_macs(self) -> int:
+        return sum(r.macs for r in self.layers)
+
+    @property
+    def sum_layer_s(self) -> float:
+        return sum(r.measured_s for r in self.layers)
+
+    @property
+    def achieved_gflops(self) -> float:
+        if self.net_wall_s <= 0:
+            return 0.0
+        return 2.0 * self.total_macs / self.net_wall_s / 1e9
+
+    @property
+    def utilization(self) -> float:
+        """Whole-network achieved/peak — the live Fig. 6 headline number."""
+        if self.peak_gflops <= 0:
+            return 0.0
+        return self.achieved_gflops / self.peak_gflops
+
+    def describe(self) -> str:
+        head = (f"runtime[{self.method}] {self.network} batch={self.batch} "
+                f"peak={self.peak_gflops:.1f}GF/s "
+                f"net={self.net_wall_s * 1e6:.0f}us "
+                f"sum_layers={self.sum_layer_s * 1e6:.0f}us "
+                f"achieved={self.achieved_gflops:.3f}GF/s "
+                f"util={100 * self.utilization:.3f}%")
+        return "\n".join([head] + ["  " + r.describe() for r in self.layers])
+
+    def to_json(self) -> dict:
+        return {
+            "method": self.method,
+            "network": self.network,
+            "batch": self.batch,
+            "peak_gflops": round(self.peak_gflops, 3),
+            "net_wall_us": round(self.net_wall_s * 1e6, 2),
+            "sum_layer_us": round(self.sum_layer_s * 1e6, 2),
+            "total_macs": self.total_macs,
+            "achieved_gflops": round(self.achieved_gflops, 4),
+            "utilization_pct": round(100 * self.utilization, 4),
+            "layers": [r.to_json() for r in self.layers],
+        }
+
+
+def _time_blocked(fn: Callable, *args, repeats: int = 3) -> float:
+    """Best-of-``repeats`` wall seconds of ``fn(*args)`` with blocked
+    outputs; the first (untimed) call absorbs compilation."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_network(network, engine=None, ws=None, x=None, *, batch: int = 1,
+                    repeats: int = 3, peak_gflops: float | None = None,
+                    name: str | None = None, telemetry=None,
+                    seed: int = 0) -> RuntimeReport:
+    """Execute every node of a compiled network and join measured wall
+    time against the schedule's modeled MACs.
+
+    ``network`` is a ``UniformLayer`` chain or a ``UniformGraph``;
+    ``engine`` anything ``as_engine`` accepts.  ``ws``/``x`` default to
+    ``init_network_weights`` and a deterministic normal input.  Per-node
+    timing jits each node separately (a whole-net jit fuses the schedule,
+    which is exactly what the separate ``net_wall_s`` single-call number
+    captures).  When ``telemetry`` is given, per-layer times also land in
+    its ``runtime_layer_seconds`` histogram and a ``measure`` span wraps
+    the run.
+    """
+    from repro.core import engine as _engine
+    from repro.core import networks as _networks
+
+    eng = _engine.as_engine(engine)
+    net_name = name or ("graph" if isinstance(network, _networks.UniformGraph)
+                        else "chain")
+    apply, report = _engine.compile_network(network, eng, batch=batch)
+    if ws is None:
+        ws = _engine.init_network_weights(network, jax.random.PRNGKey(seed))
+    if x is None:
+        if isinstance(network, _networks.UniformGraph):
+            sp, cin = network.in_shape
+        else:
+            first = tuple(network)[0]
+            sp, cin = first.in_spatial, first.cin
+        key = jax.random.PRNGKey(seed + 1)
+        x = 0.1 * jax.random.normal(key, (batch, *sp, cin), jnp.float32)
+
+    peak = peak_gflops if peak_gflops is not None else machine_peak_gflops()
+    measured: list[tuple[str, str, int, float]] = []  # name, op, macs, s
+
+    def _measure_nodes():
+        if isinstance(network, _networks.UniformGraph):
+            graph = network
+            vals: dict[str, Any] = {graph.INPUT: x}
+            for node in graph.order:
+                nd = graph.nodes[node]
+                ins = [vals[p] for p in graph.edges[node]]
+                if isinstance(nd, _networks.MergeNode):
+                    if nd.kind == "concat":
+                        fn = jax.jit(lambda *ts: jnp.concatenate(ts, axis=-1))
+                    else:
+                        fn = jax.jit(lambda *ts: functools.reduce(
+                            lambda a, b: a + b, ts))
+                    dt = _time_blocked(fn, *ins, repeats=repeats)
+                    vals[node] = fn(*ins)
+                    measured.append((node, nd.kind, 0, dt))
+                else:
+                    w, b = _engine._layer_wb(ws[node], nd)
+                    h = ins[0]
+                    fn = jax.jit(functools.partial(_run_layer, eng, nd))
+                    dt = _time_blocked(fn, w, b, h, repeats=repeats)
+                    vals[node] = fn(w, b, h)
+                    measured.append((node, nd.op, batch * nd.valid_macs, dt))
+        else:
+            h = x
+            for layer, w in zip(network, ws):
+                fn = jax.jit(functools.partial(_run_layer, eng, layer))
+                dt = _time_blocked(fn, w, None, h, repeats=repeats)
+                h = fn(w, None, h)
+                measured.append((layer.name, layer.op,
+                                 batch * layer.valid_macs, dt))
+
+    if telemetry is not None:
+        with telemetry.tracer.span("measure", network=net_name,
+                                   method=eng.config.method, batch=batch):
+            _measure_nodes()
+    else:
+        _measure_nodes()
+
+    net_wall_s = _time_blocked(jax.jit(apply), ws, x, repeats=repeats)
+
+    sched = {r.name: r for r in report.layers}
+    rows = []
+    for node_name, op, macs, dt in measured:
+        row = sched.get(node_name)
+        flops = 2 * macs
+        achieved = flops / dt / 1e9 if dt > 0 else 0.0
+        rows.append(LayerRuntime(
+            name=node_name, op=op, macs=macs, flops=flops, measured_s=dt,
+            modeled_s=flops / (peak * 1e9) if peak > 0 else 0.0,
+            achieved_gflops=achieved,
+            utilization=achieved / peak if peak > 0 else 0.0,
+            grid_steps=row.grid_steps if row else 0,
+            mxu_dispatches=row.mxu_dispatches if row else 0,
+            vmem_bytes=row.vmem_bytes if row else 0))
+        if telemetry is not None:
+            telemetry.registry.histogram(
+                "runtime_layer_seconds", network=net_name,
+                method=eng.config.method).observe(dt)
+
+    out = RuntimeReport(method=eng.config.method, network=net_name,
+                        batch=batch, peak_gflops=peak, layers=tuple(rows),
+                        net_wall_s=net_wall_s)
+    if telemetry is not None:
+        telemetry.registry.gauge(
+            "runtime_utilization_pct", network=net_name,
+            method=eng.config.method).set(100 * out.utilization)
+    return out
+
+
+def _run_layer(eng, layer, w, b, h):
+    return eng(layer, h, w.astype(h.dtype),
+               None if b is None else b.astype(h.dtype))

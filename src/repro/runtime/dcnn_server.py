@@ -53,6 +53,7 @@ from repro.core.engine import (
     compile_network,
     init_network_weights,
 )
+from repro import obs as _obs
 from repro.runtime import faults as _faults
 from repro.runtime.serving import (
     Backoff,
@@ -197,20 +198,47 @@ class ServeResult:
 
 @dataclasses.dataclass
 class _BucketState:
-    """Per-bucket degradation state."""
+    """Per-bucket degradation state.  ``latencies`` is the bucket's
+    ``obs.Histogram`` instrument (shared with the registry the server's
+    ``stats()`` renders from)."""
     method: str
     primary: str
+    latencies: _obs.Histogram
     batches: int = 0
     since_fallback: int = 0
     fallback_reason: str | None = None
     fallbacks: int = 0
     recoveries: int = 0
     probes_failed: int = 0
-    latencies: list = dataclasses.field(default_factory=list)
 
     @property
     def degraded(self) -> bool:
         return self.method != self.primary
+
+
+class _RegistryCounters:
+    """Dict-shaped view over registry ``Counter``s.
+
+    Preserves the historical ``self.counters["completed"] += 1`` call
+    sites and the ``**self.counters`` unpacking in ``stats()`` while the
+    actual state lives in shared instruments the exporters render.
+    """
+
+    def __init__(self, registry: _obs.MetricsRegistry, names,
+                 prefix: str = "serve_"):
+        self._c = {n: registry.counter(f"{prefix}{n}_total") for n in names}
+
+    def keys(self):
+        return self._c.keys()
+
+    def __contains__(self, k):
+        return k in self._c
+
+    def __getitem__(self, k) -> int:
+        return int(self._c[k].value)
+
+    def __setitem__(self, k, v) -> None:
+        self._c[k].inc(v - int(self._c[k].value))   # += lands here as set
 
 
 def _next_pow2(n: int) -> int:
@@ -251,15 +279,26 @@ class DcnnServer:
                  backoff: Backoff | None = None,
                  max_tile_bytes: int | None = None,
                  faults: "_faults.FaultScript | None" = None,
+                 telemetry: "_obs.Telemetry | None" = None,
                  clock: Callable[[], float] = time.monotonic):
         specs = [specs] if isinstance(specs, ModelSpec) else list(specs)
         self.specs: dict[str, ModelSpec] = {s.name: s for s in specs}
+        # the stats()/health() surface is registry-backed: pass a shared
+        # Telemetry to aggregate across servers / export to JSONL, else
+        # the server owns a private spine
+        self.telemetry = (telemetry if telemetry is not None
+                          else _obs.Telemetry.create())
         if engines is None:
+            # self-built engines share the server's telemetry, so their
+            # plan-cache and compile/dispatch instruments land in the same
+            # registry the stats surface renders
             engines = {
                 primary: UniformEngine(EngineConfig(
                     method=primary, strict_vmem=True,
-                    max_tile_bytes=max_tile_bytes)),
-                fallback: UniformEngine(EngineConfig(method=fallback)),
+                    max_tile_bytes=max_tile_bytes,
+                    telemetry=self.telemetry)),
+                fallback: UniformEngine(EngineConfig(
+                    method=fallback, telemetry=self.telemetry)),
             }
         self.engines = dict(engines)
         for m in (primary, fallback):
@@ -278,12 +317,14 @@ class DcnnServer:
         self._jweights: dict[str, Any] = {}
         self._buckets: dict[tuple, _BucketState] = {}
         self._next_id = 0
-        self.counters = {
-            "completed": 0, "rejected": 0, "retries": 0,
-            "quarantined": 0, "reruns": 0, "fallbacks": 0, "recoveries": 0,
-            "probes_failed": 0, "cache_hits": 0, "cache_misses": 0,
-            "cache_evictions": 0, "dispatch_failures": 0,
-        }
+        self.counters = _RegistryCounters(self.telemetry.registry, (
+            "completed", "rejected", "retries",
+            "quarantined", "reruns", "fallbacks", "recoveries",
+            "probes_failed", "cache_hits", "cache_misses",
+            "cache_evictions", "dispatch_failures",
+        ))
+        self._queue_wait = self.telemetry.histogram(
+            "serve_queue_wait_seconds")
 
     # -- admission -----------------------------------------------------------
 
@@ -364,19 +405,23 @@ class DcnnServer:
         ws = self._weights(model)
         x = jnp.asarray(xb)
         attempt = 0
-        while True:
-            try:
-                return np.asarray(fn(ws, x))
-            except (ScheduleError, _faults.InjectedCompileError):
-                raise                      # compile-shaped: never retried
-            except Exception as e:         # noqa: BLE001 — survive anything
-                if attempt >= self.backoff.max_retries:
-                    raise DispatchFailedError(
-                        f"{method} dispatch failed after {attempt} "
-                        f"retries: {e!r}") from e
-                self.counters["retries"] += 1
-                self.backoff.wait(attempt)
-                attempt += 1
+        with self.telemetry.span("dispatch", model=model, method=method,
+                                 batch=xb.shape[0]) as sp:
+            while True:
+                try:
+                    y = np.asarray(fn(ws, x))
+                    sp.set(attempts=attempt)
+                    return y
+                except (ScheduleError, _faults.InjectedCompileError):
+                    raise                  # compile-shaped: never retried
+                except Exception as e:     # noqa: BLE001 — survive anything
+                    if attempt >= self.backoff.max_retries:
+                        raise DispatchFailedError(
+                            f"{method} dispatch failed after {attempt} "
+                            f"retries: {e!r}") from e
+                    self.counters["retries"] += 1
+                    self.backoff.wait(attempt)
+                    attempt += 1
 
     def _run_on(self, model: str, bucket_sp, method: str,
                 xb: np.ndarray) -> np.ndarray:
@@ -416,6 +461,9 @@ class DcnnServer:
             self.max_batch,
             pred=lambda r: r.model == model and r._bucket_sp == bsp)
         if tickets:
+            now = self.clock()
+            for t in tickets:
+                self._queue_wait.observe(now - t.submitted)
             results.extend(self._serve_batch(model, bsp, tickets))
         return results
 
@@ -437,8 +485,11 @@ class DcnnServer:
         bkey = (model, bsp, batch)
         state = self._buckets.get(bkey)
         if state is None:
+            label = f"{model}/{'x'.join(map(str, bsp))}/b{batch}"
             state = self._buckets[bkey] = _BucketState(
-                method=self.primary, primary=self.primary)
+                method=self.primary, primary=self.primary,
+                latencies=self.telemetry.histogram(
+                    "serve_latency_seconds", bucket=label))
 
         xb = np.zeros((batch, *bsp, self.specs[model].cin),
                       np.asarray(tickets[0].item.x).dtype)
@@ -456,6 +507,9 @@ class DcnnServer:
                 state.fallback_reason = None
                 state.recoveries += 1
                 self.counters["recoveries"] += 1
+                self.telemetry.event(
+                    "recovery", model=model,
+                    bucket=self._bucket_name(tickets[0].item))
                 served_by = self.primary
             except Exception as e:        # noqa: BLE001
                 state.probes_failed += 1
@@ -474,6 +528,9 @@ class DcnnServer:
             state.since_fallback = 0
             state.fallbacks += 1
             self.counters["fallbacks"] += 1
+            self.telemetry.event("fallback", model=model,
+                                 bucket=self._bucket_name(tickets[0].item),
+                                 reason=repr(fail))
             try:
                 y = self._run_on(model, bsp, self.fallback, xb)
                 served_by = self.fallback
@@ -537,9 +594,7 @@ class DcnnServer:
                          zip(r._spatial, bsp, graph_out_sp))
             sl = (i,) + tuple(slice(0, c) for c in crop)
             lat = now - t.submitted
-            state.latencies.append(lat)
-            if len(state.latencies) > 256:
-                del state.latencies[:-256]
+            state.latencies.observe(lat)
             self.counters["completed"] += 1
             results.append(ServeResult(
                 id=r.id, model=model, ok=True, output=y[sl],
@@ -563,6 +618,12 @@ class DcnnServer:
                 "probes_failed": st.probes_failed,
                 **latency_summary(st.latencies),
             }
+        # mirror the queue's internal counts into registry gauges so the
+        # JSON/Prometheus exporters see the full surface
+        self.telemetry.gauge("serve_queue_depth").set(self.queue.depth)
+        self.telemetry.gauge("serve_submitted").set(self.queue.submitted)
+        self.telemetry.gauge("serve_shed").set(self.queue.shed)
+        self.telemetry.gauge("serve_expired").set(self.queue.expired)
         return {
             "queue_depth": self.queue.depth,
             "submitted": self.queue.submitted,

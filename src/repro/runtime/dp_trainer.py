@@ -74,6 +74,40 @@ def stack_error(err):
     return jax.tree_util.tree_map(lambda e: e[None], err)
 
 
+def grad_wire_bytes(params, compress: bool = True) -> dict:
+    """Static per-step gradient all-reduce byte accounting.
+
+    ``reduce_grads`` runs inside a traced shard_map region, so its byte
+    counts must be computed here, host-side, from the param tree: the f32
+    gradient tree a device contributes vs. what actually crosses the wire
+    (int8 payload + one f32 scale per leaf when ``compress``).
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    n = sum(int(l.size) for l in leaves)
+    grads_bytes = 4 * n
+    wire_bytes = (sum(int(l.size) + 4 for l in leaves) if compress
+                  else grads_bytes)
+    return {
+        "param_count": n,
+        "grads_bytes": grads_bytes,
+        "collective_bytes": wire_bytes,
+        "compress_ratio": grads_bytes / wire_bytes,
+    }
+
+
+def record_dp_metrics(telemetry, params, *, compress: bool = True,
+                      n_data: int = 1) -> dict:
+    """Record the dp trainer's static per-step metrics as gauges
+    (``dp_grads_bytes``/``dp_collective_bytes``/``dp_compress_ratio``/
+    ``dp_data_parallel``) and return the accounting dict."""
+    acct = grad_wire_bytes(params, compress)
+    telemetry.gauge("dp_grads_bytes").set(acct["grads_bytes"])
+    telemetry.gauge("dp_collective_bytes").set(acct["collective_bytes"])
+    telemetry.gauge("dp_compress_ratio").set(acct["compress_ratio"])
+    telemetry.gauge("dp_data_parallel").set(n_data)
+    return acct
+
+
 def make_dp_train_step(loss_fn: Callable, opt: AdamWConfig, mesh,
                        compress: bool = True):
     """loss_fn(params, batch) -> scalar.  Returns jitted

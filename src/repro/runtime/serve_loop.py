@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.runtime.serving import (
@@ -46,6 +47,7 @@ class Server:
     def __init__(self, params, cfg: ModelConfig, max_batch: int = 8,
                  max_len: int = 256, extra_batch: dict | None = None,
                  max_queue: int = 64,
+                 telemetry: "_obs.Telemetry | None" = None,
                  clock: Callable[[], float] = time.monotonic):
         self.params = params
         self.cfg = cfg
@@ -53,7 +55,13 @@ class Server:
         self.max_len = max_len
         self.extra = extra_batch or {}
         self._queue = RequestQueue(max_queue, clock)
-        self.rejected = 0
+        # registry-backed stats surface (same dict shape as the historical
+        # plain counters; shared Telemetry aggregates across servers)
+        self.telemetry = (telemetry if telemetry is not None
+                          else _obs.Telemetry.create())
+        self._rejected = self.telemetry.counter("lm_rejected_total")
+        self._queue_wait = self.telemetry.histogram("lm_queue_wait_seconds")
+        self._step_time = self.telemetry.histogram("lm_step_seconds")
         # expired requests complete HERE with their typed error — never
         # silently dropped (list of (Request, DeadlineExceededError))
         self.expired_log: list[tuple[Request, DeadlineExceededError]] = []
@@ -76,10 +84,10 @@ class Server:
         empty prompt or one whose prompt + generation can't fit the
         serving window, ``QueueFullError`` when the bounded queue sheds."""
         if not req.prompt:
-            self.rejected += 1
+            self._rejected.inc()
             raise InvalidRequestError("empty prompt")
         if len(req.prompt) + req.max_new_tokens > self.max_len:
-            self.rejected += 1
+            self._rejected.inc()
             raise InvalidRequestError(
                 f"prompt ({len(req.prompt)} tokens) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds the serving window "
@@ -108,6 +116,10 @@ class Server:
         tickets = self._queue.take(self.max_batch)
         if not tickets:
             return []
+        t_start = time.perf_counter()
+        now = self._queue.clock()
+        for t in tickets:
+            self._queue_wait.observe(now - t.submitted)
         reqs = [t.item for t in tickets]
         tokens, lens = self._pad_batch(reqs)
         b, s = tokens.shape
@@ -130,10 +142,18 @@ class Server:
             dbatch = {"tokens": tok[:, None].astype(jnp.int32),
                       **self._extra_for(b, 1)}
             tok, cache = self._decode(self.params, cache, dbatch)
+        jax.block_until_ready(tok)
+        self._step_time.observe(time.perf_counter() - t_start)
         return out
 
+    @property
+    def rejected(self) -> int:
+        return int(self._rejected.value)
+
     def stats(self) -> dict:
-        """Queue depth + the shed/expired/rejected counters."""
+        """Queue depth + the shed/expired/rejected counters (the counters
+        are registry instruments — same dict shape as ever)."""
+        self.telemetry.gauge("lm_queue_depth").set(self._queue.depth)
         return {
             "queue_depth": self._queue.depth,
             "submitted": self._queue.submitted,

@@ -19,8 +19,12 @@ exception family it can switch on.
   * ``Backoff`` — deterministic exponential retry schedule with an
     injectable sleep (tests pass a recorder, production passes
     ``time.sleep``).
-  * ``percentile``/``latency_summary`` — the p50/p99 math the stats
-    surfaces and ``benchmarks/serve_bench.py`` share.
+  * ``percentile``/``latency_summary`` — the p50/p99 surface the stats
+    dicts and ``benchmarks/serve_bench.py`` share.  The math itself lives
+    in ``repro.obs.metrics`` (ONE percentile implementation repo-wide);
+    these wrappers keep the historical signatures and also accept an
+    ``obs.Histogram`` directly (the registry-backed per-bucket latency
+    instruments).
 
 The clock is injectable everywhere (``clock=time.monotonic`` by default)
 so deadline behaviour is tested deterministically, without wall-time
@@ -32,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from typing import Any, Callable, Sequence
+
+from repro.obs import metrics as _metrics
 
 
 # ---------------------------------------------------------------------------
@@ -193,21 +199,30 @@ class Backoff:
 # ---------------------------------------------------------------------------
 
 def percentile(xs: Sequence[float], p: float) -> float:
-    """Linear-interpolated percentile (p in [0, 100]) of ``xs``."""
-    if not xs:
-        return float("nan")
-    s = sorted(xs)
-    if len(s) == 1:
-        return float(s[0])
-    rank = (p / 100.0) * (len(s) - 1)
-    lo = int(rank)
-    hi = min(lo + 1, len(s) - 1)
-    frac = rank - lo
-    return float(s[lo] * (1.0 - frac) + s[hi] * frac)
+    """Linear-interpolated percentile (p in [0, 100]) of ``xs`` —
+    delegates to the shared ``repro.obs.metrics.quantile``."""
+    return _metrics.quantile(sorted(xs), p)
 
 
-def latency_summary(seconds: Sequence[float]) -> dict:
-    """p50/p99/mean (microseconds) + count over per-request latencies."""
+def latency_summary(seconds) -> dict:
+    """p50/p99/mean (microseconds) + count over per-request latencies.
+
+    ``seconds`` is a sequence of wall seconds (the historical contract)
+    or an ``obs.Histogram`` of them — the registry-backed bucket
+    instruments ``dcnn_server.stats()`` renders.  For a histogram, ``n``
+    is the TOTAL observation count while the percentiles come from its
+    bounded reservoir.
+    """
+    if isinstance(seconds, _metrics.Histogram):
+        if seconds.count == 0:
+            return {"n": 0, "p50_us": None, "p99_us": None, "mean_us": None}
+        p50, p99 = seconds.percentiles((50.0, 99.0))
+        return {
+            "n": seconds.count,
+            "p50_us": round(p50 * 1e6, 1),
+            "p99_us": round(p99 * 1e6, 1),
+            "mean_us": round(seconds.mean * 1e6, 1),
+        }
     if not seconds:
         return {"n": 0, "p50_us": None, "p99_us": None, "mean_us": None}
     us = [s * 1e6 for s in seconds]

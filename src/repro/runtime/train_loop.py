@@ -40,15 +40,23 @@ class TrainLoopConfig:
 
 class Trainer:
     def __init__(self, step_fn, params, opt_state, data, loop_cfg:
-                 TrainLoopConfig, shardings=None):
+                 TrainLoopConfig, shardings=None, telemetry=None):
         """step_fn(params, opt_state, batch) -> (params, opt_state, metrics);
-        data.next() -> batch; data restartable from a step index."""
+        data.next() -> batch; data restartable from a step index.
+        ``telemetry`` (a ``repro.obs.Telemetry``) records a
+        ``train_step_seconds`` histogram, a ``train_stragglers_total``
+        counter and per-metric gauges at log points."""
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
         self.data = data
         self.cfg = loop_cfg
         self.shardings = shardings
+        self.telemetry = telemetry
+        self._step_hist = (telemetry.histogram("train_step_seconds")
+                           if telemetry is not None else None)
+        self._straggler_ctr = (telemetry.counter("train_stragglers_total")
+                               if telemetry is not None else None)
         self.ckpt = Checkpointer(loop_cfg.checkpoint_dir,
                                  async_save=loop_cfg.async_checkpoint)
         self.step = 0
@@ -103,6 +111,8 @@ class Trainer:
                 jax.block_until_ready(metrics)
                 dt = time.perf_counter() - t0
                 self.step += 1
+                if self._step_hist is not None:
+                    self._step_hist.observe(dt)
 
                 # straggler watchdog
                 if self._ema is None:
@@ -111,6 +121,8 @@ class Trainer:
                     and self.step > 3
                 if slow:
                     self.straggler_events += 1
+                    if self._straggler_ctr is not None:
+                        self._straggler_ctr.inc()
                     print(f"[watchdog] step {self.step} took {dt:.3f}s "
                           f"(EMA {self._ema:.3f}s) — straggler #"
                           f"{self.straggler_events}")
@@ -121,6 +133,11 @@ class Trainer:
                            **{k: float(v) for k, v in metrics.items()}}
                     self.metrics_log.append(rec)
                     print(json.dumps(rec))
+                    if self.telemetry is not None:
+                        for k, v in rec.items():
+                            if k != "step":
+                                self.telemetry.gauge(
+                                    f"train_{k}").set(float(v))
                 if self.step % self.cfg.checkpoint_every == 0:
                     self._checkpoint()
         finally:

@@ -1,0 +1,345 @@
+"""The telemetry spine's acceptance suite.
+
+Pins the contracts ISSUE 8 states:
+
+  * ONE percentile implementation — ``obs.quantile`` matches numpy's
+    linear interpolation, and the historical ``runtime.serving``
+    signatures (``percentile``/``latency_summary``) delegate to it;
+  * the ``Histogram`` reservoir is BOUNDED (constant memory under
+    millions of observations) while count/sum/min/max stay exact, and
+    its quantiles stay representative of the whole stream;
+  * instruments are thread-safe under the serving tier's concurrency —
+    concurrent ``observe``/``inc`` never lose updates;
+  * the engine's instrumentation is jaxpr-PURE — a telemetry-carrying
+    ``compile_network`` callable traces to the exact same equations as
+    the bare one — and eager dispatches DO land in the registry;
+  * telemetry is disabled by default — ``telemetry=None`` touches no
+    instrument anywhere;
+  * ``measure_network`` joins measured wall time against modeled MACs on
+    both engines (the live Fig. 6 table);
+  * the exporters render valid JSON and Prometheus text;
+  * ``DcnnServer`` stats ride the registry with the same dict shapes.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core import UniformEngine, compile_network, networks
+from repro.core.engine import EngineConfig
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.runtime.serving import latency_summary, percentile
+
+
+# ---------------------------------------------------------------------------
+# quantile / percentile compat
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 5, 100, 1001])
+def test_quantile_matches_numpy(rng, n):
+    xs = sorted(rng.randn(n).tolist())
+    for p in (0.0, 10.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+        np.testing.assert_allclose(obs.quantile(xs, p),
+                                   np.percentile(xs, p),
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_quantile_empty_is_nan():
+    assert np.isnan(obs.quantile([], 50.0))
+
+
+def test_serving_percentile_signature_unchanged():
+    # the historical serving contract, now a delegator onto obs.quantile
+    assert percentile([1, 2, 3, 4], 50) == 2.5
+    assert percentile([3, 1, 4, 2], 50) == 2.5          # sorts internally
+    assert percentile([7.0], 99) == 7.0
+
+
+def test_latency_summary_sequence_and_histogram_agree():
+    lats = [1e-3, 2e-3, 3e-3, 4e-3]
+    s_seq = latency_summary(lats)
+    h = Histogram("lat")
+    h.observe_many(lats)
+    s_hist = latency_summary(h)
+    assert s_seq == s_hist
+    assert s_seq["n"] == 4 and s_seq["p50_us"] == 2500.0
+    assert latency_summary([]) == latency_summary(Histogram("empty"))
+
+
+# ---------------------------------------------------------------------------
+# Histogram reservoir
+# ---------------------------------------------------------------------------
+
+def test_histogram_reservoir_bounded_exact_aggregates(rng):
+    h = Histogram("h", max_samples=512, seed=1)
+    xs = rng.rand(100_000)
+    h.observe_many(xs.tolist())
+    assert len(h.samples()) == 512                       # bounded
+    assert h.count == 100_000                            # exact
+    np.testing.assert_allclose(h.sum, xs.sum(), rtol=1e-9)
+    snap = h.snapshot()
+    assert snap["min"] == xs.min() and snap["max"] == xs.max()
+    # uniform [0,1): the reservoir median is near 0.5 (512 samples)
+    assert abs(h.percentile(50.0) - 0.5) < 0.08
+    assert 0.85 < h.percentile(95.0) < 1.0
+
+
+def test_histogram_under_capacity_quantiles_exact(rng):
+    h = Histogram("h", max_samples=1024)
+    xs = rng.randn(200)
+    h.observe_many(xs.tolist())
+    np.testing.assert_allclose(h.percentile(99.0), np.percentile(xs, 99.0),
+                               rtol=1e-9)
+
+
+def test_instruments_thread_safe():
+    reg = MetricsRegistry()
+    h = reg.histogram("concurrent_h")
+    c = reg.counter("concurrent_c")
+    threads_n, per = 8, 5000
+
+    def work(i):
+        for k in range(per):
+            h.observe(float(k))
+            c.inc()
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(threads_n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert h.count == threads_n * per                    # no lost updates
+    assert c.value == threads_n * per
+    assert len(h.samples()) == h.max_samples
+
+
+def test_counter_rejects_negative():
+    with pytest.raises(ValueError):
+        Counter("c").inc(-1)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("x", model="vnet")
+    b = reg.counter("x", model="vnet")
+    other = reg.counter("x", model="dcgan")
+    assert a is b and a is not other
+    assert reg.get("x", model="vnet") is a
+    assert reg.get("x", model="nope") is None
+    with pytest.raises(TypeError):
+        reg.gauge("x", model="vnet")                     # kind mismatch
+    g = reg.gauge("g")
+    g.set(2.0)
+    g.add(1.5)
+    assert g.value == 3.5
+    assert {i.name for i in reg.instruments()} == {"x", "g"}
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_spans_ring_and_jsonl(tmp_path):
+    path = tmp_path / "tel.jsonl"
+    tel = obs.Telemetry.create(jsonl_path=str(path), ring_capacity=4)
+    with tel.span("compile", network="vnet") as sp:
+        sp.set(layers=3)
+    tel.event("fallback", reason="test")
+    with pytest.raises(RuntimeError):
+        with tel.span("boom"):
+            raise RuntimeError("x")
+    spans = tel.tracer.events("compile")
+    assert spans and spans[0]["duration_s"] >= 0.0
+    assert spans[0]["layers"] == 3
+    assert tel.tracer.events("boom")[0]["error"] == "RuntimeError"
+    for _ in range(10):
+        tel.event("spam")
+    assert len(tel.tracer.ring) == 4                     # bounded ring
+    tel.counter("done_total").inc(2)
+    tel.flush_metrics()
+    tel.close()
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(recs) >= 13
+    kinds = {r["kind"] for r in recs}
+    assert {"span", "event", "metric"} <= kinds
+    metric = [r for r in recs if r["kind"] == "metric"
+              and r["name"] == "done_total"]
+    assert metric and metric[0]["value"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def test_exporters_json_and_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("req_total", model="vnet").inc(3)
+    reg.gauge("depth").set(1.0)
+    reg.histogram("lat_seconds").observe_many([0.1, 0.2, 0.3])
+    d = json.loads(obs.render_json(reg))
+    assert d["req_total"][0]["value"] == 3.0
+    assert d["lat_seconds"][0]["count"] == 3
+    text = obs.render_prometheus(reg)
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{model="vnet"} 3.0' in text
+    assert "# TYPE lat_seconds summary" in text
+    assert 'lat_seconds{quantile="0.5"} 0.2' in text
+    assert "lat_seconds_count 3.0" in text
+
+
+# ---------------------------------------------------------------------------
+# Engine instrumentation: jaxpr purity + disabled by default
+# ---------------------------------------------------------------------------
+
+def _tiny_chain():
+    return networks.deconv_stack("tiny", 2, 4, [4, 3])
+
+
+def _eqn_count(fn, *args):
+    return len(jax.make_jaxpr(fn)(*args).jaxpr.eqns)
+
+
+def test_instrumented_apply_is_jaxpr_pure(rng):
+    from repro.core import init_network_weights
+    layers = _tiny_chain()
+    ws = init_network_weights(layers, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.randn(1, *layers[0].in_spatial, layers[0].cin),
+                    jnp.float32)
+
+    bare_fn, _ = compile_network(layers, UniformEngine(method="xla"))
+    tel = obs.Telemetry.create()
+    inst_fn, _ = compile_network(
+        layers, UniformEngine(EngineConfig(method="xla", telemetry=tel)))
+    assert inst_fn.telemetry_tag.startswith("chain:")
+    # ZERO added equations: tracing sees the pure pass-through
+    assert _eqn_count(inst_fn, ws, x) == _eqn_count(bare_fn, ws, x)
+    np.testing.assert_allclose(np.asarray(jax.jit(inst_fn)(ws, x)),
+                               np.asarray(jax.jit(bare_fn)(ws, x)),
+                               rtol=1e-6, atol=1e-6)
+
+    # ...while the EAGER dispatch is recorded host-side
+    inst_fn(ws, x)
+    tag = inst_fn.telemetry_tag
+    hist = tel.registry.get("engine_dispatch_seconds", schedule=tag)
+    assert hist is not None and hist.count == 1
+    assert tel.registry.get("engine_dispatches_total",
+                            schedule=tag).value == 1
+    # compile + plan events landed too
+    assert tel.registry.get("engine_compile_seconds",
+                            schedule=tag).count == 1
+    assert tel.tracer.events("compile")
+
+
+def test_engine_plan_cache_metrics():
+    tel = obs.Telemetry.create()
+    eng = UniformEngine(EngineConfig(method="xla", telemetry=tel))
+    layers = _tiny_chain()
+    compile_network(layers, eng)
+    compile_network(layers, eng)                         # all plans cached
+    misses = tel.registry.get("engine_plan_cache_misses_total").value
+    hits = tel.registry.get("engine_plan_cache_hits_total").value
+    assert misses == len(layers)
+    assert hits >= len(layers)
+
+
+def test_telemetry_disabled_by_default(rng):
+    assert EngineConfig().telemetry is None
+    layers = _tiny_chain()
+    from repro.core import init_network_weights
+    ws = init_network_weights(layers, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.randn(1, *layers[0].in_spatial, layers[0].cin),
+                    jnp.float32)
+    fn, _ = compile_network(layers, UniformEngine(method="xla"))
+    fn(ws, x)
+    # the bare callable is NOT the instrumented wrapper
+    assert not hasattr(fn, "telemetry_tag")
+
+
+# ---------------------------------------------------------------------------
+# measure_network: the live Fig. 6 table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["pallas", "xla"])
+def test_measure_network_chain(method):
+    layers = _tiny_chain()
+    rpt = obs.measure_network(layers, UniformEngine(method=method),
+                              repeats=1, peak_gflops=100.0, name="tiny")
+    assert rpt.method == method and rpt.network == "tiny"
+    assert rpt.peak_gflops == 100.0                      # override respected
+    assert len(rpt.layers) == len(layers)
+    assert rpt.total_macs == sum(l.valid_macs for l in layers)
+    for row in rpt.layers:
+        assert row.measured_s > 0 and row.flops == 2 * row.macs
+    assert rpt.net_wall_s > 0
+    assert 0 <= rpt.utilization
+    j = json.loads(json.dumps(rpt.to_json()))            # JSON-clean
+    assert j["total_macs"] == rpt.total_macs
+    assert len(j["layers"]) == len(layers)
+    assert "util" in rpt.describe()
+
+
+def test_measure_network_graph_merge_nodes():
+    graph = networks.vnet_graph(in_spatial=(8, 8, 8), chans=(2, 4),
+                                cin=1, num_classes=2)
+    tel = obs.Telemetry.create()
+    rpt = obs.measure_network(graph, UniformEngine(method="xla"),
+                              repeats=1, peak_gflops=100.0,
+                              name="vnet", telemetry=tel)
+    ops = {r.op for r in rpt.layers}
+    assert "concat" in ops                               # skip merges timed
+    assert all(r.macs == 0 for r in rpt.layers if r.op == "concat")
+    assert rpt.total_macs > 0
+    # telemetry joined in: per-layer histogram + utilization gauge + span
+    h = tel.registry.get("runtime_layer_seconds", network="vnet",
+                         method="xla")
+    assert h is not None and h.count == len(rpt.layers)
+    assert tel.registry.get("runtime_utilization_pct", network="vnet",
+                            method="xla") is not None
+    assert tel.tracer.events("measure")
+
+
+def test_machine_peak_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PEAK_GFLOPS", "123.5")
+    assert obs.machine_peak_gflops() == 123.5
+
+
+# ---------------------------------------------------------------------------
+# Serving stats on the registry
+# ---------------------------------------------------------------------------
+
+def test_dcnn_server_stats_ride_registry(rng):
+    from repro.runtime.dcnn_server import (DcnnServer, ServeRequest,
+                                           dcgan_gen_spec)
+
+    tel = obs.Telemetry.create()
+    srv = DcnnServer([dcgan_gen_spec(chans=(8, 4, 3))], primary="xla",
+                     fallback="xla", max_batch=2, telemetry=tel)
+    for _ in range(4):
+        x = rng.randn(4, 4, 8).astype(np.float32)
+        srv.submit(ServeRequest("dcgan_gen", x))
+        for r in srv.drain():
+            assert r.ok
+    stats = srv.stats()
+    # same dict shape as ever, now sourced from registry counters
+    assert stats["completed"] == 4
+    assert tel.registry.get("serve_completed_total").value == 4
+    assert tel.registry.get("serve_queue_wait_seconds").count == 4
+    assert stats["queue_depth"] == 0
+    for b in stats["buckets"].values():
+        assert {"engine", "batches", "p50_us", "n"} <= set(b)
+    # per-bucket latency landed in a labelled histogram
+    lat = [i for i in tel.registry.instruments()
+           if i.name == "serve_latency_seconds"]
+    assert lat and sum(h.count for h in lat) == 4
+    spans = tel.tracer.events("dispatch")
+    assert spans and all(s["duration_s"] >= 0 for s in spans)
