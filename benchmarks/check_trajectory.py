@@ -32,10 +32,13 @@ ROOT = Path(__file__).resolve().parents[1]
 
 # the rows the trajectory is anchored on: the compiled whole-network
 # schedules (chains AND the DAG graphs with fused epilogues), the
-# heaviest single-kernel conv row, and the serving tier's steady-state
-# p50 latency per served model (benchmarks/serve_bench.py)
+# autotuned compiled schedules (repro.tune winners driving the engine
+# through the tuned-plan cache), the heaviest single-kernel conv row, and
+# the serving tier's steady-state p50 latency per served model
+# (benchmarks/serve_bench.py)
 KEY_PATTERNS = ("net_*_compiled_pallas", "net_*_graph_pallas",
-                "conv_3d_s2_pallas", "serve_*_p50_pallas")
+                "tuned_*_pallas", "conv_3d_s2_pallas",
+                "serve_*_p50_pallas")
 
 # anchored but NEVER gated: the runtime-utilization rows (util_* — the
 # measured Fig. 6 numbers; absolute utilization is a property of the host,

@@ -88,6 +88,7 @@ def run() -> list[str]:
     schedules.update(_graph_rows(rng, rec))
     schedules["dcgan_gen_sharded"] = _sharded_rows(rng, rec)
     runtime = _runtime_rows(rng, rec)
+    tuned = _tuned_rows(rng, rec)
 
     # Planner decisions + VMEM working sets for the REAL layer geometry
     # (forward plan and the backward-budgeted training plan).  The lift
@@ -118,7 +119,7 @@ def run() -> list[str]:
                        "step_vmem_bytes": vb,
                        "step_vmem_bytes_bwd": vbb}
 
-    _write_json(recs, plans, schedules, runtime)
+    _write_json(recs, plans, schedules, runtime, tuned)
     return [f"{r['name']},{r['us']:.0f},{r['detail']}" for r in recs]
 
 
@@ -318,22 +319,19 @@ def _network_rows(rec) -> None:
 
 
 def _bench_gen_chain():
-    """The bench's reduced DCGAN generator chain — shared by the compiled
-    rows and the sharded row so they stay the same network."""
-    return networks.deconv_stack("dcgan", 2, 4, [32, 16, 8, 4, 3])
+    """The bench's reduced DCGAN generator chain — ONE definition shared
+    with the autotuning sweep driver (``repro.launch.tune``) so the bench
+    rows, the tuned rows and the persisted tuned-plan cache all describe
+    the same network."""
+    from repro.launch.tune import bench_networks
+
+    return bench_networks()["dcgan_gen"]
 
 
 def _bench_vnet_chain():
-    vnet = networks.conv_stack("vnet", (8, 8, 8),
-                               [(1, 4), (4, 8), (8, 16)])
-    sp = vnet[-1].out_spatial
-    for i, (ci, co) in enumerate([(16, 8), (8, 4)]):
-        vnet.append(networks.UniformLayer(
-            name=f"vnet.up{i + 1}", in_spatial=sp, cin=ci, cout=co,
-            kernel=(3,) * 3, stride=(2,) * 3, padding=((0, 1),) * 3,
-            op="deconv"))
-        sp = vnet[-1].out_spatial
-    return vnet
+    from repro.launch.tune import bench_networks
+
+    return bench_networks()["vnet"]
 
 
 def _compiled_rows(rng, rec) -> dict:
@@ -502,7 +500,56 @@ def _runtime_rows(rng, rec) -> dict:
     return runtime
 
 
-def _write_json(recs, plans, schedules, runtime) -> None:
+def _tuned_rows(rng, rec) -> dict:
+    """Autotuned-schedule rows: ``repro.tune`` searches the tile-plan
+    space for the SAME bench networks (model-ranked, top-1 measured live
+    against the first-fit heuristic), then the tuned cache drives a fresh
+    engine through ``EngineConfig(tuned_plans=...)``.  Emits
+    ``tuned_{name}_pallas`` (gated by the trajectory) with its
+    ``tuned_{name}_xla`` sibling for machine-normalization, asserts the
+    tuned engine planned with ZERO heuristic fallbacks and parity vs XLA
+    at 1e-4.  The per-geometry winners land in the JSON payload."""
+    from repro import tune as _tune
+    from repro.launch.tune import bench_networks
+
+    key = jax.random.PRNGKey(0)
+    nets = bench_networks()
+    cache = _tune.TunedPlanCache()
+    tuned = {"entries": {}, "networks": {}}
+    for name, layers in nets.items():
+        cache, results = _tune.tune_network(
+            layers, trials=24, measure_topk=1, repeats=2, seed=0,
+            cache=cache)
+        tuned["networks"][name] = [r.to_json() for r in results]
+
+    for name, layers in nets.items():
+        ws = init_network_weights(layers, key)
+        x = jnp.asarray(
+            rng.randn(1, *layers[0].in_spatial, layers[0].cin) * 0.3,
+            jnp.float32)
+        outs = {}
+        for method in ("pallas", "xla"):
+            eng = UniformEngine(EngineConfig(
+                method=method,
+                tuned_plans=cache if method == "pallas" else None))
+            fn, report = compile_network(layers, eng)
+            f = jax.jit(fn)
+            outs[method] = np.asarray(f(ws, x))
+            detail = f"grid{report.grid_steps}_mxu{report.mxu_dispatches}"
+            if method == "pallas":
+                assert eng.plan_sources["heuristic"] == 0, (
+                    "tuned bench engine fell back to the heuristic: "
+                    f"{eng.plan_sources}")
+                detail += f"_tunedhits{eng.plan_sources['tuned']}"
+            rec(f"tuned_{name}_{method}", _time(f, ws, x), detail)
+        np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                                   rtol=1e-4, atol=1e-4)
+    tuned["entries"] = {k: e.to_json() for k, e in
+                        sorted(cache.entries.items())}
+    return tuned
+
+
+def _write_json(recs, plans, schedules, runtime, tuned) -> None:
     payload = {
         "bench": "kernel",
         "jax": jax.__version__,
@@ -512,6 +559,7 @@ def _write_json(recs, plans, schedules, runtime) -> None:
         "plans": plans,
         "schedules": schedules,
         "runtime": runtime,
+        "tuned": tuned,
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
 

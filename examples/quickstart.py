@@ -213,4 +213,30 @@ print("  prometheus text, first lines:")
 for line in prom.splitlines()[:4]:
     print(f"    {line}")
 
+print("\n=== tune it: search the plan space once, remember forever ===")
+# plan_uniform_tiles is first-fit; repro.tune searches the WHOLE legal
+# (dtile, block_ci, block_co) space per geometry — every candidate
+# VMEM-feasible by construction — under a calibrated analytic latency
+# model, measures the model's top-k live, and persists the winners in a
+# versioned TunedPlanCache.  Hand the cache to EngineConfig(tuned_plans=)
+# and every engine.plan() for a tuned geometry skips the search AND the
+# heuristic (telemetry counts tuned hits vs heuristic fallbacks).  The
+# full sweep driver is `python -m repro.launch.tune`.
+import tempfile
+
+from repro import tune
+
+cache, tuned = tune.tune_network(layers, trials=16, measure_topk=1,
+                                 repeats=1)
+for t in tuned:
+    print(f"  {t.key}: {t.plan.describe()} [{t.entry.winner_source}]"
+          f" from {t.candidates} candidates")
+path = cache.save(tempfile.mkdtemp() + "/tuned_plans.json")
+tuned_engine = UniformEngine(EngineConfig(
+    method="pallas", tuned_plans=tune.TunedPlanCache.load(path)))
+tapply, _ = compile_network(layers, tuned_engine)
+err = np.abs(np.asarray(jax.jit(tapply)(ws, z)) - np.asarray(out)).max()
+print(f"  reloaded cache -> plan sources {tuned_engine.plan_sources} "
+      f"(zero search), max|err vs heuristic engine|={err:.2e}")
+
 print("\nquickstart OK")

@@ -173,6 +173,15 @@ class EngineConfig:
     telemetry-free: no registry is created, no instrument is ever
     touched.  ``Telemetry`` hashes by identity, so configs stay usable as
     memoization keys.
+
+    ``tuned_plans`` (optional, a ``repro.tune.TunedPlanCache``) is the
+    persisted autotuner output: on a plan-cache miss the engine consults
+    it BEFORE the first-fit heuristic — a tuned geometry reaches its
+    searched-and-measured plan with zero planner work (telemetry counts
+    ``engine_plan_tuned_hits_total`` vs ``engine_plan_heuristic_total``).
+    Plans whose working set exceeds THIS config's VMEM budget are ignored
+    (a cache tuned at a larger budget can never over-commit a smaller
+    engine).  Like ``Telemetry`` it hashes by identity.
     """
     method: str = "xla"
     preferred_element_type: Any = None
@@ -184,6 +193,7 @@ class EngineConfig:
     mesh: Mesh | None = None
     policy: MeshPolicy = MeshPolicy()
     telemetry: Any = None
+    tuned_plans: Any = None
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -244,6 +254,10 @@ class UniformEngine:
                             f"{config!r}")
         self.config = config
         self._plans: dict[tuple, _tiling.DeconvTilePlan] = {}
+        # where each memo MISS got its plan from: "tuned" (the persisted
+        # autotuner cache) vs "heuristic" (first-fit ran) — the driver's
+        # zero-search assertion without telemetry plumbing
+        self.plan_sources: dict[str, int] = {"tuned": 0, "heuristic": 0}
 
     def __repr__(self):
         return (f"UniformEngine({self.config!r}, "
@@ -277,13 +291,27 @@ class UniformEngine:
         if plan is None:
             cfg = self.config
             t0 = time.perf_counter()
-            plan = self._plans[key] = _tiling.plan_uniform_tiles(
-                key[1], key[2], key[3], key[4], key[5], mode=mode,
-                vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
-                block_co=cfg.block_co, groups=groups, dilation=dilation,
-                backward=backward, in_dtype_bytes=in_dtype_bytes)
+            tuned = None
+            if cfg.tuned_plans is not None:
+                tuned = cfg.tuned_plans.lookup(key,
+                                               vmem_budget=cfg.vmem_budget)
+            if tuned is not None:
+                # the autotuner already searched this geometry: reuse its
+                # winner, zero heuristic work
+                plan = self._plans[key] = tuned
+                self.plan_sources["tuned"] += 1
+            else:
+                plan = self._plans[key] = _tiling.plan_uniform_tiles(
+                    key[1], key[2], key[3], key[4], key[5], mode=mode,
+                    vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
+                    block_co=cfg.block_co, groups=groups, dilation=dilation,
+                    backward=backward, in_dtype_bytes=in_dtype_bytes)
+                self.plan_sources["heuristic"] += 1
             if tel is not None:
                 tel.registry.counter("engine_plan_cache_misses_total").inc()
+                tel.registry.counter(
+                    "engine_plan_tuned_hits_total" if tuned is not None
+                    else "engine_plan_heuristic_total").inc()
                 tel.registry.histogram("engine_plan_seconds").observe(
                     time.perf_counter() - t0)
         elif tel is not None:

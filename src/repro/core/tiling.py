@@ -154,6 +154,13 @@ class DeconvTilePlan:
     kernels/conv/kernel.py).  ``step_vmem_bytes`` is the modeled per-step
     working set the decision was made against — benchmarks report it
     alongside timings.
+
+    ``modeled_cost`` is the analytic per-layer cost (abstract seconds at
+    the module's NOMINAL_* machine constants) the plan was scored with —
+    zero for plans built before scoring, excluded from equality/hashing so
+    a scored plan and its unscored twin stay the same cache key.  The
+    ``repro.tune`` searcher re-scores candidates with calibrated machine
+    numbers; this field records the ranking signal on the plan itself.
     """
     dtile: int
     n_dtiles: int
@@ -161,6 +168,7 @@ class DeconvTilePlan:
     block_co: int
     step_vmem_bytes: int
     vmem_budget: int
+    modeled_cost: float = dataclasses.field(default=0.0, compare=False)
 
     @property
     def split(self) -> bool:
@@ -220,6 +228,47 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
     the budget); ``dilation`` widens every kernel footprint in the byte
     model to the effective extent.
     """
+    d_eff, step_bytes = step_byte_model(
+        in_spatial, kernel, stride, mode=mode, backward=backward,
+        in_dtype_bytes=in_dtype_bytes, dilation=dilation)
+    assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
+    bci = block_ci or min(max(cin // groups, 1), 128)
+    bco = block_co or min(max(cout // groups, 1), 128)
+
+    dtile = d_eff
+    if allow_split:
+        while dtile > 1 and step_bytes(dtile, bci, bco) > vmem_budget:
+            dtile = -(-dtile // 2)
+    if block_co is None:
+        while step_bytes(dtile, bci, bco) > vmem_budget and bco > 8:
+            bco //= 2
+    if block_ci is None:
+        while step_bytes(dtile, bci, bco) > vmem_budget and bci > 8:
+            bci //= 2
+    n_dt = -(-d_eff // dtile)
+    plan = DeconvTilePlan(dtile=dtile, n_dtiles=n_dt,
+                          block_ci=bci, block_co=bco,
+                          step_vmem_bytes=step_bytes(dtile, bci, bco),
+                          vmem_budget=vmem_budget)
+    return dataclasses.replace(plan, modeled_cost=modeled_cost(
+        plan_cost_terms(plan, in_spatial, kernel, stride, cin, cout,
+                        mode=mode, groups=groups, dilation=dilation,
+                        in_dtype_bytes=in_dtype_bytes)))
+
+
+def step_byte_model(in_spatial, kernel, stride, *, mode: str = "deconv",
+                    backward: bool = False, in_dtype_bytes: int = 2,
+                    dilation=None):
+    """The ONE per-grid-step VMEM byte model, shared by the first-fit
+    heuristic (``plan_uniform_tiles``) and the tuner's candidate
+    enumeration (``candidate_tile_plans`` / ``repro.tune``).
+
+    Returns ``(d_eff, step_bytes)``: the planned leading extent (the
+    lifted leading dim plus the halo-carry slack rows) and a callable
+    ``step_bytes(dtile, block_ci, block_co) -> int`` evaluating the
+    working set of one grid step — for ``backward=True`` the max over the
+    forward and the two VJP kernels, exactly as the heuristic budgets it.
+    """
     from repro.kernels.deconv import kernel as _k  # local: avoids a cycle
 
     if mode == "conv":
@@ -262,26 +311,168 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
     else:
         raise ValueError(f"unknown mode {mode!r}; expected 'deconv'|'conv'")
 
-    d_eff = d + _k.halo_depth(kernel, stride, dilation)
-    assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
-    bci = block_ci or min(max(cin // groups, 1), 128)
-    bco = block_co or min(max(cout // groups, 1), 128)
+    return d + _k.halo_depth(kernel, stride, dilation), step_bytes
 
-    dtile = d_eff
-    if allow_split:
-        while dtile > 1 and step_bytes(dtile, bci, bco) > vmem_budget:
-            dtile = -(-dtile // 2)
-    if block_co is None:
-        while step_bytes(dtile, bci, bco) > vmem_budget and bco > 8:
-            bco //= 2
-    if block_ci is None:
-        while step_bytes(dtile, bci, bco) > vmem_budget and bci > 8:
-            bci //= 2
-    n_dt = -(-d_eff // dtile)
-    return DeconvTilePlan(dtile=dtile, n_dtiles=n_dt,
-                          block_ci=bci, block_co=bco,
-                          step_vmem_bytes=step_bytes(dtile, bci, bco),
-                          vmem_budget=vmem_budget)
+
+# -- Analytic plan cost + the tuner's candidate space ------------------------
+
+# Nominal machine constants behind the UNCALIBRATED ``modeled_cost`` on a
+# plan: a mid-range host's dense-FMA throughput, streaming bandwidth, and
+# per-grid-step / per-MXU-dispatch overheads.  Only RATIOS between plans of
+# one geometry matter for the heuristic's bookkeeping; ``repro.tune``
+# re-scores the same terms with calibrated numbers
+# (``obs.machine_peak_gflops`` / ``obs.machine_mem_gbps``).
+NOMINAL_PEAK_FLOPS = 100e9
+NOMINAL_MEM_BPS = 50e9
+NOMINAL_STEP_OVERHEAD_S = 1e-6
+NOMINAL_DISPATCH_OVERHEAD_S = 2e-7
+
+
+def plan_cost_terms(plan: DeconvTilePlan, in_spatial, kernel, stride,
+                    cin: int, cout: int, *, mode: str = "deconv",
+                    groups: int = 1, dilation=None,
+                    in_dtype_bytes: int = 2, batch: int = 1) -> dict:
+    """The raw accounting behind a plan's latency model, for one layer.
+
+    Mirrors the engine's grid arithmetic (``_schedule_layer``): grid steps
+    enumerate batch x output-channel blocks x leading-dim tiles x per-group
+    input blocks; MXU dispatches are the non-empty polyphase taps per step.
+    ``flops`` is the BLOCK-PADDED work the grid actually issues (ceil
+    effects when a dim does not divide its tile are charged, exactly the
+    idle-PE penalty of the paper's Fig. 6 model), and ``hbm_bytes`` charges
+    each step its full VMEM working set — the double-buffered traffic a
+    grid step streams.
+    """
+    from repro.kernels import common as _kcommon
+
+    dilation = (tuple(dilation) if dilation is not None
+                else (1,) * len(tuple(kernel)))
+    g = groups
+    ci_blocks = -(-(cin // g) // plan.block_ci)
+    co_blocks = g * -(-(cout // g) // plan.block_co)
+    grid_steps = batch * co_blocks * plan.n_dtiles * ci_blocks
+    mxu_per_step = len(_kcommon.phase_taps(kernel, stride, dilation))
+    if mode == "conv":
+        from repro.core.engine import conv_output_shape  # local: cycle
+        out_sp = conv_output_shape(in_spatial, kernel, stride,
+                                   dilation=dilation)
+        lead_elems = plan.dtile * math.prod(out_sp[1:])
+    else:
+        lead_elems = plan.dtile * math.prod(tuple(in_spatial)[1:])
+    flops_per_step = (2 * math.prod(kernel) * lead_elems
+                      * plan.block_ci * plan.block_co)
+    return {
+        "grid_steps": grid_steps,
+        "mxu_dispatches": grid_steps * mxu_per_step,
+        "flops": grid_steps * flops_per_step,
+        "hbm_bytes": grid_steps * plan.step_vmem_bytes,
+    }
+
+
+def modeled_cost(terms: dict, *, peak_flops: float = NOMINAL_PEAK_FLOPS,
+                 mem_bps: float = NOMINAL_MEM_BPS,
+                 step_overhead_s: float = NOMINAL_STEP_OVERHEAD_S,
+                 dispatch_overhead_s: float = NOMINAL_DISPATCH_OVERHEAD_S,
+                 ) -> float:
+    """Roofline-with-overheads latency (seconds) from ``plan_cost_terms``:
+    max(compute, memory) under double buffering, plus the per-step grid
+    dispatch and per-matmul MXU issue overheads that make over-split plans
+    lose even when their roofline terms tie."""
+    compute_s = terms["flops"] / peak_flops
+    memory_s = terms["hbm_bytes"] / mem_bps
+    return (max(compute_s, memory_s)
+            + terms["grid_steps"] * step_overhead_s
+            + terms["mxu_dispatches"] * dispatch_overhead_s)
+
+
+def _halving_chain(start: int) -> list[int]:
+    vals, v = [], max(start, 1)
+    while True:
+        vals.append(v)
+        if v == 1:
+            return vals
+        v //= 2
+
+
+def _block_candidates(chan_g: int) -> list[int]:
+    """Legal channel-block extents for one grid dim: the heuristic's
+    halving chain from ``min(chan_g, 128)`` plus the power-of-two ladder,
+    restricted to block sizes that COVER the extent exactly (divisors) —
+    with the single exception of the MXU-lane cap itself (``chan_g > 128``
+    starts at 128, same as the heuristic), so every tuned plan's channel
+    grid is at least as well-formed as the heuristic's."""
+    start = min(max(chan_g, 1), 128)
+    cands = set(_halving_chain(start))
+    cands |= {p for p in (8, 16, 32, 64, 128) if p <= chan_g}
+    return sorted(v for v in cands if chan_g % v == 0 or v == start)
+
+
+def _dtile_candidates(d_eff: int, max_values: int = 32) -> list[int]:
+    """Leading-dim tile extents: every value when the extent is small,
+    else the ceil-halving chain (the heuristic's path) plus an even
+    geometric fill up to ``max_values`` points."""
+    if d_eff <= max_values:
+        return list(range(1, d_eff + 1))
+    vals = set()
+    v = d_eff
+    while v > 1:
+        vals.add(v)
+        v = -(-v // 2)
+    vals.add(1)
+    step = d_eff / max_values
+    vals |= {max(1, round(step * i)) for i in range(1, max_values + 1)}
+    return sorted(vals)
+
+
+def candidate_tile_plans(in_spatial, kernel, stride, cin, cout, *,
+                         mode: str = "deconv",
+                         vmem_budget: int = DECONV_VMEM_BUDGET,
+                         allow_split: bool = True,
+                         backward: bool = False,
+                         in_dtype_bytes: int = 2,
+                         groups: int = 1,
+                         dilation=None) -> list[DeconvTilePlan]:
+    """Enumerate the legal ``(dtile, block_ci, block_co)`` design space.
+
+    The tuner's search space, built on the SAME ``step_byte_model`` the
+    first-fit heuristic plans against — every returned plan satisfies the
+    VMEM budget by construction, carries its working set and its
+    ``modeled_cost`` at the nominal machine constants, and covers the
+    heuristic's own choice (so search can never do worse than first-fit
+    under the model).  When even the smallest point overflows the budget
+    (the geometry cannot fit a grid step), the list degenerates to the
+    heuristic's best-effort overflow plan, preserving
+    ``plan_uniform_tiles``' behaviour.
+    """
+    d_eff, step_bytes = step_byte_model(
+        in_spatial, kernel, stride, mode=mode, backward=backward,
+        in_dtype_bytes=in_dtype_bytes, dilation=dilation)
+    assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
+    dts = _dtile_candidates(d_eff) if allow_split else [d_eff]
+    plans = []
+    for dt in dts:
+        n_dt = -(-d_eff // dt)
+        for bci in _block_candidates(cin // groups):
+            for bco in _block_candidates(cout // groups):
+                sb = step_bytes(dt, bci, bco)
+                if sb > vmem_budget:
+                    continue
+                plan = DeconvTilePlan(dtile=dt, n_dtiles=n_dt,
+                                      block_ci=bci, block_co=bco,
+                                      step_vmem_bytes=sb,
+                                      vmem_budget=vmem_budget)
+                plans.append(dataclasses.replace(
+                    plan, modeled_cost=modeled_cost(plan_cost_terms(
+                        plan, in_spatial, kernel, stride, cin, cout,
+                        mode=mode, groups=groups, dilation=dilation,
+                        in_dtype_bytes=in_dtype_bytes))))
+    if not plans:
+        plans = [plan_uniform_tiles(
+            in_spatial, kernel, stride, cin, cout, mode=mode,
+            vmem_budget=vmem_budget, allow_split=allow_split,
+            backward=backward, in_dtype_bytes=in_dtype_bytes,
+            groups=groups, dilation=dilation)]
+    return plans
 
 
 # -- TPU mapping -------------------------------------------------------------

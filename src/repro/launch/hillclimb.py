@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The 512-way forced-host topology is for the SCRIPT entrypoint only:
+# importing this module as a library (repro.launch.tune reuses
+# parse_value; tests import freely) must never clobber the process's
+# device topology — jax reads XLA_FLAGS once at backend init, so a
+# module-import mutation here would silently re-shape every later mesh.
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """§Perf hillclimb runner: re-measure one (arch x shape) cell with config
 overrides, writing experiments/hillclimb/<tag>.json.  Baselines under

@@ -1,0 +1,155 @@
+"""Autotuning sweep driver: search tile plans for the bench networks,
+persist the tuned-plan cache, prove the zero-search reload.
+
+    PYTHONPATH=src python -m repro.launch.tune \
+        [--networks dcgan_gen,vnet] [--out experiments/tuned_plans.json] \
+        [--trials 32] [--measure-topk 2] [--repeats 3] [--seed 0] \
+        [--model-only] [--set mem_bps=5e10]
+
+Flow (the "pay once per geometry, ever" loop):
+
+  1. build the bench networks (the SAME reduced DCGAN generator and V-Net
+     chains ``benchmarks/kernel_bench.py`` times — one definition, here);
+  2. ``tune.tune_network`` each: enumerate the legal plan space, rank it
+     under the calibrated latency model, measure the top-k live, keep the
+     winners;
+  3. persist the ``TunedPlanCache`` to ``--out``;
+  4. RELOAD the file into a fresh telemetry-instrumented engine and
+     ``compile_network`` both networks again, asserting every plan came
+     from the cache (``engine_plan_tuned_hits_total`` == planned layers,
+     ``engine_plan_heuristic_total`` == 0) — the acceptance contract that
+     a second engine reaches the tuned plans with zero search.
+
+``--set key=value`` overrides ``LatencyModel`` fields (values parsed via
+``launch.hillclimb.parse_value`` — imported as a library, which is why
+that module must not clobber XLA_FLAGS at import).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+from repro.core import networks
+from repro.launch.hillclimb import parse_value
+from repro import tune
+
+
+def bench_networks() -> dict[str, list]:
+    """The tuned/benched network pair — ONE definition shared with
+    ``benchmarks/kernel_bench.py`` so the tuner, the bench rows and the
+    trajectory gate all talk about the same schedules."""
+    gen = networks.deconv_stack("dcgan", 2, 4, [32, 16, 8, 4, 3])
+    vnet = networks.conv_stack("vnet", (8, 8, 8),
+                               [(1, 4), (4, 8), (8, 16)])
+    sp = vnet[-1].out_spatial
+    for i, (ci, co) in enumerate([(16, 8), (8, 4)]):
+        vnet.append(networks.UniformLayer(
+            name=f"vnet.up{i + 1}", in_spatial=sp, cin=ci, cout=co,
+            kernel=(3,) * 3, stride=(2,) * 3, padding=((0, 1),) * 3,
+            op="deconv"))
+        sp = vnet[-1].out_spatial
+    return {"dcgan_gen": gen, "vnet": vnet}
+
+
+def verify_zero_search(cache: tune.TunedPlanCache, nets: dict) -> dict:
+    """Build a FRESH engine per network from the persisted cache and
+    compile: every plan must be a tuned hit, zero heuristic fallbacks.
+    Returns the per-network telemetry counts (raises on violation)."""
+    from repro import obs
+    from repro.core import EngineConfig, UniformEngine, compile_network
+
+    out = {}
+    for name, net in nets.items():
+        tel = obs.Telemetry.create()
+        eng = UniformEngine(EngineConfig(method="pallas",
+                                         tuned_plans=cache, telemetry=tel))
+        compile_network(net, eng)
+        def count(metric):
+            m = tel.registry.get(metric)
+            return m.value if m is not None else 0
+        tuned = count("engine_plan_tuned_hits_total")
+        heur = count("engine_plan_heuristic_total")
+        if heur or tuned != len(eng.plan_cache):
+            raise AssertionError(
+                f"{name}: reload was not search-free "
+                f"(tuned={tuned}, heuristic={heur}, "
+                f"plans={len(eng.plan_cache)})")
+        out[name] = {"tuned_hits": int(tuned), "heuristic": int(heur),
+                     "plans": len(eng.plan_cache)}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", default="dcgan_gen,vnet",
+                    help="comma list from: %s" % ",".join(bench_networks()))
+    ap.add_argument("--out", default="experiments/tuned_plans.json")
+    ap.add_argument("--trials", type=int, default=32)
+    ap.add_argument("--measure-topk", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-only", action="store_true",
+                    help="rank by the analytic model only (no live "
+                         "measurement) — fully deterministic")
+    ap.add_argument("--resume", action="store_true",
+                    help="load --out first and only tune geometries it "
+                         "does not already cover")
+    ap.add_argument("--set", action="append", default=[],
+                    help="LatencyModel override field=value (repeatable)")
+    args = ap.parse_args(argv)
+
+    model = tune.LatencyModel() if args.model_only \
+        else tune.LatencyModel.calibrate()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    if overrides:
+        model = dataclasses.replace(model, **overrides)
+
+    all_nets = bench_networks()
+    names = [n.strip() for n in args.networks.split(",") if n.strip()]
+    unknown = sorted(set(names) - set(all_nets))
+    if unknown:
+        ap.error(f"unknown networks {unknown}; have {sorted(all_nets)}")
+    nets = {n: all_nets[n] for n in names}
+
+    out_path = pathlib.Path(args.out)
+    cache = (tune.TunedPlanCache.load(out_path)
+             if args.resume and out_path.exists() else tune.TunedPlanCache())
+    topk = 0 if args.model_only else args.measure_topk
+
+    t0 = time.perf_counter()
+    summaries = {}
+    for name, net in nets.items():
+        cache, results = tune.tune_network(
+            net, trials=args.trials, measure_topk=topk,
+            repeats=args.repeats, seed=args.seed, model=model, cache=cache)
+        for r in results:
+            print(r.describe())
+        summaries[name] = [r.to_json() for r in results]
+    sweep_s = time.perf_counter() - t0
+
+    cache.meta.update({
+        "networks": names, "trials": args.trials, "measure_topk": topk,
+        "repeats": args.repeats, "seed": args.seed, "sweep_s": sweep_s,
+        "model": dataclasses.asdict(model),
+    })
+    cache.save(out_path)
+    print(f"wrote {out_path} ({len(cache)} tuned geometries, "
+          f"{sweep_s:.1f}s sweep)")
+
+    reloaded = tune.TunedPlanCache.load(out_path)
+    counts = verify_zero_search(reloaded, nets)
+    print(json.dumps({"out": str(out_path), "entries": len(reloaded),
+                      "zero_search_reload": counts,
+                      "tuned": summaries}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,7 @@ from repro.obs.report import (
     LayerRuntime,
     RuntimeReport,
     instrument_apply,
+    machine_mem_gbps,
     machine_peak_gflops,
     measure_network,
     timed_call,
@@ -109,6 +110,7 @@ __all__ = [
     "Telemetry",
     "Tracer",
     "instrument_apply",
+    "machine_mem_gbps",
     "machine_peak_gflops",
     "measure_network",
     "quantile",

@@ -72,6 +72,37 @@ def machine_peak_gflops(*, force: bool = False) -> float:
     return _PEAK_CACHE["peak"]
 
 
+def _calibrate_mem_gbps(n: int = 1 << 22, repeats: int = 5) -> float:
+    """Best-of-``repeats`` streaming bandwidth in GB/s: one read + one
+    write of an ``n``-element f32 buffer (an axpy-like traversal — the
+    same traffic pattern a grid step's slab loads/stores follow)."""
+    a = jnp.ones((n,), jnp.float32)
+    f = jax.jit(lambda a: a * 1.0001 + 1.0)
+    jax.block_until_ready(f(a))              # compile outside the clock
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(a))
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * a.nbytes / best / 1e9
+
+
+def machine_mem_gbps(*, force: bool = False) -> float:
+    """The streaming-bandwidth roof used by the tuner's latency model.
+
+    ``REPRO_MEM_GBPS`` overrides (datasheet number); otherwise a cached
+    one-shot elementwise-traversal probe measures this host — the sloped
+    roof of the same roofline whose flat roof ``machine_peak_gflops``
+    calibrates.
+    """
+    env = os.environ.get("REPRO_MEM_GBPS")
+    if env is not None:
+        return float(env)
+    if force or "mem" not in _PEAK_CACHE:
+        _PEAK_CACHE["mem"] = _calibrate_mem_gbps()
+    return _PEAK_CACHE["mem"]
+
+
 # ---------------------------------------------------------------------------
 # Host-side dispatch instrumentation.
 # ---------------------------------------------------------------------------

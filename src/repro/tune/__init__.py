@@ -1,0 +1,55 @@
+"""repro.tune — search-based autotuning of tile plans, remembered forever.
+
+Replaces "plan once by heuristic" with "search once per geometry":
+
+  * ``model`` — the calibrated analytic latency model for the Pallas grid
+    and the legal candidate-plan space (ONE enumeration + ONE VMEM byte
+    model, shared with ``tiling.plan_uniform_tiles``).
+  * ``search`` — the seeded tuner: exhaustive / random-sweep +
+    simulated-annealing search under the model, live measurement of the
+    top-k, ``tune_network`` over whole chains and DAGs.
+  * ``cache`` — the versioned, geometry-keyed ``TunedPlanCache`` persisted
+    to JSON; ``EngineConfig(tuned_plans=cache)`` makes every
+    ``UniformEngine.plan`` consult it before the first-fit heuristic, so
+    tuning cost is paid once per geometry, ever.
+
+Sweep driver: ``python -m repro.launch.tune`` (DCGAN generator + V-Net).
+"""
+
+from repro.tune.cache import (
+    SCHEMA_VERSION,
+    TunedEntry,
+    TunedPlanCache,
+    TunedPlanSchemaError,
+    key_from_tuple,
+    plan_key,
+)
+from repro.tune.model import (
+    LatencyModel,
+    LayerGeometry,
+    candidate_plans,
+)
+from repro.tune.search import (
+    TuneResult,
+    measure_plan,
+    network_geometries,
+    tune_layer,
+    tune_network,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "LatencyModel",
+    "LayerGeometry",
+    "TuneResult",
+    "TunedEntry",
+    "TunedPlanCache",
+    "TunedPlanSchemaError",
+    "candidate_plans",
+    "key_from_tuple",
+    "measure_plan",
+    "network_geometries",
+    "plan_key",
+    "tune_layer",
+    "tune_network",
+]

@@ -1,0 +1,214 @@
+"""The persisted tuned-plan cache: search once per geometry, remember
+forever.
+
+A ``TunedPlanCache`` maps a canonical geometry key — the SAME tuple the
+engine's in-memory plan cache is keyed by (mode, lifted spatial extent,
+kernel, stride, channels, groups, dilation, backward, dtype bytes) — to
+the winning ``DeconvTilePlan`` plus its tuning provenance (modeled cost,
+measured wall, trial budget, seed, winner source).  It round-trips
+through a versioned JSON file, so the tuner's cost is paid once per
+geometry, ever:
+
+    cache = tune.tune_network(layers)            # search + measure once
+    cache.save("tuned_plans.json")
+    ...
+    cache = tune.TunedPlanCache.load("tuned_plans.json")
+    engine = UniformEngine(EngineConfig(method="pallas",
+                                        tuned_plans=cache))
+    # every engine.plan() for a tuned geometry now hits the cache —
+    # zero search, zero heuristic fallback (telemetry-countable).
+
+Schema versioning: ``SCHEMA_VERSION`` is written into the file; loading a
+file with a different version yields an EMPTY cache (the engine falls
+back to the heuristic and a re-tune rebuilds the file) unless
+``strict=True``, which raises ``TunedPlanSchemaError``.
+
+Like ``obs.Telemetry``, the cache hashes by IDENTITY so it can ride
+inside the frozen ``EngineConfig`` dataclass without collapsing distinct
+configs into one memoized default engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterator
+
+from repro.core import tiling as _tiling
+
+SCHEMA_VERSION = 1
+
+
+class TunedPlanSchemaError(ValueError):
+    """A tuned-plan file's schema version does not match this build."""
+
+
+def plan_key(mode: str, in_spatial, kernel, stride, cin: int, cout: int, *,
+             groups: int = 1, dilation=None, backward: bool = False,
+             in_dtype_bytes: int = 2) -> str:
+    """Canonical string key for one tuned geometry.
+
+    Mirrors ``UniformEngine.plan``'s memo-key tuple field for field, so an
+    engine lookup and a tuner insertion agree by construction.
+    """
+    dilation = (tuple(dilation) if dilation is not None
+                else (1,) * len(tuple(in_spatial)))
+    return key_from_tuple((mode, tuple(in_spatial), tuple(kernel),
+                           tuple(stride), int(cin), int(cout), int(groups),
+                           dilation, bool(backward), int(in_dtype_bytes)))
+
+
+def key_from_tuple(key: tuple) -> str:
+    """Stringify the engine's plan-cache key tuple (see
+    ``UniformEngine.plan``): (mode, in_spatial, kernel, stride, cin, cout,
+    groups, dilation, backward, in_dtype_bytes)."""
+    mode, sp, k, s, cin, cout, g, dil, bwd, b = key
+    def _x(t):
+        return "x".join(str(int(v)) for v in t)
+    return (f"{mode}:sp{_x(sp)}:k{_x(k)}:s{_x(s)}:ci{cin}:co{cout}"
+            f":g{g}:d{_x(dil)}:{'bwd' if bwd else 'fwd'}:b{b}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedEntry:
+    """One cached winner: the plan plus how it was found."""
+    plan: _tiling.DeconvTilePlan
+    modeled_s: float = 0.0           # calibrated model latency of the winner
+    measured_s: float = 0.0          # live wall (0.0 = model-only tuning)
+    heuristic_measured_s: float = 0.0
+    trials: int = 0
+    candidates: int = 0
+    seed: int = 0
+    winner_source: str = "model"     # "model" | "measured" | "heuristic"
+
+    def to_json(self) -> dict:
+        p = self.plan
+        return {
+            "plan": {
+                "dtile": p.dtile, "n_dtiles": p.n_dtiles,
+                "block_ci": p.block_ci, "block_co": p.block_co,
+                "step_vmem_bytes": p.step_vmem_bytes,
+                "vmem_budget": p.vmem_budget,
+                "modeled_cost": p.modeled_cost,
+            },
+            "modeled_s": self.modeled_s,
+            "measured_s": self.measured_s,
+            "heuristic_measured_s": self.heuristic_measured_s,
+            "trials": self.trials,
+            "candidates": self.candidates,
+            "seed": self.seed,
+            "winner_source": self.winner_source,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedEntry":
+        plan = _tiling.DeconvTilePlan(**d["plan"])
+        return cls(plan=plan,
+                   modeled_s=float(d.get("modeled_s", 0.0)),
+                   measured_s=float(d.get("measured_s", 0.0)),
+                   heuristic_measured_s=float(
+                       d.get("heuristic_measured_s", 0.0)),
+                   trials=int(d.get("trials", 0)),
+                   candidates=int(d.get("candidates", 0)),
+                   seed=int(d.get("seed", 0)),
+                   winner_source=str(d.get("winner_source", "model")))
+
+
+class TunedPlanCache:
+    """Geometry-keyed store of tuned tile plans, JSON-persisted.
+
+    ``lookup`` is the engine-facing read path: it takes the engine's raw
+    key tuple, refuses plans that would overflow the CALLER's VMEM budget
+    (a cache tuned at 8 MiB must not hand an over-budget plan to a 1 MiB
+    engine), and counts hits/misses so drivers and tests can assert
+    "zero search" without telemetry plumbing.
+    """
+
+    def __init__(self, entries: dict[str, TunedEntry] | None = None,
+                 meta: dict | None = None):
+        self.entries: dict[str, TunedEntry] = dict(entries or {})
+        self.meta: dict = dict(meta or {})
+        self.lookups = 0
+        self.hits = 0
+
+    # identity hashing — usable inside the frozen EngineConfig
+    __hash__ = object.__hash__
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.entries)
+
+    def __repr__(self):
+        return (f"TunedPlanCache(entries={len(self.entries)}, "
+                f"hits={self.hits}/{self.lookups})")
+
+    # -- engine-facing read path -------------------------------------------
+
+    def lookup(self, key: tuple, *, vmem_budget: int | None = None,
+               ) -> _tiling.DeconvTilePlan | None:
+        self.lookups += 1
+        entry = self.entries.get(key_from_tuple(key))
+        if entry is None:
+            return None
+        if (vmem_budget is not None
+                and entry.plan.step_vmem_bytes > vmem_budget):
+            return None
+        self.hits += 1
+        return entry.plan
+
+    def get(self, key_str: str) -> TunedEntry | None:
+        return self.entries.get(key_str)
+
+    # -- tuner-facing write path -------------------------------------------
+
+    def put(self, key: tuple | str, plan: _tiling.DeconvTilePlan,
+            **meta) -> TunedEntry:
+        key_str = key if isinstance(key, str) else key_from_tuple(key)
+        entry = TunedEntry(plan=plan, **meta)
+        self.entries[key_str] = entry
+        return entry
+
+    def merge(self, other: "TunedPlanCache") -> "TunedPlanCache":
+        self.entries.update(other.entries)
+        return self
+
+    # -- persistence --------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "kind": "tuned_plan_cache",
+            "meta": self.meta,
+            "entries": {k: e.to_json()
+                        for k, e in sorted(self.entries.items())},
+        }
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1) + "\n")
+        return path
+
+    @classmethod
+    def from_json(cls, payload: dict, *, strict: bool = False,
+                  ) -> "TunedPlanCache":
+        version = payload.get("schema_version")
+        if version != SCHEMA_VERSION:
+            if strict:
+                raise TunedPlanSchemaError(
+                    f"tuned-plan schema v{version} != supported "
+                    f"v{SCHEMA_VERSION}; re-run the tuner to regenerate")
+            # stale schema: invalidate silently — the engine falls back to
+            # the heuristic and the next sweep rewrites the file
+            return cls(meta={"invalidated_version": version})
+        return cls(entries={k: TunedEntry.from_json(e)
+                            for k, e in payload.get("entries", {}).items()},
+                   meta=payload.get("meta", {}))
+
+    @classmethod
+    def load(cls, path, *, strict: bool = False) -> "TunedPlanCache":
+        payload = json.loads(pathlib.Path(path).read_text())
+        return cls.from_json(payload, strict=strict)

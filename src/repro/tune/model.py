@@ -1,0 +1,121 @@
+"""Analytic latency model for the Pallas grid, calibrated to this host.
+
+The FPGA side of the paper ranks tiling configurations with a
+double-buffered roofline (``tiling.model_layer``); this is the TPU-side
+sibling the autotuner ranks candidate ``DeconvTilePlan``s with:
+
+    seconds(plan) = max(padded_flops / peak,  step_traffic / bandwidth)
+                    + grid_steps * step_overhead
+                    + mxu_dispatches * dispatch_overhead
+
+where the terms come from ``tiling.plan_cost_terms`` (the engine's own
+grid arithmetic: block-padded FLOPs charge the ceil waste of non-dividing
+tiles, per-step traffic charges each step its whole VMEM working set) and
+the machine constants come from the ``repro.obs`` calibration probes —
+``machine_peak_gflops`` (the flat roof) and ``machine_mem_gbps`` (the
+sloped roof).  Overheads default to fixed nominal values: they only have
+to separate a 200-step grid from a 4-step grid, not predict microseconds.
+
+``candidate_plans`` is the tuner's view of the legal design space — a
+thin front over ``tiling.candidate_tile_plans`` so the enumeration and
+the VMEM feasibility check live in exactly one place (the planner's).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import tiling as _tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGeometry:
+    """One plannable geometry — the tuner's unit of work.
+
+    Spatial fields are the LIFTED canonical-3D extents the engine plans
+    with (``engine._lift_geometry``); for ``mode="conv"`` the spatial
+    extent is the PADDED conv input, matching the planner's contract.
+    """
+    mode: str                        # "deconv" | "conv"
+    in_spatial: tuple[int, ...]
+    kernel: tuple[int, ...]
+    stride: tuple[int, ...]
+    cin: int
+    cout: int
+    groups: int = 1
+    dilation: tuple[int, ...] = ()
+    backward: bool = False
+    in_dtype_bytes: int = 2
+
+    def __post_init__(self):
+        for f in ("in_spatial", "kernel", "stride"):
+            object.__setattr__(self, f, tuple(getattr(self, f)))
+        dil = self.dilation or (1,) * len(self.in_spatial)
+        object.__setattr__(self, "dilation", tuple(dil))
+
+    @property
+    def key_tuple(self) -> tuple:
+        """The engine's plan-cache key for this geometry (see
+        ``UniformEngine.plan``)."""
+        return (self.mode, self.in_spatial, self.kernel, self.stride,
+                int(self.cin), int(self.cout), int(self.groups),
+                self.dilation, bool(self.backward),
+                int(self.in_dtype_bytes))
+
+    def describe(self) -> str:
+        from repro.tune.cache import key_from_tuple
+        return key_from_tuple(self.key_tuple)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Roofline-with-overheads scorer for candidate plans, in seconds."""
+    peak_flops: float = _tiling.NOMINAL_PEAK_FLOPS
+    mem_bps: float = _tiling.NOMINAL_MEM_BPS
+    step_overhead_s: float = _tiling.NOMINAL_STEP_OVERHEAD_S
+    dispatch_overhead_s: float = _tiling.NOMINAL_DISPATCH_OVERHEAD_S
+
+    @classmethod
+    def calibrate(cls, **overrides) -> "LatencyModel":
+        """Machine constants from the live ``repro.obs`` probes (or the
+        ``REPRO_PEAK_GFLOPS`` / ``REPRO_MEM_GBPS`` env overrides)."""
+        from repro import obs
+
+        kw = {"peak_flops": obs.machine_peak_gflops() * 1e9,
+              "mem_bps": obs.machine_mem_gbps() * 1e9}
+        kw.update(overrides)
+        return cls(**kw)
+
+    def layer_seconds(self, plan: _tiling.DeconvTilePlan,
+                      geom: LayerGeometry, *, batch: int = 1) -> float:
+        """Modeled wall seconds of one layer forward under ``plan``."""
+        terms = _tiling.plan_cost_terms(
+            plan, geom.in_spatial, geom.kernel, geom.stride, geom.cin,
+            geom.cout, mode=geom.mode, groups=geom.groups,
+            dilation=geom.dilation, in_dtype_bytes=geom.in_dtype_bytes,
+            batch=batch)
+        return _tiling.modeled_cost(
+            terms, peak_flops=self.peak_flops, mem_bps=self.mem_bps,
+            step_overhead_s=self.step_overhead_s,
+            dispatch_overhead_s=self.dispatch_overhead_s)
+
+    def rank(self, plans, geom: LayerGeometry, *, batch: int = 1):
+        """Plans sorted cheapest-first; deterministic tie-break on the
+        plan tuple so equal-cost candidates order stably across runs."""
+        return sorted(
+            plans,
+            key=lambda p: (self.layer_seconds(p, geom, batch=batch),
+                           p.dtile, p.block_ci, p.block_co))
+
+
+def candidate_plans(geom: LayerGeometry, *,
+                    vmem_budget: int = _tiling.DECONV_VMEM_BUDGET,
+                    allow_split: bool = True):
+    """The legal, budget-feasible-by-construction design space for one
+    geometry — ``tiling.candidate_tile_plans`` under the tuner's
+    ``LayerGeometry`` naming (ONE enumeration, ONE byte model)."""
+    return _tiling.candidate_tile_plans(
+        geom.in_spatial, geom.kernel, geom.stride, geom.cin, geom.cout,
+        mode=geom.mode, vmem_budget=vmem_budget, allow_split=allow_split,
+        backward=geom.backward, in_dtype_bytes=geom.in_dtype_bytes,
+        groups=geom.groups, dilation=geom.dilation)

@@ -1,0 +1,298 @@
+"""Search-based autotuning of tile plans: model-ranked, measurement-picked.
+
+The fpgaHART-style loop, on the engine's own substrate:
+
+  1. **Enumerate** the legal ``(dtile, block_ci, block_co)`` space for a
+     geometry (``tune.model.candidate_plans`` — the planner's enumeration,
+     every point VMEM-feasible by construction).
+  2. **Search** it under the calibrated analytic ``LatencyModel``.  Small
+     spaces are scored exhaustively; large ones get a seeded random sweep
+     plus a simulated-annealing hill-climb over the (dtile, bci, bco)
+     coordinate lattice — deterministic for a fixed seed.
+  3. **Measure** the model's top-k candidates (plus the first-fit
+     heuristic's plan, always) live: each candidate is pinned into a
+     fresh engine through a single-entry ``TunedPlanCache`` and timed
+     with ``obs.measure_network``'s blocked walls.  The measured winner
+     is cached; with ``measure_topk=0`` tuning is model-only and exactly
+     reproducible.
+
+``tune_layer`` handles one geometry; ``tune_network`` walks a
+``UniformLayer`` chain or ``UniformGraph``, tunes each UNIQUE geometry
+once, and returns the filled ``TunedPlanCache`` ready to persist and to
+hand to ``EngineConfig(tuned_plans=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Sequence
+
+from repro.core import tiling as _tiling
+from repro.tune.cache import TunedEntry, TunedPlanCache, key_from_tuple
+from repro.tune.model import LatencyModel, LayerGeometry, candidate_plans
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """One geometry's tuning outcome (the cache entry, plus provenance
+    the sweep driver reports)."""
+    geometry: LayerGeometry
+    key: str
+    plan: _tiling.DeconvTilePlan          # the winner
+    heuristic: _tiling.DeconvTilePlan     # what first-fit would have run
+    entry: TunedEntry
+    candidates: int                       # legal design points enumerated
+    scored: int                           # points the search scored
+    measured: dict                        # plan.describe() -> wall seconds
+
+    @property
+    def improved(self) -> bool:
+        return self.plan != self.heuristic
+
+    def describe(self) -> str:
+        meas = (f" measured={self.entry.measured_s * 1e6:.0f}us"
+                f" (heuristic {self.entry.heuristic_measured_s * 1e6:.0f}us)"
+                if self.entry.measured_s else "")
+        return (f"{self.key:<52s} {self.plan.describe():<30s} "
+                f"[{self.entry.winner_source}] cands={self.candidates} "
+                f"scored={self.scored}{meas}")
+
+    def to_json(self) -> dict:
+        return {
+            "key": self.key,
+            "plan": self.plan.describe(),
+            "heuristic": self.heuristic.describe(),
+            "improved": self.improved,
+            "winner_source": self.entry.winner_source,
+            "candidates": self.candidates,
+            "scored": self.scored,
+            "modeled_s": self.entry.modeled_s,
+            "measured_us": round(self.entry.measured_s * 1e6, 2),
+            "heuristic_measured_us": round(
+                self.entry.heuristic_measured_s * 1e6, 2),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The search: exhaustive when small, seeded sweep + annealing when not.
+# ---------------------------------------------------------------------------
+
+def _anneal(cands: list, scores: dict, model: LatencyModel,
+            geom: LayerGeometry, rng: random.Random, start,
+            steps: int) -> None:
+    """Simulated-annealing refinement over the (dtile, bci, bco) lattice.
+
+    Neighbors move ONE coordinate to its adjacent legal value (the
+    fpgaHART move set).  Scores memoize into ``scores`` — the caller
+    ranks whatever the walk touched, so annealing only ever ADDS
+    information on top of the random sweep.
+    """
+    by_coord = {(p.dtile, p.block_ci, p.block_co): p for p in cands}
+    axes = [sorted({p.dtile for p in cands}),
+            sorted({p.block_ci for p in cands}),
+            sorted({p.block_co for p in cands})]
+
+    def score(p):
+        if p not in scores:
+            scores[p] = model.layer_seconds(p, geom)
+        return scores[p]
+
+    cur = start
+    t0 = max(score(start), 1e-12)
+    for i in range(steps):
+        coord = [cur.dtile, cur.block_ci, cur.block_co]
+        axis = rng.randrange(3)
+        vals = axes[axis]
+        idx = vals.index(coord[axis]) + rng.choice((-1, 1))
+        if not 0 <= idx < len(vals):
+            continue
+        coord[axis] = vals[idx]
+        nxt = by_coord.get(tuple(coord))
+        if nxt is None:              # infeasible lattice point (over budget)
+            continue
+        delta = score(nxt) - score(cur)
+        temp = t0 * 0.5 * (1.0 - i / steps) + 1e-12
+        if delta <= 0 or rng.random() < math.exp(-delta / temp):
+            cur = nxt
+
+
+def _search(cands: list, model: LatencyModel, geom: LayerGeometry,
+            trials: int, seed: int, seeded: Sequence = ()) -> tuple[list, int]:
+    """Rank the design space under the model.  Returns (cheapest-first
+    plans the search scored, number scored).  ``seeded`` plans are always
+    in the scored pool — the heuristic rides here, so a sampled search
+    can never rank the winner modeled-worse than first-fit."""
+    if len(cands) <= trials:
+        return model.rank(list(cands) + [p for p in seeded
+                                         if p not in cands], geom), len(cands)
+    rng = random.Random(seed)
+    pool = rng.sample(cands, trials)
+    scores = {p: model.layer_seconds(p, geom)
+              for p in list(pool) + list(seeded)}
+    best = min(scores, key=lambda p: (scores[p], p.dtile, p.block_ci,
+                                      p.block_co))
+    _anneal(cands, scores, model, geom, rng, best, steps=2 * trials)
+    ranked = sorted(scores, key=lambda p: (scores[p], p.dtile, p.block_ci,
+                                           p.block_co))
+    return ranked, len(scores)
+
+
+# ---------------------------------------------------------------------------
+# Live measurement: pin one candidate, time the real kernel.
+# ---------------------------------------------------------------------------
+
+def _measurement_layer(geom: LayerGeometry):
+    """The one-layer network a candidate is measured on: the geometry
+    itself, zero padding/crop (the planner key must match exactly)."""
+    from repro.core import networks as _networks
+
+    return _networks.UniformLayer(
+        name="tune.probe", in_spatial=geom.in_spatial, cin=geom.cin,
+        cout=geom.cout, kernel=geom.kernel, stride=geom.stride,
+        padding=0, op=geom.mode, groups=geom.groups,
+        dilation=geom.dilation)
+
+
+def measure_plan(plan: _tiling.DeconvTilePlan, geom: LayerGeometry, *,
+                 vmem_budget: int, repeats: int = 3, seed: int = 0,
+                 method: str = "pallas", interpret=None) -> float:
+    """Blocked best-of-``repeats`` wall seconds of the geometry's forward
+    under ``plan`` — pinned via a single-entry tuned cache, timed by
+    ``obs.measure_network`` (one layer, batch 1)."""
+    from repro import obs
+    from repro.core import engine as _engine
+
+    pin = TunedPlanCache()
+    fwd_key = (geom.mode, geom.in_spatial, geom.kernel, geom.stride,
+               geom.cin, geom.cout, geom.groups, geom.dilation, False,
+               geom.in_dtype_bytes)
+    pin.put(fwd_key, plan, winner_source="model")
+    eng = _engine.UniformEngine(_engine.EngineConfig(
+        method=method, max_tile_bytes=vmem_budget, tuned_plans=pin,
+        interpret=interpret))
+    layer = _measurement_layer(geom)
+    rpt = obs.measure_network([layer], eng, repeats=repeats,
+                              peak_gflops=1.0, name="tune.probe",
+                              seed=seed)
+    assert eng.plan_sources.get("tuned", 0) >= 1, (
+        "measurement engine fell back to the heuristic — plan key drift "
+        "between tune.cache and UniformEngine.plan")
+    return rpt.layers[0].measured_s
+
+
+# ---------------------------------------------------------------------------
+# The tuner.
+# ---------------------------------------------------------------------------
+
+def tune_layer(geom: LayerGeometry, *,
+               vmem_budget: int = _tiling.DECONV_VMEM_BUDGET,
+               trials: int = 64, measure_topk: int = 3, repeats: int = 3,
+               seed: int = 0, model: LatencyModel | None = None,
+               method: str = "pallas", interpret=None) -> TuneResult:
+    """Tune one geometry: enumerate, search, measure top-k, pick.
+
+    Deterministic for a fixed ``(geometry, seed)`` when
+    ``measure_topk=0`` (model-only); with measurement the winner is the
+    fastest LIVE wall among the model's top-k and the heuristic plan —
+    so a tuned plan is never slower than first-fit beyond timer noise.
+    """
+    model = model if model is not None else LatencyModel()
+    heuristic = _tiling.plan_uniform_tiles(
+        geom.in_spatial, geom.kernel, geom.stride, geom.cin, geom.cout,
+        mode=geom.mode, vmem_budget=vmem_budget, backward=geom.backward,
+        in_dtype_bytes=geom.in_dtype_bytes, groups=geom.groups,
+        dilation=geom.dilation)
+    cands = candidate_plans(geom, vmem_budget=vmem_budget)
+    ranked, scored = _search(cands, model, geom, trials, seed,
+                             seeded=() if heuristic.overflows
+                             else (heuristic,))
+
+    measured: dict[str, float] = {}
+    if measure_topk > 0 and not heuristic.overflows:
+        topk = list(ranked[:measure_topk])
+        if heuristic not in topk:
+            topk.append(heuristic)
+        walls = {}
+        for plan in topk:
+            walls[plan] = measure_plan(
+                plan, geom, vmem_budget=vmem_budget, repeats=repeats,
+                seed=seed, method=method, interpret=interpret)
+            measured[plan.describe()] = walls[plan]
+        order = {p: i for i, p in enumerate(topk)}
+        winner = min(walls, key=lambda p: (walls[p], order[p]))
+        winner_source = ("heuristic" if winner == heuristic
+                         and winner not in ranked[:measure_topk]
+                         else "measured")
+        measured_s = walls[winner]
+        heuristic_s = walls.get(heuristic, 0.0)
+    else:
+        winner = ranked[0]
+        winner_source = "model"
+        measured_s = heuristic_s = 0.0
+
+    key = key_from_tuple(geom.key_tuple)
+    entry = TunedEntry(
+        plan=winner, modeled_s=model.layer_seconds(winner, geom),
+        measured_s=measured_s, heuristic_measured_s=heuristic_s,
+        trials=trials, candidates=len(cands), seed=seed,
+        winner_source=winner_source)
+    return TuneResult(geometry=geom, key=key, plan=winner,
+                      heuristic=heuristic, entry=entry,
+                      candidates=len(cands), scored=scored,
+                      measured=measured)
+
+
+def network_geometries(network) -> list[LayerGeometry]:
+    """The unique plannable geometries of a chain or ``UniformGraph`` —
+    lifted to canonical 3D exactly as ``compile_network`` plans them
+    (conv geometries carry their PADDED input extent)."""
+    from repro.core import engine as _engine
+    from repro.core import networks as _networks
+    from repro.kernels import common as _kcommon
+
+    layers = (network.layers
+              if isinstance(network, _networks.UniformGraph)
+              else list(network))
+    geoms, seen = [], set()
+    for layer in layers:
+        sp3, k3, s3, p3 = _engine._lift_geometry(layer)
+        if layer.op == "conv":
+            sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
+        geom = LayerGeometry(
+            mode=layer.op, in_spatial=sp3, kernel=k3, stride=s3,
+            cin=layer.cin, cout=layer.cout, groups=layer.groups,
+            dilation=_kcommon.lift_tuple3(layer.dilation, layer.rank))
+        if geom.key_tuple not in seen:
+            seen.add(geom.key_tuple)
+            geoms.append(geom)
+    return geoms
+
+
+def tune_network(network, *,
+                 vmem_budget: int = _tiling.DECONV_VMEM_BUDGET,
+                 trials: int = 64, measure_topk: int = 3, repeats: int = 3,
+                 seed: int = 0, model: LatencyModel | None = None,
+                 method: str = "pallas", interpret=None,
+                 cache: TunedPlanCache | None = None,
+                 ) -> tuple[TunedPlanCache, list[TuneResult]]:
+    """Tune every unique geometry of a network ONCE into ``cache``.
+
+    Geometries already present in the given cache are skipped — the
+    "pay once per geometry, ever" contract: re-running a sweep over an
+    existing cache only searches what is new.
+    """
+    cache = cache if cache is not None else TunedPlanCache()
+    results = []
+    for geom in network_geometries(network):
+        key = key_from_tuple(geom.key_tuple)
+        if cache.get(key) is not None:
+            continue
+        res = tune_layer(geom, vmem_budget=vmem_budget, trials=trials,
+                         measure_topk=measure_topk, repeats=repeats,
+                         seed=seed, model=model, method=method,
+                         interpret=interpret)
+        cache.entries[key] = res.entry
+        results.append(res)
+    return cache, results
