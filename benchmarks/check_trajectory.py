@@ -33,11 +33,13 @@ ROOT = Path(__file__).resolve().parents[1]
 # the rows the trajectory is anchored on: the compiled whole-network
 # schedules (chains AND the DAG graphs with fused epilogues), the
 # autotuned compiled schedules (repro.tune winners driving the engine
-# through the tuned-plan cache), the heaviest single-kernel conv row, and
-# the serving tier's steady-state p50 latency per served model
+# through the tuned-plan cache), the quantized int8-weight compiled
+# schedules (Precision(weight_quant="int8") with the dequant fused into
+# the kernel epilogue), the heaviest single-kernel conv row, and the
+# serving tier's steady-state p50 latency per served model
 # (benchmarks/serve_bench.py)
 KEY_PATTERNS = ("net_*_compiled_pallas", "net_*_graph_pallas",
-                "tuned_*_pallas", "conv_3d_s2_pallas",
+                "tuned_*_pallas", "q8_*_pallas", "conv_3d_s2_pallas",
                 "serve_*_p50_pallas")
 
 # anchored but NEVER gated: the runtime-utilization rows (util_* — the

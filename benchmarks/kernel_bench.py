@@ -85,6 +85,7 @@ def run() -> list[str]:
     _conv_rows(rng, rec)
     _network_rows(rec)
     schedules = _compiled_rows(rng, rec)
+    schedules.update(_quantized_rows(rng, rec))
     schedules.update(_graph_rows(rng, rec))
     schedules["dcgan_gen_sharded"] = _sharded_rows(rng, rec)
     runtime = _runtime_rows(rng, rec)
@@ -159,7 +160,7 @@ def _split_path_rows(rng, rec) -> None:
     eng = default_engine(method="pallas", interpret=True,
                          max_tile_bytes=budget)
     fused = jax.jit(lambda x, w: deconv_ops._deconv_fwd_impl(
-        x, w, None, s, 0, 1, 1, "none", 0.2, eng))
+        x, w, None, None, s, 0, 1, 1, "none", 0.2, eng))
     stitched = jax.jit(lambda x, w: _stitched_baseline(x, w, s, plan))
     np.testing.assert_allclose(np.asarray(fused(x, w)),
                                np.asarray(stitched(x, w)),
@@ -211,7 +212,7 @@ def _backward_rows(rng, rec) -> None:
     eng = default_engine(method="pallas", interpret=True,
                          max_tile_bytes=budget)
     pallas_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd(
-        s, 0, 1, 1, "none", 0.2, eng, (x, w, None, None), dy)[:2])
+        s, 0, 1, 1, "none", 0.2, eng, (x, w, None, None, None), dy)[:2])
     einsum_vjp = jax.jit(lambda x, w, dy: deconv_ops._bwd_einsum(
         s, 0, (x, w), dy))
     for a, b in zip(pallas_vjp(x, w, dy), einsum_vjp(x, w, dy)):
@@ -367,6 +368,59 @@ def _compiled_rows(rng, rec) -> dict:
                 f"_mxu{report.mxu_dispatches}")
         np.testing.assert_allclose(outs["pallas"], outs["xla"],
                                    rtol=1e-4, atol=1e-4)
+    return schedules
+
+
+def _quantized_rows(rng, rec) -> dict:
+    """Quantized-engine rows: the SAME bench chains with int8 weights under
+    ``Precision(weight_quant="int8")`` — per-channel dequant fused into the
+    kernel epilogue.  In-bench acceptance: dispatch counts EQUAL to the f32
+    engine, per-step VMEM bytes strictly reduced at every layer, and output
+    parity within the documented calibration tolerance (5% of the f32
+    output range).  Schedules land in the JSON payload as ``q8_*``."""
+    from repro import quant
+    from repro.core import Precision
+
+    key = jax.random.PRNGKey(0)
+    schedules = {}
+    for name, layers in (("dcgan_gen", _bench_gen_chain()),
+                         ("vnet", _bench_vnet_chain())):
+        ws = init_network_weights(layers, key)
+        wq = quant.quantize_weights(ws, Precision(weight_quant="int8"))
+        x = jnp.asarray(
+            rng.randn(1, *layers[0].in_spatial, layers[0].cin) * 0.3,
+            jnp.float32)
+        f32_fn, f32_rep = compile_network(layers,
+                                          UniformEngine(method="pallas"))
+        y_f32 = np.asarray(jax.jit(f32_fn)(ws, x))
+        tol = 0.05 * float(np.max(np.abs(y_f32))) + 1e-6
+        outs = {}
+        for method in ("pallas", "xla"):
+            eng = UniformEngine(EngineConfig(
+                method=method, precision=Precision(weight_quant="int8")))
+            fn, report = compile_network(layers, eng)
+            f = jax.jit(fn)
+            outs[method] = np.asarray(f(wq, x))
+            counts = count_prims(jax.make_jaxpr(fn)(wq, x).jaxpr, {},
+                                 into_pallas=False)
+            n_pl = counts.get("pallas_call", 0)
+            if method == "pallas":
+                assert counts.get("conv_general_dilated", 0) == 0, counts
+                # acceptance: int8 weights change the working set, NOT the
+                # launch structure — dispatch counts equal the f32 engine,
+                # per-step VMEM bytes drop at every layer
+                assert report.mxu_dispatches == f32_rep.mxu_dispatches
+                assert report.grid_steps == f32_rep.grid_steps
+                for rq, rf in zip(report.layers, f32_rep.layers):
+                    assert rq.vmem_bytes < rf.vmem_bytes, (rq, rf)
+                schedules[f"q8_{name}"] = report.to_json()
+            err = float(np.max(np.abs(outs[method] - y_f32)))
+            assert err <= tol, (name, method, err, tol)
+            rec(f"q8_{name}_{method}", _time(f, wq, x),
+                f"pallas{n_pl}_grid{report.grid_steps}"
+                f"_mxu{report.mxu_dispatches}_maxerr{err:.4f}")
+        np.testing.assert_allclose(outs["pallas"], outs["xla"],
+                                   rtol=1e-3, atol=1e-3)
     return schedules
 
 

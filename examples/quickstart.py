@@ -239,4 +239,33 @@ err = np.abs(np.asarray(jax.jit(tapply)(ws, z)) - np.asarray(out)).max()
 print(f"  reloaded cache -> plan sources {tuned_engine.plan_sources} "
       f"(zero search), max|err vs heuristic engine|={err:.2e}")
 
+print("\n=== quantize it: int8 weights behind ONE Precision policy ===")
+# The engine's numeric policy is a frozen Precision dataclass on the
+# EngineConfig (the old preferred_element_type= kwarg still works — it is
+# a shim constructing the equivalent Precision).  Calibrate per-channel
+# scales offline (absmax or percentile observers), quantize_weights maps
+# any compile_network weight pytree to {"w_q": int8, "scale": f32}
+# entries, and the SAME compiled schedule accepts them: the int8 operands
+# flow through the same phase-major tap-batched matmuls with f32 MXU
+# accumulation, and the per-channel dequant runs inside the fused kernel
+# epilogue (scale -> bias -> activation) — zero extra jaxpr equations,
+# identical dispatch counts, smaller per-step VMEM working sets.
+from repro.core import Precision
+from repro.quant import quantize_weights
+
+q8 = Precision(weight_quant="int8")        # per-cout scales, f32 accumulate
+q8_engine = UniformEngine(EngineConfig(method="pallas", precision=q8))
+q8_apply, q8_report = compile_network(layers, q8_engine)
+wq = quantize_weights(ws, q8)              # {"w_q", "scale"} per layer
+out_q8 = jax.jit(q8_apply)(wq, z)
+err = np.abs(np.asarray(out_q8) - np.asarray(out)).max()
+scale = np.abs(np.asarray(out)).max()
+f32_report = report                        # the f32 schedule from above
+print(f"  int8-weight forward out={tuple(out_q8.shape)}  "
+      f"max|err vs f32|={err:.2e} ({100 * err / scale:.2f}% of range)")
+print(f"  dispatches: f32 mxu={f32_report.mxu_dispatches} vs "
+      f"q8 mxu={q8_report.mxu_dispatches} (equal); peak VMEM "
+      f"{f32_report.peak_vmem_bytes}B -> {q8_report.peak_vmem_bytes}B")
+print("  " + q8_report.describe().replace("\n", "\n  "))
+
 print("\nquickstart OK")

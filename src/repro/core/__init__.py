@@ -42,4 +42,7 @@ from repro.core.engine import (  # noqa: F401
     uniform_conv_method,
 )
 from repro.core.networks import UniformLayer  # noqa: F401
+# the engine's numeric policy — re-exported so engine users reach it
+# without importing repro.quant directly
+from repro.quant.precision import Precision  # noqa: F401
 from repro.core import networks, sparsity, tiling, comparison  # noqa: F401

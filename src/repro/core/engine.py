@@ -50,6 +50,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import networks as _networks
 from repro.core import tiling as _tiling
 from repro.kernels import common as _kcommon
+from repro.quant.precision import Precision
 from repro.core.functional import (
     METHODS,
     _canon,
@@ -146,9 +147,17 @@ class EngineConfig:
     """The uniform engine's compile-time configuration.
 
     ``method`` is the deconv lowering (one of ``METHODS``); the forward-conv
-    lowering pairs via ``uniform_conv_method``.  ``preferred_element_type``
-    sets the op output dtype (Pallas accumulates f32 in-kernel regardless;
-    the XLA deconv flavours default to f32 as before when unset).
+    lowering pairs via ``uniform_conv_method``.  ``precision`` (a
+    ``repro.quant.Precision``) is the engine's numeric policy: activation
+    storage dtype, int8 weight/activation quantization modes, per-channel
+    dequant axis.  ``preferred_element_type`` is the legacy spelling of the
+    storage dtype — still accepted, and normalized into an equivalent
+    ``Precision(storage=...)`` at construction (passing BOTH raises).
+    Either way ``cfg.precision`` is always a ``Precision`` after
+    ``__post_init__`` and ``cfg.preferred_element_type`` always equals
+    ``cfg.precision.storage``, so the two spellings hash and memoize
+    identically.  Pallas accumulates f32 in-kernel regardless; the XLA
+    deconv flavours default to f32 as before when unset.
     ``max_tile_bytes`` overrides the planner's per-grid-step VMEM budget;
     ``block_ci``/``block_co`` pin the channel blocks; ``interpret`` forces
     Pallas interpret mode (None = auto: True off-TPU).  ``strict_vmem``
@@ -185,6 +194,7 @@ class EngineConfig:
     """
     method: str = "xla"
     preferred_element_type: Any = None
+    precision: Precision | None = None
     max_tile_bytes: int | None = None
     block_ci: int | None = None
     block_co: int | None = None
@@ -202,6 +212,28 @@ class EngineConfig:
         if self.preferred_element_type is not None:
             object.__setattr__(self, "preferred_element_type",
                                jnp.dtype(self.preferred_element_type))
+        if self.precision is None:
+            # the compat shim: every legacy config gets an equivalent
+            # Precision, so EngineConfig(preferred_element_type=dt) and
+            # EngineConfig(precision=Precision(storage=dt)) are THE SAME
+            # config (equal, same hash, same memoized default engine)
+            object.__setattr__(self, "precision",
+                               Precision(storage=self.preferred_element_type))
+        elif not isinstance(self.precision, Precision):
+            raise ValueError(f"precision must be a repro.quant.Precision, "
+                             f"got {self.precision!r}")
+        elif (self.preferred_element_type is not None
+                and self.preferred_element_type != self.precision.storage):
+            # dataclasses.replace round-trips a normalized config with BOTH
+            # fields set (and equal) — only a genuine conflict is an error
+            raise ValueError(
+                f"precision.storage={self.precision.storage} conflicts with "
+                f"preferred_element_type={self.preferred_element_type}; "
+                f"pass precision= alone (preferred_element_type is the "
+                f"legacy spelling of Precision(storage=...))")
+        else:
+            object.__setattr__(self, "preferred_element_type",
+                               self.precision.storage)
         if self.policy.model_axis == self.policy.batch_axis:
             raise ValueError(
                 f"model_axis and batch_axis are both "
@@ -272,20 +304,27 @@ class UniformEngine:
 
     def plan(self, mode: str, in_spatial, kernel, stride, cin: int, cout: int,
              *, groups: int = 1, dilation=None, backward: bool = False,
-             in_dtype_bytes: int = 2) -> _tiling.DeconvTilePlan:
+             in_dtype_bytes: int = 2,
+             w_dtype_bytes: int | None = None) -> _tiling.DeconvTilePlan:
         """The engine's ONLY path to the tile planner — geometry-memoized.
 
         ``mode="conv"`` expects the PADDED conv input extent (the planner's
         contract).  ``backward=True`` keys the training plan separately
         (it budgets max(fwd, dx, dw) working sets).  ``groups`` shrinks the
         per-group channel extents the blocks must cover; ``dilation``
-        widens the halo/footprint budgets.
+        widens the halo/footprint budgets.  ``w_dtype_bytes`` is the weight
+        element width when it differs from the activations' (int8 weights
+        plan at 1 byte — roughly halving the modeled per-step working set
+        at identical blocks); ``None`` keeps the historical
+        weights-as-wide-as-activations model.
         """
         dilation = (tuple(dilation) if dilation is not None
                     else (1,) * len(tuple(in_spatial)))
+        w_bytes = (int(in_dtype_bytes) if w_dtype_bytes is None
+                   else int(w_dtype_bytes))
         key = (mode, tuple(in_spatial), tuple(kernel), tuple(stride),
                int(cin), int(cout), int(groups), dilation,
-               bool(backward), int(in_dtype_bytes))
+               bool(backward), int(in_dtype_bytes), w_bytes)
         plan = self._plans.get(key)
         tel = self.config.telemetry
         if plan is None:
@@ -305,7 +344,8 @@ class UniformEngine:
                     key[1], key[2], key[3], key[4], key[5], mode=mode,
                     vmem_budget=cfg.vmem_budget, block_ci=cfg.block_ci,
                     block_co=cfg.block_co, groups=groups, dilation=dilation,
-                    backward=backward, in_dtype_bytes=in_dtype_bytes)
+                    backward=backward, in_dtype_bytes=in_dtype_bytes,
+                    w_dtype_bytes=w_bytes)
                 self.plan_sources["heuristic"] += 1
             if tel is not None:
                 tel.registry.counter("engine_plan_cache_misses_total").inc()
@@ -325,9 +365,51 @@ class UniformEngine:
 
     # -- the two op directions ---------------------------------------------
 
+    def _act_quant(self, x: jax.Array, w_scale, precision: Precision | None):
+        """Dynamic per-tensor int8 activation quantization (forward-only).
+
+        Under ``Precision(act_quant="int8")`` a float activation is
+        absmax-quantized at trace time and its scalar scale FOLDED into the
+        weight dequant scale — the fused epilogue then undoes both
+        quantizations in its one multiply.  Integer inputs pass through
+        (already quantized upstream).  Returns ``(x, w_scale)``.
+        """
+        prec = precision if precision is not None else self.config.precision
+        if prec.act_quant != "int8" or not jnp.issubdtype(x.dtype,
+                                                          jnp.inexact):
+            return x, w_scale
+        from repro.quant import qint8 as _q8  # lazy: optional path
+        s = _q8.absmax_scale(x)
+        xq = _q8.quantize_q8(x, s)
+        return xq, (s if w_scale is None else w_scale * s)
+
+    @staticmethod
+    def _dequant_host(x, w, w_scale, precision: Precision | None):
+        """XLA-path numerics for quantized operands: dequantize the weights
+        up front (mathematically identical to the Pallas engine's fused
+        epilogue scale — the per-cout scale commutes with the contraction)
+        and fake-quantize float activations when the policy asks, so both
+        engine methods agree within rounding."""
+        if jnp.issubdtype(w.dtype, jnp.integer):
+            w = w.astype(jnp.float32)
+            if w_scale is not None:
+                w = w * w_scale
+        elif w_scale is not None:
+            w = w * w_scale.astype(w.dtype)
+        if precision is not None and precision.act_quant == "int8" \
+                and jnp.issubdtype(x.dtype, jnp.inexact):
+            from repro.quant import qint8 as _q8  # lazy: optional path
+            s = _q8.absmax_scale(x)
+            x = _q8.dequantize_int8(_q8.quantize_q8(x, s), s).astype(x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            x = x.astype(jnp.float32)
+        return x, w
+
     def deconv(self, x: jax.Array, w: jax.Array, stride, padding=0, *,
                dilation=1, groups: int = 1, bias: jax.Array | None = None,
-               activation: str = "none", alpha: float = 0.2) -> jax.Array:
+               activation: str = "none", alpha: float = 0.2,
+               w_scale: jax.Array | None = None,
+               precision: Precision | None = None) -> jax.Array:
         """Transposed convolution on the engine (Eq. (1) + border crop).
 
         ``groups``/``dilation`` follow the lax grouping/dilation
@@ -337,14 +419,25 @@ class UniformEngine:
         flavours apply it on the op output (and route grouped/dilated
         geometries through the generalized ``deconv_xla``, the only XLA
         flavour that lowers them).
+
+        ``w_scale`` is the per-cout (or scalar) dequant scale of int8
+        weights — on the Pallas engine it rides into the kernel and is
+        applied inside the fused epilogue, pre-store-cast; the XLA flavours
+        dequantize up front (same numerics, the scale commutes with the
+        contraction).  ``precision`` overrides the config policy for this
+        call (``compile_network`` threads per-layer overrides through it).
         """
         cfg = self.config
         if cfg.method == "pallas":
             from repro.kernels.deconv import ops as _dops  # lazy: kernels
+            x, w_scale = self._act_quant(x, w_scale, precision)
             return _dops.deconv(x, w, stride, padding, dilation=dilation,
                                 groups=groups, bias=bias,
                                 activation=activation, alpha=alpha,
-                                engine=self)
+                                w_scale=w_scale, engine=self)
+        x, w = self._dequant_host(
+            x, w, w_scale,
+            precision if precision is not None else cfg.precision)
         pet = (cfg.preferred_element_type
                if cfg.preferred_element_type is not None else jnp.float32)
         rank = x.ndim - 2
@@ -361,16 +454,22 @@ class UniformEngine:
 
     def conv(self, x: jax.Array, w: jax.Array, stride=1, padding=0, *,
              dilation=1, groups: int = 1, bias: jax.Array | None = None,
-             activation: str = "none", alpha: float = 0.2) -> jax.Array:
-        """Forward strided convolution on the engine (same epilogue and
-        grouping/dilation conventions as ``deconv``)."""
+             activation: str = "none", alpha: float = 0.2,
+             w_scale: jax.Array | None = None,
+             precision: Precision | None = None) -> jax.Array:
+        """Forward strided convolution on the engine (same epilogue,
+        grouping/dilation and quantization conventions as ``deconv``)."""
         cfg = self.config
         if cfg.conv_method == "pallas":
             from repro.kernels.conv import ops as _cops  # lazy: kernels
+            x, w_scale = self._act_quant(x, w_scale, precision)
             return _cops.conv(x, w, stride, padding, dilation=dilation,
                               groups=groups, bias=bias,
                               activation=activation, alpha=alpha,
-                              engine=self)
+                              w_scale=w_scale, engine=self)
+        x, w = self._dequant_host(
+            x, w, w_scale,
+            precision if precision is not None else cfg.precision)
         rank = x.ndim - 2
         pet = cfg.preferred_element_type
         out_dtype = None
@@ -392,14 +491,16 @@ class UniformEngine:
         return y if out_dtype is None else y.astype(out_dtype)
 
     def __call__(self, layer: _networks.UniformLayer, x: jax.Array,
-                 w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+                 w: jax.Array, b: jax.Array | None = None, *,
+                 w_scale: jax.Array | None = None) -> jax.Array:
         """Run one ``UniformLayer`` (op-dispatched, epilogue fused) on the
         engine."""
         op = self.deconv if layer.op == "deconv" else self.conv
         epi = layer.epilogue
         return op(x, w, layer.stride, layer.padding,
                   dilation=layer.dilation, groups=layer.groups, bias=b,
-                  activation=epi.activation, alpha=epi.alpha)
+                  activation=epi.activation, alpha=epi.alpha,
+                  w_scale=w_scale, precision=layer.precision)
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +611,7 @@ class LayerSchedule:
     groups: int = 1                    # channel groups (depthwise = cin)
     dilation: tuple[int, ...] = ()     # per-dim tap spacing
     epilogue: str = "-"                # fused epilogue ("bias+relu" | "-")
+    precision: str = "f32"             # resolved Precision.describe()
 
     def __post_init__(self):
         if not self.local_cin:
@@ -530,6 +632,7 @@ class LayerSchedule:
                 f"g{self.groups:<3d} "
                 f"d{'x'.join(map(str, self.dilation)):<5s} "
                 f"ep:{self.epilogue:<10s} "
+                f"pr:{self.precision:<8s} "
                 f"{plan:<28s} grid{self.grid_steps:>5d} "
                 f"mxu{self.mxu_dispatches:>6d} zeros{self.sparsity:.0%}"
                 f"{coll}")
@@ -553,6 +656,7 @@ class LayerSchedule:
             "groups": self.groups,
             "dilation": list(self.dilation),
             "epilogue": self.epilogue,
+            "precision": self.precision,
         }
 
 
@@ -637,9 +741,16 @@ def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
         plan_sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
     else:
         plan_sp3 = sp3
-    # the plan one device actually runs: local channel counts under a mesh
+    # the plan one device actually runs: local channel counts under a mesh;
+    # the resolved precision policy (per-layer override, else the config's)
+    # sets the operand widths the byte model charges — the SAME key the op
+    # will plan with at trace time, so the report's plans stay resident
+    prec = (layer.precision if layer.precision is not None
+            else engine.config.precision)
     plan = engine.plan(layer.op, plan_sp3, k3, s3, cin, cout,
-                       groups=g, dilation=dil3)
+                       groups=g, dilation=dil3,
+                       in_dtype_bytes=prec.act_bytes,
+                       w_dtype_bytes=prec.weight_bytes)
     # the kernel grid enumerates ALL output-channel blocks but only the
     # PER-GROUP input blocks (each block contracts within its own group)
     ci_blocks = -(-(cin // g) // plan.block_ci)
@@ -662,7 +773,8 @@ def _schedule_layer(layer: _networks.UniformLayer, engine: UniformEngine,
         vmem_bytes=plan.step_vmem_bytes, sparsity=sparsity,
         local_cin=cin, local_cout=cout, collective=collective,
         collective_bytes=collective_bytes, groups=g,
-        dilation=layer.dilation, epilogue=layer.epilogue.describe())
+        dilation=layer.dilation, epilogue=layer.epilogue.describe(),
+        precision=prec.describe())
 
 
 def _schedule_merge(node: _networks.MergeNode, graph: _networks.UniformGraph,
@@ -795,6 +907,11 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
         if len(ws) != len(layers):
             raise ScheduleError(f"expected {len(layers)} weight arrays, got "
                                 f"{len(ws)}")
+        if any(isinstance(e, dict) for e in ws):
+            raise ScheduleError(
+                "channel-partitioned chains take bare weight arrays; "
+                "quantized {'w_q', 'scale'} entries are only supported on "
+                "unsharded chains and (data-parallel) graph schedules")
         if x.shape[0] % dp:
             raise ScheduleError(
                 f"batch {x.shape[0]} does not divide the {dp}-way "
@@ -805,16 +922,25 @@ def _compile_sharded(layers, engine: UniformEngine, batch: int):
 
 
 def _layer_wb(entry, layer: _networks.UniformLayer):
-    """Split one graph-weight pytree entry into (w, bias-or-None)."""
+    """Split one weight pytree entry into (w, bias-or-None, scale-or-None).
+
+    Quantized entries — ``repro.quant.quantize_weights`` output — carry
+    ``{"w_q": int8, "scale": per-cout}`` (plus ``"b"`` when the epilogue
+    declares a bias) and are accepted anywhere a ``{"w", "b"}`` entry is.
+    """
     if isinstance(entry, dict):
-        w, b = entry["w"], entry.get("b")
+        if "w_q" in entry:
+            w, s = entry["w_q"], entry.get("scale")
+        else:
+            w, s = entry["w"], entry.get("scale")
+        b = entry.get("b")
     else:
-        w, b = entry, None
+        w, b, s = entry, None, None
     if layer.epilogue.bias and b is None:
         raise ScheduleError(f"layer {layer.name!r} declares a fused bias but "
                          f"its weight entry carries none (expected "
                          f"{{'w', 'b'}})")
-    return w, b
+    return w, b, s
 
 
 def _graph_report(graph: _networks.UniformGraph, engine: UniformEngine,
@@ -862,10 +988,15 @@ def _graph_apply_fn(graph: _networks.UniformGraph, engine: UniformEngine):
                         out = out + v
                     vals[name] = out
             else:
-                w, b = _layer_wb(ws[name], nd)
+                w, b, s = _layer_wb(ws[name], nd)
                 h = ins[0]
-                out = engine(nd, h, w.astype(h.dtype),
-                             None if b is None else b.astype(h.dtype))
+                # int8 weights stay int8 into the kernel (the astype that
+                # keeps a bf16 graph bf16 would silently dequantize them)
+                wv = (w if jnp.issubdtype(w.dtype, jnp.integer)
+                      else w.astype(h.dtype))
+                out = engine(nd, h, wv,
+                             None if b is None else b.astype(h.dtype),
+                             w_scale=s)
                 vals[name] = out.astype(h.dtype) if keep_dtype else out
             for p in graph.edges[name]:
                 if last_use[p] == name and p != graph.output:
@@ -985,8 +1116,18 @@ def compile_network(layers: Sequence[_networks.UniformLayer]
                         f"expected {len(chain)} weight arrays, got "
                         f"{len(ws)}")
                 h = x
-                for layer, w in zip(chain, ws):
-                    h = engine(layer, h, w.astype(h.dtype))
+                for layer, entry in zip(chain, ws):
+                    if isinstance(entry, dict):
+                        # quantized {"w_q", "scale"} (or {"w", "b"}) entries
+                        # ride the chain exactly like graph entries
+                        w, b, s = _layer_wb(entry, layer)
+                        wv = (w if jnp.issubdtype(w.dtype, jnp.integer)
+                              else w.astype(h.dtype))
+                        h = engine(layer, h, wv,
+                                   None if b is None else b.astype(h.dtype),
+                                   w_scale=s)
+                    else:
+                        h = engine(layer, h, entry.astype(h.dtype))
                 return h
 
             built = chain_apply, ScheduleReport(

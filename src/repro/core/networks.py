@@ -80,7 +80,10 @@ class UniformLayer:
     ``[*K, cin/groups, cout]`` (the lax grouping convention — see
     ``weight_shape``).  ``dilation`` spaces the kernel taps per dim
     (effective footprint ``(K-1)*dil + 1``).  ``epilogue`` is the fused
-    bias/activation spec the kernels execute at flush.
+    bias/activation spec the kernels execute at flush.  ``precision``
+    (a ``repro.quant.Precision``, optional) overrides the engine config's
+    numeric policy for THIS layer only — e.g. keep a network's head at
+    full precision while the body runs int8 weights.
     """
     name: str
     in_spatial: tuple[int, ...]      # input spatial extent (rank 1..3)
@@ -93,6 +96,7 @@ class UniformLayer:
     groups: int = 1
     dilation: tuple[int, ...] = ()
     epilogue: Epilogue = Epilogue()
+    precision: object | None = None  # per-layer Precision override
 
     def __post_init__(self):
         if self.op not in ("deconv", "conv"):
@@ -113,6 +117,12 @@ class UniformLayer:
             raise ValueError(
                 f"{self.name}: groups={self.groups} must divide "
                 f"cin={self.cin} and cout={self.cout}")
+        if self.precision is not None:
+            from repro.quant.precision import Precision  # lazy: no cycle
+            if not isinstance(self.precision, Precision):
+                raise ValueError(
+                    f"{self.name}: precision must be a "
+                    f"repro.quant.Precision, got {self.precision!r}")
 
     @property
     def rank(self) -> int:

@@ -195,6 +195,7 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
                        allow_split: bool = True,
                        backward: bool = False,
                        in_dtype_bytes: int = 2,
+                       w_dtype_bytes: int | None = None,
                        groups: int = 1,
                        dilation=None) -> DeconvTilePlan:
     """Jointly pick ``(dtile, block_ci, block_co)`` against the VMEM budget.
@@ -227,10 +228,15 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
     plans 1-wide ci blocks and each group's blocks independently respect
     the budget); ``dilation`` widens every kernel footprint in the byte
     model to the effective extent.
+
+    ``w_dtype_bytes`` (default: ``in_dtype_bytes``) is the planner width
+    of a weight element — 1 for int8-quantized weights, so quantized
+    plans budget (and report) the genuinely smaller working set.
     """
     d_eff, step_bytes = step_byte_model(
         in_spatial, kernel, stride, mode=mode, backward=backward,
-        in_dtype_bytes=in_dtype_bytes, dilation=dilation)
+        in_dtype_bytes=in_dtype_bytes, w_dtype_bytes=w_dtype_bytes,
+        dilation=dilation)
     assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
     bci = block_ci or min(max(cin // groups, 1), 128)
     bco = block_co or min(max(cout // groups, 1), 128)
@@ -258,6 +264,7 @@ def plan_uniform_tiles(in_spatial, kernel, stride, cin, cout, *,
 
 def step_byte_model(in_spatial, kernel, stride, *, mode: str = "deconv",
                     backward: bool = False, in_dtype_bytes: int = 2,
+                    w_dtype_bytes: int | None = None,
                     dilation=None):
     """The ONE per-grid-step VMEM byte model, shared by the first-fit
     heuristic (``plan_uniform_tiles``) and the tuner's candidate
@@ -268,6 +275,11 @@ def step_byte_model(in_spatial, kernel, stride, *, mode: str = "deconv",
     ``step_bytes(dtile, block_ci, block_co) -> int`` evaluating the
     working set of one grid step — for ``backward=True`` the max over the
     forward and the two VJP kernels, exactly as the heuristic budgets it.
+
+    ``w_dtype_bytes`` is the weight-element width (1 for int8 weights;
+    ``None`` keeps the historical single-width model).  Only the FORWARD
+    kernel's weight slab shrinks: the VJP kernels run on the dequantized
+    f32 weights, so the backward terms keep nominal widths.
     """
     from repro.kernels.deconv import kernel as _k  # local: avoids a cycle
 
@@ -282,7 +294,8 @@ def step_byte_model(in_spatial, kernel, stride, *, mode: str = "deconv",
         def step_bytes(dt, ci, co):
             bytes_ = _ck.vmem_bytes(out_sp, kernel, stride, ci, co,
                                     in_dtype_bytes, dtile=dt,
-                                    dilation=dilation)
+                                    dilation=dilation,
+                                    w_dtype_bytes=w_dtype_bytes)
             if backward:
                 # conv's dx is the deconv-forward kernel over dy and its dw
                 # the deconv dw kernel — both with channel roles swapped
@@ -302,7 +315,8 @@ def step_byte_model(in_spatial, kernel, stride, *, mode: str = "deconv",
         def step_bytes(dt, ci, co):
             bytes_ = _k.vmem_bytes(in_spatial, kernel, stride, ci, co,
                                    in_dtype_bytes, dtile=dt,
-                                   dilation=dilation)
+                                   dilation=dilation,
+                                   w_dtype_bytes=w_dtype_bytes)
             if backward:
                 bytes_ = max(bytes_, _k.vmem_bytes_bwd(
                     in_spatial, kernel, stride, ci, co, in_dtype_bytes,
@@ -430,6 +444,7 @@ def candidate_tile_plans(in_spatial, kernel, stride, cin, cout, *,
                          allow_split: bool = True,
                          backward: bool = False,
                          in_dtype_bytes: int = 2,
+                         w_dtype_bytes: int | None = None,
                          groups: int = 1,
                          dilation=None) -> list[DeconvTilePlan]:
     """Enumerate the legal ``(dtile, block_ci, block_co)`` design space.
@@ -446,7 +461,8 @@ def candidate_tile_plans(in_spatial, kernel, stride, cin, cout, *,
     """
     d_eff, step_bytes = step_byte_model(
         in_spatial, kernel, stride, mode=mode, backward=backward,
-        in_dtype_bytes=in_dtype_bytes, dilation=dilation)
+        in_dtype_bytes=in_dtype_bytes, w_dtype_bytes=w_dtype_bytes,
+        dilation=dilation)
     assert cin % groups == 0 and cout % groups == 0, (cin, cout, groups)
     dts = _dtile_candidates(d_eff) if allow_split else [d_eff]
     plans = []
@@ -471,7 +487,7 @@ def candidate_tile_plans(in_spatial, kernel, stride, cin, cout, *,
             in_spatial, kernel, stride, cin, cout, mode=mode,
             vmem_budget=vmem_budget, allow_split=allow_split,
             backward=backward, in_dtype_bytes=in_dtype_bytes,
-            groups=groups, dilation=dilation)]
+            w_dtype_bytes=w_dtype_bytes, groups=groups, dilation=dilation)]
     return plans
 
 

@@ -146,13 +146,18 @@ def phase_major_inverse(kernel, stride, dilation=None):
 ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
 
 
-def apply_epilogue(y, bias, activation, alpha=0.2):
-    """Bias-add + activation, applied to a completed accumulator value.
+def apply_epilogue(y, bias, activation, alpha=0.2, scale=None):
+    """Scale + bias-add + activation, applied to a completed accumulator.
 
     Runs inside the kernel flush (values, not refs) and on the host for the
     XLA-flavoured engines — one definition so the two paths cannot drift.
-    ``bias`` broadcasts over everything but the trailing channel dim.
+    ``scale`` is the per-output-channel dequant factor of the quantized
+    paths; it multiplies the raw accumulator FIRST (scale → bias →
+    activation) so the bias stays in real units.  Both ``scale`` and
+    ``bias`` broadcast over everything but the trailing channel dim.
     """
+    if scale is not None:
+        y = y * scale.reshape((1,) * (y.ndim - 1) + (-1,)).astype(y.dtype)
     if bias is not None:
         y = y + bias.reshape((1,) * (y.ndim - 1) + (-1,)).astype(y.dtype)
     if activation == "relu":
@@ -180,6 +185,18 @@ def activation_grad_from_output(y, activation, alpha=0.2):
     if activation == "tanh":
         return (1 - y * y).astype(y.dtype)
     return None
+
+
+def operand_plan_bytes(dtype) -> int:
+    """Planner width of an operand dtype.
+
+    Quantized (integer) operands count their true width; float operands
+    keep the NOMINAL bf16 width the byte model has always assumed, so
+    every pre-existing f32/bf16 plan (and persisted tuned-plan cache
+    entry) is unchanged.
+    """
+    dt = jnp.dtype(dtype)
+    return dt.itemsize if jnp.issubdtype(dt, jnp.integer) else 2
 
 
 def default_interpret() -> bool:

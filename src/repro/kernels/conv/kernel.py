@@ -57,27 +57,34 @@ from repro.kernels.common import (
 
 
 def _conv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
-                      n_ci_blocks, out_dtype, has_bias=False,
-                      activation="none", alpha=0.2):
+                      n_ci_blocks, out_dtype, has_scale=False,
+                      has_bias=False, activation="none", alpha=0.2):
     """One grid step: a (batch, co-block, d-tile, ci-block) partial conv.
 
     x_ref:   [1, dtile*S_d, IH, IW, bci]   (aligned input slab of tile t)
     w_ref:   [prod(K), bco, bci]           (phase-major tap order)
+    s_ref:   [1, bco]                      (only when ``has_scale``)
     b_ref:   [1, bco]                      (only when ``has_bias``)
     o_ref:   [1, dtile, OH, OW, bco]       (this tile's output slab)
     acc_ref: VMEM f32 [dtile + M_d - 1, OH, OW, bco]
     halo_ref: VMEM f32 [M_d - 1, OH, OW, bco] (None if M_d == 1)
 
-    The epilogue (bias + activation) runs in ``_flush`` — after the Cin
-    adder tree completes AND after the reversed FIFO-D carry-in, so it sees
-    the finished f32 accumulation, never a partial sum.
+    The epilogue (scale + bias + activation) runs in ``_flush`` — after the
+    Cin adder tree completes AND after the reversed FIFO-D carry-in, so it
+    sees the finished f32 accumulation, never a partial sum.  int8 operands
+    ride the same matmuls, cast to f32 in-register just before the dot
+    (|q| <= 127, exact); the per-cout dequant scale multiplies the finished
+    accumulator first thing in the epilogue.
     """
-    if has_bias:
-        x_ref, w_ref, b_ref, o_ref, acc_ref, *rest = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref, *rest = refs
-        b_ref = None
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scale else None
+    b_ref = next(it) if has_bias else None
+    o_ref, acc_ref = next(it), next(it)
+    rest = list(it)
     halo_ref = rest[0] if rest else None
+    quantized = (jnp.issubdtype(x_ref.dtype, jnp.integer)
+                 or jnp.issubdtype(w_ref.dtype, jnp.integer))
     r = pl.program_id(2)
     cb = pl.program_id(3)
     m_max = phase_geometry(kernel, stride, dilation)
@@ -89,6 +96,8 @@ def _conv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0]                                    # [dtile*S_d, IH, IW, bci]
+    if quantized:
+        x = x.astype(jnp.float32)
     bci = x.shape[-1]
 
     off = 0
@@ -98,6 +107,8 @@ def _conv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
         lh, lw = x_ph.shape[1], x_ph.shape[2]
         # one wide matmul per phase: [dtile*Lh*Lw, bci] x [n_taps, bco, bci]
         w_taps = w_ref[off:off + len(taps)]
+        if quantized:
+            w_taps = w_taps.astype(jnp.float32)
         off += len(taps)
         res = jax.lax.dot_general(
             x_ph.reshape(-1, bci), w_taps, (((1,), (2,)), ((), ())),
@@ -127,7 +138,8 @@ def _conv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
     def _flush():
         y = apply_epilogue(acc_ref[halo:],
                            b_ref[0] if b_ref is not None else None,
-                           activation, alpha)
+                           activation, alpha,
+                           scale=s_ref[0] if s_ref is not None else None)
         o_ref[0] = y.astype(out_dtype)
 
 
@@ -136,6 +148,7 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                    block_ci: int, block_co: int, dtile: int,
                    dilation: Sequence[int] | None = None,
                    groups: int = 1,
+                   scale: jax.Array | None = None,
                    bias: jax.Array | None = None,
                    activation: str = "none", alpha: float = 0.2,
                    interpret: bool = True,
@@ -162,7 +175,10 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     stride = tuple(stride)
     dilation = tuple(dilation) if dilation is not None else (1,) * len(kernel)
     k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
-    out_dtype = out_dtype or x.dtype
+    if out_dtype is None:
+        # quantized inputs never store quantized: default to the f32 acc
+        out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.inexact) \
+            else jnp.float32
     assert d_in % (dtile * stride[0]) == 0, (d_in, dtile, stride)
     n_dt = d_in // (dtile * stride[0])
     oh = (ih - k_eff[1]) // stride[1] + 1
@@ -180,8 +196,8 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     body = functools.partial(
         _conv_kernel_body, tile_spatial=tile_spatial, kernel=kernel,
         stride=stride, dilation=dilation, n_ci_blocks=n_ci,
-        out_dtype=out_dtype, has_bias=bias is not None,
-        activation=activation, alpha=alpha)
+        out_dtype=out_dtype, has_scale=scale is not None,
+        has_bias=bias is not None, activation=activation, alpha=alpha)
     scratch = [pltpu.VMEM((dtile + halo, oh, ow, block_co), jnp.float32)]
     if halo:
         scratch.append(pltpu.VMEM((halo, oh, ow, block_co), jnp.float32))
@@ -194,6 +210,10 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      lambda b, oc, t, ic: (0, oc, ic)),
     ]
     operands = [x, w_taps]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, block_co),
+                                     lambda b, oc, t, ic: (0, oc)))
+        operands.append(scale.reshape(1, co).astype(jnp.float32))
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, block_co),
                                      lambda b, oc, t, ic: (0, oc)))
@@ -219,7 +239,8 @@ def conv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
 
 def vmem_bytes(out_spatial, kernel, stride, block_ci, block_co,
                in_dtype_bytes: int = 2, dtile: int | None = None,
-               dilation=None) -> int:
+               dilation=None, w_dtype_bytes: int | None = None,
+               out_dtype_bytes: int | None = None) -> int:
     """Static per-grid-step VMEM footprint of ``conv_pallas_3d``.
 
     ``out_spatial`` is the conv OUTPUT extent per dim (the quantity the
@@ -228,8 +249,13 @@ def vmem_bytes(out_spatial, kernel, stride, block_ci, block_co,
     widest phase.  Dilation widens the input slab and halo by the effective
     kernel footprint.  The deconv backward's dx budget is this same model
     with the channel roles swapped (see
-    ``kernels.deconv.kernel.vmem_bytes_bwd``).
+    ``kernels.deconv.kernel.vmem_bytes_bwd``).  ``w_dtype_bytes`` /
+    ``out_dtype_bytes`` default to ``in_dtype_bytes``; quantized plans pass
+    1 for int8 operands.
     """
+    w_dtype_bytes = in_dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    out_dtype_bytes = in_dtype_bytes if out_dtype_bytes is None \
+        else out_dtype_bytes
     dilation = tuple(dilation) if dilation is not None \
         else (1,) * len(kernel)
     k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
@@ -249,7 +275,7 @@ def vmem_bytes(out_spatial, kernel, stride, block_ci, block_co,
     ph_elems = dtile * math.prod(-(-i // s)
                                  for i, s in zip(in_trail, stride[1:]))
     return (in_elems * block_ci * in_dtype_bytes                # input slab
-            + k_elems * block_ci * block_co * in_dtype_bytes    # weights
-            + out_elems * block_co * in_dtype_bytes             # output slab
+            + k_elems * block_ci * block_co * w_dtype_bytes     # weights
+            + out_elems * block_co * out_dtype_bytes            # output slab
             + (dtile + 2 * halo) * trail_elems * block_co * 4   # acc + halo
             + ph_elems * taps_max * block_co * 4)               # batched out

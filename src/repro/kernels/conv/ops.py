@@ -28,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine as _engine
 from repro.core.engine import conv_output_shape
@@ -69,7 +70,7 @@ def _window(arr, pads3, sizes3):
 
 def _conv_core(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
                dtile, n_dtiles, out_dtype, dilation3=None, groups=1,
-               bias=None, activation="none", alpha=0.2):
+               scale=None, bias=None, activation="none", alpha=0.2):
     """Pad channels/weights/leading dim and invoke the conv kernel ONCE.
 
     ``x3`` is the already (lo, hi)-padded canonical input.  The leading dim
@@ -92,6 +93,10 @@ def _conv_core(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
     w3t = _common.pad_group_axis(
         _common.pad_axis_to(w3t, -1, block_ci), -2, groups, block_co)
     w_taps = _common.phase_major_weights(w3t, kernel3, stride3, dilation3)
+    if scale is not None:
+        co = w3.shape[-1]
+        scale = _common.pad_group_axis(
+            jnp.broadcast_to(scale, (co,)).reshape(-1), 0, groups, block_co)
     if bias is not None:
         bias = _common.pad_group_axis(bias.reshape(-1), 0, groups, block_co)
     d_pad = n_dtiles * dtile * stride3[0]
@@ -106,12 +111,12 @@ def _conv_core(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
         block_ci=min(block_ci, x3.shape[-1]),
         block_co=min(block_co, w_taps.shape[1]),
         dtile=dtile, dilation=dilation3, groups=groups,
-        bias=bias, activation=activation, alpha=alpha,
+        scale=scale, bias=bias, activation=activation, alpha=alpha,
         interpret=interpret, out_dtype=out_dtype)
 
 
-def _conv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
-                   alpha, engine):
+def _conv_fwd_impl(x, w, b, w_scale, stride, padding, dilation, groups,
+                   activation, alpha, engine):
     cfg = engine.config
     interpret = (cfg.interpret if cfg.interpret is not None
                  else _default_interpret())
@@ -129,31 +134,38 @@ def _conv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
                              dilation=dilation3)
 
     plan = engine.plan("conv", x3.shape[1:4], kernel3, stride3,
-                       x3.shape[-1], co, groups=groups, dilation=dilation3)
-    out_dtype = (cfg.preferred_element_type
-                 if cfg.preferred_element_type is not None else x.dtype)
+                       x3.shape[-1], co, groups=groups, dilation=dilation3,
+                       in_dtype_bytes=_common.operand_plan_bytes(x3.dtype),
+                       w_dtype_bytes=_common.operand_plan_bytes(w3.dtype))
+    if cfg.preferred_element_type is not None:
+        out_dtype = cfg.preferred_element_type
+    elif jnp.issubdtype(x.dtype, jnp.inexact):
+        out_dtype = x.dtype
+    else:
+        out_dtype = jnp.float32         # quantized inputs store float
     y3 = _conv_core(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
                     interpret, plan.dtile, plan.n_dtiles, out_dtype,
                     dilation3=dilation3, groups=groups,
-                    bias=b, activation=activation, alpha=alpha)
+                    scale=w_scale, bias=b,
+                    activation=activation, alpha=alpha)
     y3 = _common.crop_group_axis(y3[:, :out3[0]], -1, groups, co // groups)
     return jnp.squeeze(y3, axis=squeeze) if squeeze else y3
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _conv(x, w, b, stride, padding, dilation, groups, activation, alpha,
-          engine):
-    return _conv_fwd_impl(x, w, b, stride, padding, dilation, groups,
-                          activation, alpha, engine)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _conv(x, w, b, w_scale, stride, padding, dilation, groups, activation,
+          alpha, engine):
+    return _conv_fwd_impl(x, w, b, w_scale, stride, padding, dilation,
+                          groups, activation, alpha, engine)
 
 
-def _fwd(x, w, b, stride, padding, dilation, groups, activation, alpha,
-         engine):
-    y = _conv(x, w, b, stride, padding, dilation, groups, activation,
-              alpha, engine)
+def _fwd(x, w, b, w_scale, stride, padding, dilation, groups, activation,
+         alpha, engine):
+    y = _conv(x, w, b, w_scale, stride, padding, dilation, groups,
+              activation, alpha, engine)
     # activation gradients are recoverable from the OUTPUT, so y is the
     # only extra residual — and only when an activation is actually fused
-    return y, (x, w, b, y if activation != "none" else None)
+    return y, (x, w, b, w_scale, y if activation != "none" else None)
 
 
 def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
@@ -170,8 +182,20 @@ def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
     from the saved output, bias cotangent by reduction); grouped layers
     reshuffle the weight layout so each adjoint contracts only within its
     own group slab.
+
+    Quantized-weight forwards stay f32-exact here: the backward runs on
+    the DEQUANTIZED weights ``w * w_scale`` (the per-cout scale commutes
+    with the adjoint contractions); int8 weights get a float0 cotangent
+    and the scale's cotangent folds the dequantized-weight gradient back
+    per channel — identical policy to the deconv op.
     """
-    x, w, b, y = res
+    x, w, b, w_scale, y = res
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        raise NotImplementedError(
+            "backward through quantized activations is not supported; "
+            "train with Precision(act_quant='none')")
+    if w_scale is not None:
+        wq, w = w, (w.astype(jnp.float32) * w_scale).astype(jnp.float32)
     cfg = engine.config
     interpret = (cfg.interpret if cfg.interpret is not None
                  else _default_interpret())
@@ -238,7 +262,22 @@ def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
                                   groups, cig)          # [prod(K), co/G, ci]
     dw3 = dw3.reshape(*kernel3, cog, groups, cig).transpose(0, 1, 2, 5, 4, 3)
     dw = dw3.reshape(w.shape)
-    return dx.astype(x.dtype), dw, db
+    if w_scale is None:
+        return dx.astype(x.dtype), dw, db, None
+    # dw above is the gradient of the DEQUANTIZED weight; chain back as in
+    # the deconv op: per-channel fold for d(scale), float0 for int8 w.
+    full = wq.astype(jnp.float32) * dw
+    if jnp.shape(w_scale) == ():
+        dscale = full.sum()
+    else:
+        dscale = full.sum(axis=tuple(range(full.ndim - 1))).reshape(
+            jnp.shape(w_scale))
+    dscale = dscale.astype(w_scale.dtype)
+    if jnp.issubdtype(wq.dtype, jnp.integer):
+        dwq = np.zeros(wq.shape, dtype=jax.dtypes.float0)
+    else:
+        dwq = (dw * w_scale).astype(wq.dtype)
+    return dx.astype(x.dtype), dwq, db, dscale
 
 
 _conv.defvjp(_fwd, _bwd)
@@ -246,6 +285,7 @@ _conv.defvjp(_fwd, _bwd)
 
 def conv(x: jax.Array, w: jax.Array, stride=1, padding=0, *,
          dilation=1, groups: int = 1, bias: jax.Array | None = None,
+         w_scale: jax.Array | None = None,
          activation: str = "none", alpha: float = 0.2,
          block_ci: int | None = None, block_co: int | None = None,
          interpret: bool | None = None,
@@ -261,6 +301,10 @@ def conv(x: jax.Array, w: jax.Array, stride=1, padding=0, *,
     ``padding`` is a scalar, per-dim scalars, or per-dim ``(lo, hi)``
     pairs.  ``bias``/``activation`` fuse the layer epilogue into the
     kernel's accumulator flush — no separate elementwise pass is traced.
+    ``w_scale`` (per-cout, shape ``(Cout,)`` or scalar) marks ``w`` as
+    scaled — typically int8 from ``repro.quant.quantize_weights`` — and
+    fuses the dequant multiply into that same epilogue, scale → bias →
+    activation, on the f32 accumulator.
 
     The tuning keywords are compatibility sugar: they resolve to a memoized
     ``repro.core.engine.default_engine`` whose ``EngineConfig`` carries
@@ -284,7 +328,7 @@ def conv(x: jax.Array, w: jax.Array, stride=1, padding=0, *,
     if x.shape[-1] % groups or w.shape[-1] % groups:
         raise ValueError(f"groups={groups} must divide Cin={x.shape[-1]} "
                          f"and Cout={w.shape[-1]}")
-    return _conv(x, w, bias, _canon(stride, rank),
+    return _conv(x, w, bias, w_scale, _canon(stride, rank),
                  canon_padding(padding, rank),
                  _common.canon_dilation(dilation, rank), groups,
                  activation, float(alpha), engine)

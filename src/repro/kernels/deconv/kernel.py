@@ -75,11 +75,13 @@ from repro.kernels.common import (  # noqa: F401
 
 def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
                         out_trailing, n_ci_blocks, out_dtype,
-                        has_bias=False, activation="none", alpha=0.2):
+                        has_scale=False, has_bias=False,
+                        activation="none", alpha=0.2):
     """One grid step: accumulate a (batch, co-block, d-tile, ci-block) part.
 
     x_ref:   [1, dtile, H, W, bci]
     w_ref:   [prod(K), bci, bco]                  (phase-major tap order)
+    s_ref:   [1, bco]                             (only when ``has_scale``)
     b_ref:   [1, bco]                             (only when ``has_bias``)
     o_ref:   [1, dtile*S_d, OH, OW, bco]          (this tile's output slab)
     acc_ref: VMEM f32 [n_phases, dtile + M_d - 1, L_h, L_w, bco]
@@ -90,13 +92,22 @@ def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
     zeros — their accumulator rows stay zero-initialised and interleave as
     genuine zero output rows.  The fused epilogue runs at ``_flush`` on the
     completed f32 accumulation (after the FIFO-D carry-in).
+
+    Quantized operands (int8 x and/or w) ride the SAME matmuls: they are
+    cast to f32 in-register right before the dot (|q| <= 127, so the cast
+    is exact) and the per-cout dequant scale ``s_ref`` multiplies the
+    completed accumulator first thing in the fused epilogue — the scale
+    commutes with the ci/tap contraction, so fusing it there is exact.
     """
-    if has_bias:
-        x_ref, w_ref, b_ref, o_ref, acc_ref, *rest = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref, *rest = refs
-        b_ref = None
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scale else None
+    b_ref = next(it) if has_bias else None
+    o_ref, acc_ref = next(it), next(it)
+    rest = list(it)
     halo_ref = rest[0] if rest else None
+    quantized = (jnp.issubdtype(x_ref.dtype, jnp.integer)
+                 or jnp.issubdtype(w_ref.dtype, jnp.integer))
     dt = pl.program_id(2)
     ci = pl.program_id(3)
     m_max = _phase_geometry(kernel, stride, dilation)
@@ -108,6 +119,8 @@ def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0]                                    # [dtile, H, W, bci]
+    if quantized:
+        x = x.astype(jnp.float32)
     dhw = math.prod(tile_spatial)
     bci = x.shape[-1]
     x_flat = x.reshape(dhw, bci)
@@ -121,6 +134,8 @@ def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
         # grid step instead of K^d).  The column groups are then distributed
         # into the shifted overlap-add slices (VPU adds, no MXU traffic).
         w_taps = w_ref[off:off + len(taps)]         # [n_taps, bci, bco]
+        if quantized:
+            w_taps = w_taps.astype(jnp.float32)
         off += len(taps)
         contribs = jax.lax.dot_general(
             x_flat, w_taps, (((1,), (1,)), ((), ())),
@@ -157,7 +172,8 @@ def _deconv_kernel_body(*refs, tile_spatial, kernel, stride, dilation,
         full = acc.reshape(dtile * s_d, lh * s_h, lw * s_w, bco)
         y = apply_epilogue(full[:, :out_trailing[0], :out_trailing[1]],
                            b_ref[0] if b_ref is not None else None,
-                           activation, alpha)
+                           activation, alpha,
+                           scale=s_ref[0] if s_ref is not None else None)
         o_ref[0] = y.astype(out_dtype)
 
 
@@ -167,6 +183,7 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      dtile: int | None = None,
                      dilation: Sequence[int] | None = None,
                      groups: int = 1,
+                     scale: jax.Array | None = None,
                      bias: jax.Array | None = None,
                      activation: str = "none", alpha: float = 0.2,
                      interpret: bool = True,
@@ -192,7 +209,10 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
     stride = tuple(stride)
     dilation = tuple(dilation) if dilation is not None else (1,) * len(kernel)
     k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
-    out_dtype = out_dtype or x.dtype
+    if out_dtype is None:
+        # quantized inputs never store quantized: default to the f32 acc
+        out_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.inexact) \
+            else jnp.float32
     if dtile is None:
         dtile = d_pad
     assert d_pad % dtile == 0, (d_pad, dtile)
@@ -218,8 +238,8 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
         _deconv_kernel_body,
         tile_spatial=tile_spatial, kernel=kernel, stride=stride,
         dilation=dilation, out_trailing=out_trailing, n_ci_blocks=n_ci,
-        out_dtype=out_dtype, has_bias=bias is not None,
-        activation=activation, alpha=alpha)
+        out_dtype=out_dtype, has_scale=scale is not None,
+        has_bias=bias is not None, activation=activation, alpha=alpha)
 
     scratch = [pltpu.VMEM((n_phases, *lengths, block_co), jnp.float32)]
     if halo:
@@ -234,6 +254,10 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
                      lambda b, oc, dt, ic: (0, ic, oc)),
     ]
     operands = [x, w_taps]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, block_co),
+                                     lambda b, oc, dt, ic: (0, oc)))
+        operands.append(scale.reshape(1, co).astype(jnp.float32))
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, block_co),
                                      lambda b, oc, dt, ic: (0, oc)))
@@ -258,14 +282,20 @@ def deconv_pallas_3d(x: jax.Array, w_taps: jax.Array, *,
 
 def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
                in_dtype_bytes: int = 2, dtile: int | None = None,
-               dilation=None) -> int:
+               dilation=None, w_dtype_bytes: int | None = None,
+               out_dtype_bytes: int | None = None) -> int:
     """Static VMEM footprint of one grid step (for the tiling planner).
 
     ``dtile=None`` is the classic whole-leading-dim accounting; with
     ``dtile`` set it accounts the tiled grid's per-step input/output blocks
     plus the f32 halo-carry scratch.  Dilation widens the accumulator and
-    output footprints by the effective kernel extent.
+    output footprints by the effective kernel extent.  ``w_dtype_bytes`` /
+    ``out_dtype_bytes`` default to ``in_dtype_bytes`` (the historical
+    single-width model); quantized plans pass 1 for int8 operands.
     """
+    w_dtype_bytes = in_dtype_bytes if w_dtype_bytes is None else w_dtype_bytes
+    out_dtype_bytes = in_dtype_bytes if out_dtype_bytes is None \
+        else out_dtype_bytes
     dilation = tuple(dilation) if dilation is not None \
         else (1,) * len(kernel)
     k_eff = tuple((k - 1) * d + 1 for k, d in zip(kernel, dilation))
@@ -287,8 +317,8 @@ def vmem_bytes(in_spatial, kernel, stride, block_ci, block_co,
         halo_elems = (math.prod(stride) * (m_max[0] - 1)
                       * math.prod(lengths[1:]))
     return (in_elems * block_ci * in_dtype_bytes
-            + math.prod(kernel) * block_ci * block_co * in_dtype_bytes
-            + math.prod(out_spatial) * block_co * in_dtype_bytes
+            + math.prod(kernel) * block_ci * block_co * w_dtype_bytes
+            + math.prod(out_spatial) * block_co * out_dtype_bytes
             + (math.prod(stride) * math.prod(lengths) + halo_elems)
             * block_co * 4
             # tap-batched matmul output of the widest phase (f32, pre-split)

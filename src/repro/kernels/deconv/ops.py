@@ -29,6 +29,7 @@ import itertools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine as _engine
 from repro.core.functional import _canon, canon_padding, deconv_output_shape
@@ -54,15 +55,16 @@ def _phase_major(w3, kernel3, stride3, dilation3=None):
 def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
                dtile=None, n_dtiles=1, out_dtype=None,
                dilation3=None, groups=1,
-               bias=None, activation="none", alpha=0.2):
+               scale=None, bias=None, activation="none", alpha=0.2):
     """Pad channels/weights/leading dim and invoke the fused kernel ONCE.
 
     The leading dim is zero-padded to ``n_dtiles * dtile`` — always at least
     ``M_d - 1`` rows beyond the data, which the kernel's halo contract
     requires.  Output is cropped back to Eq. (1) extent.  ``w3`` is
     ``[*K, Ci/G, Co]``: the contracted dim is already per-group, the
-    produced dim (and x's channels, and the bias) pad PER GROUP so the
-    kernel's group-blocked channel grid stays aligned.
+    produced dim (and x's channels, the per-cout dequant ``scale``, and the
+    bias) pad PER GROUP so the kernel's group-blocked channel grid stays
+    aligned.
     """
     ci, co = x3.shape[-1], w3.shape[-1]
     cog = co // groups
@@ -74,6 +76,9 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
                                 groups, block_co)
     m_max = _common.phase_geometry(kernel3, stride3, dilation3)
     w3 = _phase_major(w3, kernel3, stride3, dilation3)
+    if scale is not None:
+        scale = _common.pad_group_axis(
+            jnp.broadcast_to(scale, (co,)).reshape(-1), 0, groups, block_co)
     if bias is not None:
         bias = _common.pad_group_axis(bias.reshape(-1), 0, groups, block_co)
     if dtile is None:
@@ -87,7 +92,8 @@ def _core_call(x3, w3, stride3, kernel3, block_ci, block_co, interpret,
                             block_ci=min(block_ci, x3.shape[-1]),
                             block_co=min(block_co, w3.shape[-1]),
                             dtile=dtile, dilation=dilation3, groups=groups,
-                            bias=bias, activation=activation, alpha=alpha,
+                            scale=scale, bias=bias,
+                            activation=activation, alpha=alpha,
                             interpret=interpret,
                             out_dtype=out_dtype)
     return _common.crop_group_axis(y[:, :out3[0]], -1, groups, cog)
@@ -100,8 +106,8 @@ def _resolve(engine):
     return cfg, interpret
 
 
-def _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
-                     alpha, engine):
+def _deconv_fwd_impl(x, w, b, w_scale, stride, padding, dilation, groups,
+                     activation, alpha, engine):
     cfg, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
@@ -114,12 +120,15 @@ def _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
 
     plan = engine.plan("deconv", in_sp3, kernel3, stride3,
                        x3.shape[-1], w3.shape[-1], groups=groups,
-                       dilation=dilation3)
+                       dilation=dilation3,
+                       in_dtype_bytes=_common.operand_plan_bytes(x3.dtype),
+                       w_dtype_bytes=_common.operand_plan_bytes(w3.dtype))
     y3 = _core_call(x3, w3, stride3, kernel3, plan.block_ci, plan.block_co,
                     interpret, dtile=plan.dtile, n_dtiles=plan.n_dtiles,
                     out_dtype=cfg.preferred_element_type,
                     dilation3=dilation3, groups=groups,
-                    bias=b, activation=activation, alpha=alpha)
+                    scale=w_scale, bias=b,
+                    activation=activation, alpha=alpha)
 
     # un-lift and crop ((lo, hi) per dim — asymmetric crops supported);
     # the fused epilogue commutes with the border crop (elementwise)
@@ -133,21 +142,21 @@ def _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups, activation,
     return y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _deconv(x, w, b, stride, padding, dilation, groups, activation, alpha,
-            engine):
-    return _deconv_fwd_impl(x, w, b, stride, padding, dilation, groups,
-                            activation, alpha, engine)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _deconv(x, w, b, w_scale, stride, padding, dilation, groups, activation,
+            alpha, engine):
+    return _deconv_fwd_impl(x, w, b, w_scale, stride, padding, dilation,
+                            groups, activation, alpha, engine)
 
 
-def _fwd(x, w, b, stride, padding, dilation, groups, activation, alpha,
-         engine):
-    y = _deconv(x, w, b, stride, padding, dilation, groups, activation,
-                alpha, engine)
+def _fwd(x, w, b, w_scale, stride, padding, dilation, groups, activation,
+         alpha, engine):
+    y = _deconv(x, w, b, w_scale, stride, padding, dilation, groups,
+                activation, alpha, engine)
     # the activation gradient is recoverable from the OUTPUT for every
     # supported activation, so y is the only extra residual — and only
     # when an activation is actually fused
-    return y, (x, w, b, y if activation != "none" else None)
+    return y, (x, w, b, w_scale, y if activation != "none" else None)
 
 
 def _bwd_einsum(stride, padding, res, dy):
@@ -201,8 +210,21 @@ def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
     1-y^2), and the bias cotangent is the pre-activation cotangent summed
     over every non-channel axis.  Grouped layers reshuffle the weight
     layout so each adjoint contracts only within its own group slab.
+
+    Quantized-weight forwards stay f32-exact here: the backward runs on
+    the DEQUANTIZED weights ``w * w_scale`` (the per-cout scale commutes
+    with the adjoint contractions), so dx/db match the float op applied to
+    the dequantized weights bit-for-bit.  The int8 weights themselves get
+    a float0 cotangent; the scale's cotangent folds the dequantized-weight
+    gradient back per channel.
     """
-    x, w, b, y = res
+    x, w, b, w_scale, y = res
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        raise NotImplementedError(
+            "backward through quantized activations is not supported; "
+            "train with Precision(act_quant='none')")
+    if w_scale is not None:
+        wq, w = w, (w.astype(jnp.float32) * w_scale).astype(jnp.float32)
     _, interpret = _resolve(engine)
     rank = x.ndim - 2
     stride_r = _canon(stride, rank)
@@ -267,7 +289,24 @@ def _bwd(stride, padding, dilation, groups, activation, alpha, engine,
                                                       dilation3))]
 
     dx = jnp.squeeze(dx3, axis=squeeze) if squeeze else dx3
-    return dx, dw3.reshape(w.shape), db
+    dw = dw3.reshape(w.shape)
+    if w_scale is None:
+        return dx, dw, db, None
+    # dw above is the gradient of the DEQUANTIZED weight.  Chain back:
+    # d(scale) folds it against the stored quantized values per channel,
+    # and integer weights take the required float0 cotangent.
+    full = wq.astype(jnp.float32) * dw
+    if jnp.shape(w_scale) == ():
+        dscale = full.sum()
+    else:
+        dscale = full.sum(axis=tuple(range(full.ndim - 1))).reshape(
+            jnp.shape(w_scale))
+    dscale = dscale.astype(w_scale.dtype)
+    if jnp.issubdtype(wq.dtype, jnp.integer):
+        dwq = np.zeros(wq.shape, dtype=jax.dtypes.float0)
+    else:
+        dwq = (dw * w_scale).astype(wq.dtype)
+    return dx, dwq, db, dscale
 
 
 _deconv.defvjp(_fwd, _bwd)
@@ -275,6 +314,7 @@ _deconv.defvjp(_fwd, _bwd)
 
 def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
            dilation=1, groups: int = 1, bias: jax.Array | None = None,
+           w_scale: jax.Array | None = None,
            activation: str = "none", alpha: float = 0.2,
            block_ci: int | None = None, block_co: int | None = None,
            interpret: bool | None = None,
@@ -291,6 +331,10 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
     (``feature_group_count``; ``groups == Cin`` is depthwise) and
     ``bias``/``activation`` fuse the layer epilogue into the kernel's
     accumulator flush — no separate elementwise pass is traced.
+    ``w_scale`` (per-cout, shape ``(Cout,)`` or scalar) marks ``w`` as
+    scaled — typically int8 from ``repro.quant.quantize_weights`` — and
+    fuses the dequant multiply into that same epilogue, scale → bias →
+    activation, on the f32 accumulator.
 
     The tuning keywords are compatibility sugar: they resolve to a memoized
     ``repro.core.engine.default_engine`` whose ``EngineConfig`` carries
@@ -314,7 +358,7 @@ def deconv(x: jax.Array, w: jax.Array, stride, padding=0, *,
     if x.shape[-1] % groups or w.shape[-1] % groups:
         raise ValueError(f"groups={groups} must divide Cin={x.shape[-1]} "
                          f"and Cout={w.shape[-1]}")
-    return _deconv(x, w, bias, _canon(stride, rank),
+    return _deconv(x, w, bias, w_scale, _canon(stride, rank),
                    canon_padding(padding, rank),
                    _common.canon_dilation(dilation, rank), groups,
                    activation, float(alpha), engine)

@@ -102,8 +102,10 @@ def generator_forward(params, cfg: ModelConfig, z, engine=None):
     sp0 = "model" if cfg.dcnn_spatial_shard else None
     h = constrain(h, "batch", sp0, *([None] * first.rank))
     apply, _ = compile_network(graph, engine, batch=h.shape[0])
-    ws = {l.name: {"w": p["w"], "b": p["b"]}
-          for l, p in zip(glayers, params["deconvs"])}
+    # pass entries through verbatim: float {"w", "b"} and quantized
+    # {"w_q", "scale", "b"} (repro.quant.quantize_weights output) both
+    # land in the engine's _layer_wb unchanged
+    ws = {l.name: dict(p) for l, p in zip(glayers, params["deconvs"])}
     return apply(ws, h)
 
 
@@ -194,7 +196,11 @@ def _vnet_graph_cached(in_spatial, chans, cin) -> networks.UniformGraph:
 
 def _vnet_weights(params, graph: networks.UniformGraph):
     """Map the historical ``{"enc", "dec", "head"}`` pytree onto the
-    graph's name-keyed weight dict."""
+    graph's name-keyed weight dict.
+
+    Entries pass through verbatim, so a pytree whose weight leaves were
+    replaced by quantized ``{"w_q", "scale"}`` dicts
+    (``repro.quant.quantize_tensor``) compiles unchanged."""
     ws = {}
     for i, c in enumerate(params["enc"]):
         ws[f"vnet.enc{i + 1}"] = c["w"]

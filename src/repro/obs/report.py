@@ -326,11 +326,11 @@ def measure_network(network, engine=None, ws=None, x=None, *, batch: int = 1,
                     vals[node] = fn(*ins)
                     measured.append((node, nd.kind, 0, dt))
                 else:
-                    w, b = _engine._layer_wb(ws[node], nd)
+                    w, b, s = _engine._layer_wb(ws[node], nd)
                     h = ins[0]
                     fn = jax.jit(functools.partial(_run_layer, eng, nd))
-                    dt = _time_blocked(fn, w, b, h, repeats=repeats)
-                    vals[node] = fn(w, b, h)
+                    dt = _time_blocked(fn, w, b, h, s, repeats=repeats)
+                    vals[node] = fn(w, b, h, s)
                     measured.append((node, nd.op, batch * nd.valid_macs, dt))
         else:
             h = x
@@ -379,6 +379,7 @@ def measure_network(network, engine=None, ws=None, x=None, *, batch: int = 1,
     return out
 
 
-def _run_layer(eng, layer, w, b, h):
-    return eng(layer, h, w.astype(h.dtype),
-               None if b is None else b.astype(h.dtype))
+def _run_layer(eng, layer, w, b, h, s=None):
+    wv = w if jnp.issubdtype(w.dtype, jnp.integer) else w.astype(h.dtype)
+    return eng(layer, h, wv,
+               None if b is None else b.astype(h.dtype), w_scale=s)

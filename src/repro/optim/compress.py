@@ -16,15 +16,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x: jax.Array):
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array):
-    return q.astype(jnp.float32) * scale
+# THE int8 round/clip/scale codepath lives in repro.quant.qint8 (the
+# engine's weight quantization uses the same numerics); these re-exports
+# keep every historical ``optim.compress.quantize_int8`` caller —
+# dp_trainer above all — bit-identical.
+from repro.quant.qint8 import dequantize_int8, quantize_int8  # noqa: F401
 
 
 def psum_int8(x: jax.Array, axis_name: str):

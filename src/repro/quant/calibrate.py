@@ -1,0 +1,106 @@
+"""Calibration: pick per-channel scales, quantize weight pytrees.
+
+Two observers produce per-channel scales over the engine's weight layout
+``(*kernel, cin, cout)`` (channel axis ``-1`` = per-cout, the only axis
+whose dequant scale commutes with the ci/tap contraction):
+
+* :func:`absmax_observer` — exact symmetric absmax per channel.
+* :func:`percentile_observer` — clipped symmetric scale at the p-th
+  percentile of |w| per channel, computed host-side through the repo's
+  ONE percentile implementation (``repro.obs.quantile``).  Robust to the
+  single-outlier weight that would otherwise blow up the absmax step.
+
+:func:`quantize_weights` walks the weight pytrees ``compile_network``
+already accepts (name-keyed graph dicts, chain lists, with or without
+``{"w", "b"}`` wrapping) and replaces each float weight with a
+``{"w_q": int8, "scale": f32[cout]}`` entry the engine consumes directly.
+Biases ride along unquantized — they are added on the f32 accumulator in
+the fused epilogue.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.obs import quantile as _quantile
+from repro.quant import qint8 as _q8
+from repro.quant.precision import Precision
+
+Observer = Callable[[Any], Any]
+
+
+def absmax_observer(w, axis: int = -1):
+    """Per-channel symmetric absmax scales — shape ``(w.shape[axis],)``."""
+    return _q8.absmax_scale(w, axis=axis)
+
+
+def percentile_observer(w, pct: float = 99.9, axis: int = -1):
+    """Per-channel scales clipped at the ``pct``-th percentile of |w|.
+
+    Runs host-side (calibration is offline) through ``obs.quantile`` —
+    the one percentile implementation in the repo.
+    """
+    aw = np.abs(np.asarray(w, dtype=np.float32))
+    aw = np.moveaxis(aw, axis % aw.ndim, -1).reshape(-1, aw.shape[axis])
+    scales = [
+        max(_quantile(sorted(aw[:, c].tolist()), pct), float(_q8.SCALE_FLOOR))
+        / _q8.QMAX
+        for c in range(aw.shape[1])
+    ]
+    return jnp.asarray(scales, dtype=jnp.float32)
+
+
+_OBSERVERS: dict[str, Observer] = {
+    "absmax": absmax_observer,
+    "percentile": percentile_observer,
+}
+
+
+def quantize_tensor(w, *, axis: int = -1, observer: str | Observer = "absmax"):
+    """Quantize one weight tensor → ``{"w_q": int8, "scale": f32}``."""
+    if callable(observer):
+        obs_fn = observer
+    else:
+        try:
+            obs_fn = _OBSERVERS[observer]
+        except KeyError:
+            raise ValueError(
+                f"unknown observer {observer!r}; choose from "
+                f"{tuple(_OBSERVERS)}") from None
+    scale = obs_fn(w, axis=axis)
+    return {"w_q": _q8.quantize_q8(w, scale), "scale": scale}
+
+
+def _quantize_entry(entry, axis, observer):
+    if isinstance(entry, Mapping):
+        if "w_q" in entry:
+            return dict(entry)  # already quantized
+        out = quantize_tensor(entry["w"], axis=axis, observer=observer)
+        if entry.get("b") is not None:
+            out["b"] = entry["b"]
+        return out
+    return quantize_tensor(entry, axis=axis, observer=observer)
+
+
+def quantize_weights(params, precision: Precision, *,
+                     observer: str | Observer = "absmax"):
+    """Quantize a ``compile_network`` weight pytree under ``precision``.
+
+    Accepts the same structures ``compile_network`` does — a name-keyed
+    graph dict (values either a raw weight or ``{"w", "b"}``) or a chain
+    sequence — and returns the same structure with every float weight
+    replaced by a ``{"w_q", "scale"}`` entry (bias preserved).  A policy
+    without weight quantization returns ``params`` unchanged.
+    """
+    if precision.weight_quant == "none":
+        return params
+    axis = precision.channel_axis
+    if isinstance(params, Mapping):
+        return {name: _quantize_entry(entry, axis, observer)
+                for name, entry in params.items()}
+    if isinstance(params, Sequence):
+        return [_quantize_entry(entry, axis, observer) for entry in params]
+    return _quantize_entry(params, axis, observer)

@@ -1,0 +1,121 @@
+"""The ONE precision policy for the uniform engine.
+
+The paper's 3.0 TOPS headline (and the fpgaHART-style methodology work it
+cites) comes from fixed-point arithmetic; this module is the repo's policy
+surface for that operating point.  A frozen :class:`Precision` bundles every
+dtype decision the engine used to scatter across ``preferred_element_type``
+kwargs:
+
+* ``storage``   — dtype activations are stored in between layers (what the
+  old ``preferred_element_type`` knob controlled; ``None`` keeps f32).
+* ``compute``   — dtype operands are cast to before hitting the MXU
+  (``None`` = leave operands as they arrive).
+* ``accumulate``— MXU accumulator dtype.  The Pallas bodies accumulate in
+  f32 scratch, so only ``float32`` is accepted today.
+* ``weight_quant`` / ``act_quant`` — ``"none"`` or ``"int8"``.  int8 weights
+  flow through the phase-major tap-batched matmuls unchanged (dispatch
+  counts identical) with per-channel dequant scales applied inside the
+  fused epilogue, pre-store-cast.
+* ``channel_axis`` — which weight axis scales are computed per-channel
+  over.  The engine's weight layout is ``(*kernel, cin, cout)``, so the
+  default ``-1`` means per-cout — the only axis whose scale commutes with
+  the ci/tap contraction and can therefore be fused into the epilogue.
+
+Unknown combinations raise at *config* time (here), never at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+QUANT_MODES = ("none", "int8")
+
+# Nominal planner width (bytes) of an unquantized operand.  The tile
+# planner has always modeled operands at bf16 width (in_dtype_bytes=2);
+# keeping the same nominal width here means every existing f32/bf16 plan —
+# and every persisted TunedPlanCache entry — is byte-for-byte unchanged.
+NOMINAL_OPERAND_BYTES = 2
+INT8_OPERAND_BYTES = 1
+
+
+def _canon_dtype(value: Any):
+    """``None`` passes through; anything else must be a valid dtype."""
+    if value is None:
+        return None
+    return jnp.dtype(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Frozen, hashable precision policy — see module docstring."""
+
+    compute: Any = None
+    accumulate: Any = jnp.float32
+    storage: Any = None
+    weight_quant: str = "none"
+    act_quant: str = "none"
+    channel_axis: int = -1
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "compute", _canon_dtype(self.compute))
+        object.__setattr__(self, "accumulate", _canon_dtype(self.accumulate))
+        object.__setattr__(self, "storage", _canon_dtype(self.storage))
+        if self.accumulate != jnp.dtype(jnp.float32):
+            raise ValueError(
+                "Precision.accumulate must be float32: the Pallas bodies "
+                f"accumulate in f32 VMEM scratch (got {self.accumulate})")
+        for field in ("weight_quant", "act_quant"):
+            mode = getattr(self, field)
+            if mode not in QUANT_MODES:
+                raise ValueError(
+                    f"Precision.{field}={mode!r} not supported; "
+                    f"choose from {QUANT_MODES}")
+        if self.act_quant == "int8" and self.weight_quant != "int8":
+            raise ValueError(
+                "Precision(act_quant='int8') requires weight_quant='int8': "
+                "activation scales are folded into the per-channel weight "
+                "scales inside the fused epilogue")
+        for name in ("compute", "storage"):
+            dt = getattr(self, name)
+            if dt is not None and not (
+                    jnp.issubdtype(dt, jnp.floating)
+                    or jnp.issubdtype(dt, jnp.integer)):
+                raise ValueError(f"Precision.{name}={dt} is not a numeric "
+                                 "dtype")
+        if self.channel_axis != -1:
+            raise ValueError(
+                "Precision.channel_axis must be -1 (per-cout): only the "
+                "output-channel scale commutes with the ci/tap contraction "
+                "and can be fused into the epilogue")
+
+    # ---- planner widths -------------------------------------------------
+    @property
+    def weight_bytes(self) -> int:
+        """Planner width of a weight element under this policy."""
+        if self.weight_quant == "int8":
+            return INT8_OPERAND_BYTES
+        return NOMINAL_OPERAND_BYTES
+
+    @property
+    def act_bytes(self) -> int:
+        """Planner width of an activation element under this policy."""
+        if self.act_quant == "int8":
+            return INT8_OPERAND_BYTES
+        return NOMINAL_OPERAND_BYTES
+
+    @property
+    def quantized(self) -> bool:
+        return self.weight_quant != "none" or self.act_quant != "none"
+
+    def describe(self) -> str:
+        bits = []
+        if self.weight_quant != "none":
+            bits.append(f"w:{self.weight_quant}")
+        if self.act_quant != "none":
+            bits.append(f"a:{self.act_quant}")
+        if self.storage is not None:
+            bits.append(f"s:{jnp.dtype(self.storage).name}")
+        return "+".join(bits) if bits else "f32"

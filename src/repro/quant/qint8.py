@@ -1,0 +1,58 @@
+"""The ONE int8 round/clip/scale codepath.
+
+Everything in the repo that quantizes to int8 — the engine's weight
+quantization, the calibration observers, and ``optim/compress.py``'s
+gradient all-reduce compression — goes through these helpers, so the
+numerics are defined exactly once.
+
+The scheme is symmetric absmax int8: ``scale = absmax / 127`` and
+``q = clip(round(x / scale), -127, 127)``.  ``dequantize_int8`` is the
+inverse up to rounding: ``q * scale``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# quantized values live in [-127, 127]; -128 is never produced so the
+# range is symmetric and negation is exact
+QMAX = 127.0
+# scales are floored here so an all-zero tensor quantizes to zeros
+# instead of dividing by zero
+SCALE_FLOOR = 1e-12
+
+
+def absmax_scale(x, axis=None):
+    """Symmetric absmax scale(s) for ``x``.
+
+    ``axis=None`` gives one per-tensor scalar scale (the historical
+    ``optim/compress.py`` behavior).  An integer axis gives per-channel
+    scales over that axis — shape ``(x.shape[axis],)``.
+    """
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        axis = axis % x.ndim
+        reduce_axes = tuple(a for a in range(x.ndim) if a != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes)
+    return (jnp.maximum(amax, SCALE_FLOOR) / QMAX).astype(jnp.float32)
+
+
+def quantize_q8(x, scale):
+    """Round/clip ``x`` to int8 under a given (broadcastable) scale."""
+    return jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+
+
+def quantize_int8(x):
+    """Per-tensor absmax int8: returns ``(q, scale)``.
+
+    Bit-identical to the historical ``optim.compress.quantize_int8`` —
+    ``optim/compress.py`` re-exports this exact function.
+    """
+    scale = absmax_scale(x)
+    return quantize_q8(x, scale), scale
+
+
+def dequantize_int8(q, scale):
+    """Inverse of :func:`quantize_q8` up to rounding: ``q * scale``."""
+    return q.astype(jnp.float32) * scale

@@ -37,7 +37,9 @@ from typing import Iterator
 
 from repro.core import tiling as _tiling
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# v1 -> v2: the plan key grew a weight-width field (int8 weights plan at
+# 1 byte); v1 files load as EMPTY caches and a re-tune rebuilds them.
 
 
 class TunedPlanSchemaError(ValueError):
@@ -46,28 +48,33 @@ class TunedPlanSchemaError(ValueError):
 
 def plan_key(mode: str, in_spatial, kernel, stride, cin: int, cout: int, *,
              groups: int = 1, dilation=None, backward: bool = False,
-             in_dtype_bytes: int = 2) -> str:
+             in_dtype_bytes: int = 2, w_dtype_bytes: int | None = None) -> str:
     """Canonical string key for one tuned geometry.
 
     Mirrors ``UniformEngine.plan``'s memo-key tuple field for field, so an
-    engine lookup and a tuner insertion agree by construction.
+    engine lookup and a tuner insertion agree by construction
+    (``w_dtype_bytes=None`` defaults to ``in_dtype_bytes``, like the
+    engine).
     """
     dilation = (tuple(dilation) if dilation is not None
                 else (1,) * len(tuple(in_spatial)))
+    w_bytes = (int(in_dtype_bytes) if w_dtype_bytes is None
+               else int(w_dtype_bytes))
     return key_from_tuple((mode, tuple(in_spatial), tuple(kernel),
                            tuple(stride), int(cin), int(cout), int(groups),
-                           dilation, bool(backward), int(in_dtype_bytes)))
+                           dilation, bool(backward), int(in_dtype_bytes),
+                           w_bytes))
 
 
 def key_from_tuple(key: tuple) -> str:
     """Stringify the engine's plan-cache key tuple (see
     ``UniformEngine.plan``): (mode, in_spatial, kernel, stride, cin, cout,
-    groups, dilation, backward, in_dtype_bytes)."""
-    mode, sp, k, s, cin, cout, g, dil, bwd, b = key
+    groups, dilation, backward, in_dtype_bytes, w_dtype_bytes)."""
+    mode, sp, k, s, cin, cout, g, dil, bwd, b, wb = key
     def _x(t):
         return "x".join(str(int(v)) for v in t)
     return (f"{mode}:sp{_x(sp)}:k{_x(k)}:s{_x(s)}:ci{cin}:co{cout}"
-            f":g{g}:d{_x(dil)}:{'bwd' if bwd else 'fwd'}:b{b}")
+            f":g{g}:d{_x(dil)}:{'bwd' if bwd else 'fwd'}:b{b}:w{wb}")
 
 
 @dataclasses.dataclass(frozen=True)

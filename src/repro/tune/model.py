@@ -46,12 +46,16 @@ class LayerGeometry:
     dilation: tuple[int, ...] = ()
     backward: bool = False
     in_dtype_bytes: int = 2
+    w_dtype_bytes: int | None = None   # None = weights as wide as acts
 
     def __post_init__(self):
         for f in ("in_spatial", "kernel", "stride"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
         dil = self.dilation or (1,) * len(self.in_spatial)
         object.__setattr__(self, "dilation", tuple(dil))
+        if self.w_dtype_bytes is None:
+            object.__setattr__(self, "w_dtype_bytes",
+                               int(self.in_dtype_bytes))
 
     @property
     def key_tuple(self) -> tuple:
@@ -60,7 +64,7 @@ class LayerGeometry:
         return (self.mode, self.in_spatial, self.kernel, self.stride,
                 int(self.cin), int(self.cout), int(self.groups),
                 self.dilation, bool(self.backward),
-                int(self.in_dtype_bytes))
+                int(self.in_dtype_bytes), int(self.w_dtype_bytes))
 
     def describe(self) -> str:
         from repro.tune.cache import key_from_tuple
@@ -118,4 +122,5 @@ def candidate_plans(geom: LayerGeometry, *,
         geom.in_spatial, geom.kernel, geom.stride, geom.cin, geom.cout,
         mode=geom.mode, vmem_budget=vmem_budget, allow_split=allow_split,
         backward=geom.backward, in_dtype_bytes=geom.in_dtype_bytes,
+        w_dtype_bytes=geom.w_dtype_bytes,
         groups=geom.groups, dilation=geom.dilation)

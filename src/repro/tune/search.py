@@ -167,8 +167,13 @@ def measure_plan(plan: _tiling.DeconvTilePlan, geom: LayerGeometry, *,
     pin = TunedPlanCache()
     fwd_key = (geom.mode, geom.in_spatial, geom.kernel, geom.stride,
                geom.cin, geom.cout, geom.groups, geom.dilation, False,
-               geom.in_dtype_bytes)
+               geom.in_dtype_bytes, geom.w_dtype_bytes)
     pin.put(fwd_key, plan, winner_source="model")
+    if (geom.in_dtype_bytes, geom.w_dtype_bytes) != (2, 2):
+        # quantized geometry: the probe layer runs f32 weights, so its
+        # schedule looks the plan up at nominal widths — pin that key too
+        # (same launch structure, the measurement we want)
+        pin.put(fwd_key[:9] + (2, 2), plan, winner_source="model")
     eng = _engine.UniformEngine(_engine.EngineConfig(
         method=method, max_tile_bytes=vmem_budget, tuned_plans=pin,
         interpret=interpret))
@@ -244,10 +249,15 @@ def tune_layer(geom: LayerGeometry, *,
                       measured=measured)
 
 
-def network_geometries(network) -> list[LayerGeometry]:
+def network_geometries(network, *, precision=None) -> list[LayerGeometry]:
     """The unique plannable geometries of a chain or ``UniformGraph`` —
     lifted to canonical 3D exactly as ``compile_network`` plans them
-    (conv geometries carry their PADDED input extent)."""
+    (conv geometries carry their PADDED input extent).
+
+    ``precision`` (a ``repro.quant.Precision``) sets the operand widths of
+    layers without their own override, so a sweep tuned for an int8-weight
+    deployment lands on the SAME plan keys the engine looks up at run time.
+    """
     from repro.core import engine as _engine
     from repro.core import networks as _networks
     from repro.kernels import common as _kcommon
@@ -260,10 +270,14 @@ def network_geometries(network) -> list[LayerGeometry]:
         sp3, k3, s3, p3 = _engine._lift_geometry(layer)
         if layer.op == "conv":
             sp3 = tuple(i + lo + hi for i, (lo, hi) in zip(sp3, p3))
+        prec = (layer.precision if layer.precision is not None
+                else precision)
         geom = LayerGeometry(
             mode=layer.op, in_spatial=sp3, kernel=k3, stride=s3,
             cin=layer.cin, cout=layer.cout, groups=layer.groups,
-            dilation=_kcommon.lift_tuple3(layer.dilation, layer.rank))
+            dilation=_kcommon.lift_tuple3(layer.dilation, layer.rank),
+            in_dtype_bytes=prec.act_bytes if prec is not None else 2,
+            w_dtype_bytes=prec.weight_bytes if prec is not None else None)
         if geom.key_tuple not in seen:
             seen.add(geom.key_tuple)
             geoms.append(geom)
